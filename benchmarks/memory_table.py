@@ -1,0 +1,65 @@
+"""Optimizer-memory table — paper Tables 1-4 (memory columns).
+
+For each model (CNN high-rank case, Transformer-base/big, and the assigned
+archs' smoke variants + analytic full variants), reports persistent
+optimizer state bytes for Adam / Adafactor / SM3 / CAME / SMMF and the
+reduction ratios the paper claims (up to ~96% vs the memory-efficient
+family, tens-of-x vs Adam).
+
+Full-size configs are measured ANALYTICALLY via jax.eval_shape over
+abstract params (no allocation), exactly matching what the optimizer would
+hold in memory.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_config, smoke_config
+from repro.core.smmf import smmf
+from repro.launch import specs as S
+from repro.models import init_cnn
+from repro.optim import adafactor, adam, came, sm3
+from repro.utils.tree import tree_bytes
+
+OPTS = {
+    "adam": lambda: adam(1e-3),
+    "adafactor": lambda: adafactor(1e-3),
+    "sm3": lambda: sm3(1e-3),
+    "came": lambda: came(1e-3),
+    "smmf": lambda: smmf(1e-3),
+}
+
+
+def _measure(params_sds) -> dict[str, int]:
+    return {name: tree_bytes(jax.eval_shape(mk().init, params_sds)) for name, mk in OPTS.items()}
+
+
+def rows():
+    out = []
+    # CNN (the paper's rank-4 momentum case)
+    cnn = jax.eval_shape(lambda: init_cnn(jax.random.PRNGKey(0), 100, width=32, depth=3))
+    out.append(("cnn_small(rank-4)", tree_bytes(cnn), _measure(cnn)))
+    for arch in PAPER_IDS + ARCH_IDS:
+        cfg = get_config(arch)
+        sds = S.params_specs(cfg)
+        out.append((arch, tree_bytes(sds), _measure(sds)))
+    return out
+
+
+def main() -> None:
+    print(f"{'model':22s} {'params':>10s} | " + " ".join(f"{n:>12s}" for n in OPTS)
+          + " |  smmf/adam  smmf/best-eff")
+    for name, pbytes, sizes in rows():
+        best_eff = min(sizes["adafactor"], sizes["sm3"], sizes["came"])
+        print(
+            f"{name:22s} {pbytes/2**20:9.1f}M | "
+            + " ".join(f"{sizes[n]/2**20:11.2f}M" for n in OPTS)
+            + f" | {sizes['smmf']/sizes['adam']:9.4f} {sizes['smmf']/best_eff:12.4f}"
+        )
+    print("\n(ratios: lower is better; paper claims up to 0.04 = 96% reduction "
+          "vs the memory-efficient family on high-rank/transformer models)")
+
+
+if __name__ == "__main__":
+    main()

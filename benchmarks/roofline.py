@@ -1,0 +1,108 @@
+"""Roofline analysis from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds
+  compute    = HLO_FLOPs_per_dev / 197 TFLOP/s (bf16 MXU)
+  memory     = HLO_bytes_per_dev / 819 GB/s (HBM)
+  collective = wire_bytes_per_dev / 50 GB/s (ICI per link)
+plus the dominant term, MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
+(prefill) / 2*N_active*B (decode), and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs * devices).
+
+All HLO quantities are loop-trip-corrected per-device numbers from
+repro.launch.hloanalysis (see EXPERIMENTS.md §Roofline for caveats about
+CPU-pipeline vs TPU-pipeline differences).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.config import SHAPES, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: top_k routed + shared experts)."""
+    total = cfg.param_count()
+    if not cfg.n_experts:
+        return total
+
+    def _ffn(f):
+        return cfg.d_model * f * (3 if cfg.gated_mlp else 2)
+
+    routed_all = cfg.n_layers * cfg.n_experts * _ffn(cfg.expert_ff)
+    routed_active = cfg.n_layers * cfg.top_k * _ffn(cfg.expert_ff)
+    return total - routed_all + routed_active
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load(tag_filter: str = "", opt: str = "smmf", variant: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "run" or "flops" not in rec:
+            continue
+        if rec.get("opt") != opt or rec.get("variant", "") != variant:
+            continue
+        if tag_filter and tag_filter not in f.name:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def terms(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec["bytes_accessed"] / HBM_BW
+    coll = rec["coll_bytes"] / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll), key=lambda kv: kv[1])
+    mf = model_flops(cfg, shape)
+    ratio = mf / max(1.0, rec["flops"] * rec["devices"])
+    bound = max(comp, mem, coll)
+    return {
+        "compute_s": comp,
+        "memory_s": mem,
+        "coll_s": coll,
+        "dominant": dom[0],
+        "model_flops": mf,
+        "useful_ratio": ratio,
+        # fraction of roofline-achievable: the compute term over the binding
+        # term (1.0 = perfectly compute-bound at peak)
+        "roofline_frac": comp / bound if bound > 0 else 0.0,
+    }
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found — run `python -m repro.launch.dryrun --all` first")
+        return
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':11s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dominant':>10s} {'mflops/hlo':>10s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for rec in rows:
+        t = terms(rec)
+        print(f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:11s} "
+              f"{t['compute_s']:9.4f} {t['memory_s']:9.4f} {t['coll_s']:9.4f} "
+              f"{t['dominant']:>10s} {t['useful_ratio']:10.3f} {100*t['roofline_frac']:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

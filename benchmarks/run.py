@@ -1,0 +1,48 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(title: str):
+    print(f"\n{'=' * 70}\n== {title}\n{'=' * 70}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the slow convergence runs")
+    args = ap.parse_args()
+
+    t0 = time.time()
+
+    _section("Optimizer memory (paper Tables 1-4, memory columns)")
+    from benchmarks import memory_table
+
+    memory_table.main()
+
+    _section("Optimizer step time (paper Table 5)")
+    from benchmarks import step_time
+
+    step_time.main()
+
+    if not args.fast:
+        _section("Convergence, 5 optimizers (paper Figures 1-2)")
+        from benchmarks import convergence
+
+        convergence.main()
+
+    _section("Roofline terms from the multi-pod dry-run (EXPERIMENTS.md §Roofline)")
+    from benchmarks import roofline
+
+    roofline.main()
+
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: train a small LM with SMMF and compare optimizer memory.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.smmf import smmf
+from repro.data import SyntheticLMStream
+from repro.launch.steps import make_train_step
+from repro.models import init_lm
+from repro.models.config import ModelConfig
+from repro.optim import adam
+from repro.utils.tree import tree_bytes
+
+
+def main():
+    cfg = ModelConfig("quickstart", "dense", n_layers=2, d_model=128, n_heads=4,
+                      n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    stream = SyntheticLMStream(cfg, global_batch=8, seq_len=64)
+
+    print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params "
+          f"({tree_bytes(params)/2**20:.1f} MiB)")
+
+    for name, opt in [("adam", adam(1e-3)), ("smmf", smmf(1e-3, decay_rate=-0.8))]:
+        p = jax.tree.map(jnp.array, params)  # fresh copy
+        state = opt.init(p)
+        step = jax.jit(make_train_step(cfg, opt))
+        losses = []
+        for t in range(60):
+            p, state, m = step(p, state, jax.tree.map(jnp.asarray, stream.batch(t)))
+            losses.append(float(m["loss"]))
+        print(f"{name:5s}: optimizer state {tree_bytes(state)/2**20:6.2f} MiB | "
+              f"loss {losses[0]:.3f} -> {sum(losses[-5:])/5:.3f}")
+
+    print("\nSMMF trains to the same loss with a fraction of the optimizer memory.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Serving example: batched generation with the slot-based engine.
+
+Eight requests, four decode slots — finished sequences free their slot and
+queued requests prefill into it (continuous batching at decode-step
+granularity).
+
+    PYTHONPATH=src python examples/serve.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import init_lm
+from repro.models.config import ModelConfig
+from repro.serving import GenerationEngine
+from repro.serving.engine import Request
+
+
+def main():
+    cfg = ModelConfig("serve-demo", "dense", n_layers=2, d_model=128, n_heads=4,
+                      n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(params, cfg, slots=4, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 512, size=8 + i).astype(np.int32),
+                    max_new=16) for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+
+    t0 = time.time()
+    steps = 0
+    while eng.step():
+        steps += 1
+    dt = time.time() - t0
+    tokens = sum(len(r.out) for r in reqs)
+    print(f"served {len(reqs)} requests / {tokens} tokens in {steps} decode steps "
+          f"({dt:.2f}s, {tokens/dt:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt {r.prompt[:6].tolist()}... -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""repro: production-grade JAX reproduction of SMMF (AAAI 2025).
+
+Public API re-exports are lazy (PEP 562) so that `python -m
+repro.launch.dryrun` can set XLA_FLAGS before anything imports jax.
+"""
+
+__version__ = "1.0.0"
+
+_EXPORTS = {
+    "smmf": "repro.core.smmf",
+    "smmf_local": "repro.core.smmf",
+    "adam": "repro.optim",
+    "adamw": "repro.optim",
+    "adafactor": "repro.optim",
+    "came": "repro.optim",
+    "sgd": "repro.optim",
+    "sm3": "repro.optim",
+    "GradientTransformation": "repro.optim.base",
+    "apply_updates": "repro.optim.base",
+}
+
+__all__ = list(_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

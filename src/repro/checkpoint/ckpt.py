@@ -1,0 +1,117 @@
+"""Preemption-safe, mesh-agnostic checkpointing.
+
+* **Atomic**: writes into ``<dir>/tmp.<step>/`` then ``os.rename`` to
+  ``step_<n>/`` — a killed process never leaves a half-checkpoint that
+  restore would pick up.
+* **Mesh-agnostic / elastic**: leaves are saved as host numpy arrays keyed
+  by pytree path; restore re-shards onto *any* mesh via ``jax.device_put``
+  with freshly computed shardings, so a job checkpointed on 256 chips can
+  resume on 512 (or 1 CPU in tests).
+* **Manifest**: step, wall-time, config name, leaf index with shapes/dtypes
+  — restart never needs the writer's mesh.
+
+SMMF's payoff at this layer: the optimizer state is O(sqrt(N)) per tensor,
+so checkpoint size ~= params + signs (1/16 of an Adam checkpoint's state),
+and elastic re-sharding of optimizer state is effectively free.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def _name(p) -> str:
+        parts = []
+        for e in p:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+            else:
+                parts.append(str(e))
+        return _SEP.join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_name(path)] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = None) -> Path:
+    """Atomically write checkpoint for `step`. Returns the final directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"tmp.{step}.{os.getpid()}"
+    final = ckpt_dir / f"step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten(state)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # prune stale tmp dirs from preempted writers
+    for stale in ckpt_dir.glob("tmp.*"):
+        shutil.rmtree(stale, ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*") if (p / "manifest.json").exists()
+    )
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, like: PyTree, step: int | None = None,
+            shardings: PyTree | None = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of `like` (shapes validated), re-sharding
+    onto `shardings` if given (elastic resume on a different mesh)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    names = list(_flatten(like).keys())
+    out = []
+    flat_sh = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(names)
+    for name, ref, sh in zip(names, leaves_like, flat_sh):
+        arr = data[name]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {name}: ckpt {arr.shape} vs model {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return treedef.unflatten(out), manifest

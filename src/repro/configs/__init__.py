@@ -1,0 +1,58 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(arch_id)`` returns the full ModelConfig; ``smoke_config`` a
+reduced same-family config for CPU smoke tests; ``CELLS`` the full
+(arch x shape) evaluation matrix with skip reasons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "grok_1_314b",
+    "deepseek_moe_16b",
+    "yi_6b",
+    "deepseek_7b",
+    "qwen1_5_4b",
+    "nemotron_4_15b",
+    "recurrentgemma_2b",
+    "whisper_base",
+    "llava_next_34b",
+    "mamba2_370m",
+]
+
+PAPER_IDS = ["transformer_base", "transformer_big"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """'run' or a skip reason for one (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "skip: full quadratic attention cannot hold a 500k dense KV state"
+    return "run"
+
+
+def all_cells() -> list[tuple[str, str, str]]:
+    """[(arch_id, shape_name, status)] for the 10x4 matrix."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            out.append((a, s.name, cell_status(cfg, s)))
+    return out
+
+
+__all__ = ["ARCH_IDS", "PAPER_IDS", "get_config", "smoke_config", "all_cells", "cell_status", "SHAPES"]

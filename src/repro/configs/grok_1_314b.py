@@ -1,0 +1,37 @@
+"""grok-1-314b [moe]: 64L d6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    moe_d_ff=32768,
+    vocab=131072,
+    n_experts=8,
+    top_k=2,
+    activation="gelu",
+    gated_mlp=True,
+)
+
+SMOKE = ModelConfig(
+    name="grok-1-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=128,
+    moe_d_ff=128,
+    vocab=256,
+    n_experts=4,
+    top_k=2,
+    activation="gelu",
+    gated_mlp=True,
+    dtype="float32",
+)

@@ -1,0 +1,31 @@
+"""llava-next-34b [vlm]: 60L d7168 56H (GQA kv=8) d_ff=20480 vocab=64000,
+anyres-tiling vision frontend STUB (input_specs provides precomputed patch
+embeddings, 576-patch prefix). [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    n_patches=576,
+)
+
+SMOKE = ModelConfig(
+    name="llava-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab=256,
+    n_patches=8,
+    dtype="float32",
+)

@@ -1,0 +1,36 @@
+"""mamba2-370m [ssm]: 48L d1024 (attention-free) vocab=50280, SSD
+(state-space duality) with ssm_state=128, headdim 64, expand 2.
+[arXiv:2405.21060; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=0,
+    d_ff=0,
+    vocab=256,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_expand=2,
+    ssm_chunk=16,
+    tie_embeddings=True,
+    dtype="float32",
+)

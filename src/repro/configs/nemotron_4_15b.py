@@ -1,0 +1,33 @@
+"""nemotron-4-15b [dense]: 32L d6144 48H (GQA kv=8) d_ff=24576 vocab=256000,
+GQA + squared-ReLU MLP (non-gated). [arXiv:2402.16819; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=256000,
+    activation="sq_relu",
+    gated_mlp=False,
+    norm="layernorm",
+)
+
+SMOKE = ModelConfig(
+    name="nemotron-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab=256,
+    activation="sq_relu",
+    gated_mlp=False,
+    norm="layernorm",
+    dtype="float32",
+)

@@ -1,0 +1,37 @@
+"""recurrentgemma-2b [hybrid]: 26L d2560 10H (GQA kv=1) d_ff=7680
+vocab=256000, RG-LRU + local attention (window 2048), 1 attn : 2 recurrent.
+[arXiv:2402.19427; hf]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab=256000,
+    attn_window=2048,
+    rglru_ratio=2,
+    lru_width=2560,
+    activation="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke",
+    family="hybrid",
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab=256,
+    attn_window=16,
+    rglru_ratio=2,
+    lru_width=64,
+    activation="gelu",
+    dtype="float32",
+)

@@ -1,0 +1,39 @@
+"""Transformer-base (Vaswani et al. 2017) — the paper's own full-training
+model (Table 2, WMT32k): 6+6 enc-dec, d512 8H d_ff=2048, vocab 32k."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="transformer-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=32000,
+    encoder_layers=6,
+    encoder_seq=256,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="relu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="transformer-base-smoke",
+    family="encdec",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    encoder_layers=2,
+    encoder_seq=24,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="relu",
+    tie_embeddings=True,
+    dtype="float32",
+)

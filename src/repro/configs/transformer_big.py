@@ -1,0 +1,39 @@
+"""Transformer-big (Vaswani et al. 2017) — the paper's Table 2 big model:
+6+6 enc-dec, d1024 16H d_ff=4096, vocab 32k."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="transformer-big",
+    family="encdec",
+    n_layers=6,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=32000,
+    encoder_layers=6,
+    encoder_seq=256,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="relu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="transformer-big-smoke",
+    family="encdec",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    encoder_layers=2,
+    encoder_seq=24,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="relu",
+    tie_embeddings=True,
+    dtype="float32",
+)

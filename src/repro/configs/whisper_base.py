@@ -1,0 +1,40 @@
+"""whisper-base [audio]: 6L d512 8H (kv=8) d_ff=2048 vocab=51865, enc-dec
+with conv frontend STUB (input_specs provides precomputed frame embeddings,
+1500 frames). [arXiv:2212.04356; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    encoder_layers=6,
+    encoder_seq=1500,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="encdec",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    encoder_layers=2,
+    encoder_seq=24,
+    norm="layernorm",
+    gated_mlp=False,
+    activation="gelu",
+    tie_embeddings=True,
+    dtype="float32",
+)

@@ -1,0 +1,21 @@
+"""Core SMMF building blocks (the paper's contribution)."""
+
+from repro.core.matricize import effective_shape, square_matricize, unmatricize
+from repro.core.nnmf import nnmf_compress, nnmf_decompress
+from repro.core.schedules import beta1_schedule, beta2_schedule
+from repro.core.signpack import pack_signs, unpack_signs
+from repro.core.smmf import SMMFState, smmf
+
+__all__ = [
+    "effective_shape",
+    "square_matricize",
+    "unmatricize",
+    "nnmf_compress",
+    "nnmf_decompress",
+    "beta1_schedule",
+    "beta2_schedule",
+    "pack_signs",
+    "unpack_signs",
+    "smmf",
+    "SMMFState",
+]

@@ -1,0 +1,42 @@
+"""Square-matricization (paper Algorithm 2).
+
+Given a rank-d tensor with N elements, find (n_hat, m_hat) with
+n_hat * m_hat = N minimizing |n_hat - m_hat| (equivalently n_hat + m_hat,
+Theorem 3.2), and reshape to that matrix. The factor search is plain Python
+over static shapes — it runs once at optimizer init (O(sqrt(N)), Algo 2) and
+never appears in the traced graph; the traced op is a single reshape.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def effective_shape(numel: int) -> tuple[int, int]:
+    """Paper Algorithm 2 / reference code `_get_effective_shape`.
+
+    Returns (n_hat, m_hat) with n_hat >= m_hat, n_hat * m_hat = numel and
+    m_hat the largest divisor <= sqrt(numel).
+    """
+    if numel <= 0:
+        raise ValueError(f"numel must be positive, got {numel}")
+    s = math.isqrt(numel)
+    if s * s == numel:
+        return (s, s)
+    for i in range(s, 0, -1):
+        if numel % i == 0:
+            return (numel // i, i)
+    return (numel, 1)  # unreachable (i=1 always divides)
+
+
+def square_matricize(x: jnp.ndarray) -> jnp.ndarray:
+    """Reshape any-rank tensor to its nearest-square matrix."""
+    n, m = effective_shape(int(x.size))
+    return x.reshape(n, m)
+
+
+def unmatricize(x: jnp.ndarray, shape: tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of square_matricize."""
+    return x.reshape(shape)

@@ -1,0 +1,33 @@
+"""One-shot rank-1 NNMF (paper Algorithm 4/5, after Shazeer & Stern 2018).
+
+compress:  r = M @ 1, c = 1^T @ M, then normalize the *smaller* vector
+           (paper Algo 4: normalize r if n_hat <= m_hat else c) so the outer
+           product has the right scale with one division.
+decompress: M_hat = r (outer) c.
+
+All in f32. The factorization is exact for rank-1 non-negative matrices and
+is the I-divergence-optimal rank-1 approximation otherwise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nnmf_compress(mat: jnp.ndarray, eps: float = 0.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Factorize a non-negative (n, m) matrix into (r: (n,), c: (m,))."""
+    n, m = mat.shape
+    r = jnp.sum(mat, axis=1)
+    c = jnp.sum(mat, axis=0)
+    if n <= m:
+        total = jnp.sum(r)
+        r = jnp.where(total > 0, r / total, r)
+    else:
+        total = jnp.sum(c)
+        c = jnp.where(total > 0, c / total, c)
+    return r, c
+
+
+def nnmf_decompress(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Outer product reconstruction (paper Algorithm 3)."""
+    return jnp.outer(r, c)

@@ -1,0 +1,27 @@
+"""SMMF momentum-coefficient schedules (paper Algorithm 8).
+
+beta1_t = beta1 * lambda^(t-1)     (AdamNC-style growth-rate, default 0.999)
+beta2_t = 1 - t^gamma              (Adafactor-style decay-rate; gamma=-0.5
+                                    recommended for CNNs, -0.8 for
+                                    Transformers)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def beta1_schedule(beta1: float, growth_rate: float):
+    def sched(step: jnp.ndarray) -> jnp.ndarray:
+        t = step.astype(jnp.float32)
+        return beta1 * jnp.power(growth_rate, t - 1.0)
+
+    return sched
+
+
+def beta2_schedule(decay_rate: float):
+    def sched(step: jnp.ndarray) -> jnp.ndarray:
+        t = step.astype(jnp.float32)
+        return 1.0 - jnp.power(t, decay_rate)
+
+    return sched

@@ -1,0 +1,50 @@
+"""1-bit sign storage for the first momentum (paper Sec. 3 / Sec. 6).
+
+The paper stores S_M as bools (8 bits/elt in practice; their Table 5 even
+measures an 8-bit format). We bit-pack to uint8 — a true 32x reduction vs
+f32 and 8x denser than bool storage. Packing is along the *last* axis, which
+must be a multiple of 8 after padding (we pad and remember the true width).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_BITS = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
+
+
+def packed_width(m: int) -> int:
+    return (m + 7) // 8
+
+
+def pack_signs(nonneg: jnp.ndarray) -> jnp.ndarray:
+    """Pack a bool (n, m) 'is non-negative' matrix to uint8 (n, ceil(m/8))."""
+    n, m = nonneg.shape
+    pad = (-m) % 8
+    if pad:
+        nonneg = jnp.pad(nonneg, ((0, 0), (0, pad)))
+    b = nonneg.reshape(n, -1, 8).astype(jnp.uint8)
+    return jnp.sum(b * _BITS[None, None, :], axis=-1, dtype=jnp.uint8)
+
+
+def unpack_signs(packed: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Unpack uint8 (n, ceil(m/8)) to float (n, m) of +1.0 / -1.0."""
+    bits = (packed[:, :, None] & _BITS[None, None, :]) > 0
+    signs = jnp.where(bits, 1.0, -1.0).astype(jnp.float32)
+    return signs.reshape(packed.shape[0], -1)[:, :m]
+
+
+def sign_bytes(shape: tuple[int, int]) -> int:
+    """Persistent bytes for the packed sign matrix of a (n, m) momentum."""
+    n, m = shape
+    return n * packed_width(m)
+
+
+def np_pack_signs(nonneg: np.ndarray) -> np.ndarray:
+    """NumPy twin of pack_signs for checkpoint/test tooling."""
+    n, m = nonneg.shape
+    pad = (-m) % 8
+    if pad:
+        nonneg = np.pad(nonneg, ((0, 0), (0, pad)))
+    return np.packbits(nonneg.astype(bool), axis=-1, bitorder="little").reshape(n, -1)

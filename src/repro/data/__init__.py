@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMStream, SyntheticImageStream
+
+__all__ = ["SyntheticLMStream", "SyntheticImageStream"]

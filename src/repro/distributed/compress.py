@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback (beyond-paper DP trick).
+
+Wraps any optimizer: gradients are quantized to int8 (per-tensor absmax
+scaling) before the (simulated) cross-replica reduction, with the
+quantization residual carried in an error-feedback buffer so the bias
+vanishes over steps (Seide et al. 2014; Karimireddy et al. 2019). On a real
+pod the all-reduce then moves 4x fewer bytes; composed with SMMF the whole
+optimizer pipeline (state AND traffic) is compressed.
+
+Note the EF buffer costs a full-size f32 tensor per parameter — this is a
+*bandwidth* trick, intentionally opposite in the memory/traffic trade to
+SMMF itself; enable it on links-bound meshes only. (Recorded as such in
+DESIGN.md / EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation
+
+
+class EFState(NamedTuple):
+    err: dict
+
+
+def int8_compress(inner: GradientTransformation) -> GradientTransformation:
+    class State(NamedTuple):
+        ef: dict
+        inner: object
+
+    def init(params):
+        (ef,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
+        return State(ef, inner.init(params))
+
+    def update(grads, state, params):
+        def q(g, e):
+            g = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            deq = qi.astype(jnp.float32) * scale
+            return deq, g - deq
+
+        deq, ef = multimap(q, grads, state.ef, nout=2)
+        updates, inner_state = inner.update(deq, state.inner, params)
+        return updates, State(ef, inner_state)
+
+    return GradientTransformation(init, update)

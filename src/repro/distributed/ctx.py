@@ -1,0 +1,37 @@
+"""Activation-sharding context.
+
+Models call ``constrain(x, kind)`` at well-known points ("residual", "ffn",
+"heads", "moe_dispatch", "moe_ffn", "logits"). Outside a mesh context this
+is the identity, so models are mesh-agnostic; the train/serve step factory
+installs a rule function (kind, ndim) -> PartitionSpec|None while tracing,
+baking ``with_sharding_constraint`` ops into the jaxpr.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+
+_RULE: contextvars.ContextVar[Callable | None] = contextvars.ContextVar("shard_rule", default=None)
+
+
+def constrain(x, kind: str):
+    rule = _RULE.get()
+    if rule is None:
+        return x
+    spec = rule(kind, tuple(x.shape))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def sharding_ctx(rule: Callable):
+    tok = _RULE.set(rule)
+    try:
+        yield
+    finally:
+        _RULE.reset(tok)

@@ -1,0 +1,12 @@
+"""Flash-decode attention Pallas TPU kernel.
+
+Single-token decode attention that streams the KV cache through VMEM once
+(online softmax, accumulators resident in VMEM scratch) — the kernel-level
+answer to the §Perf cell-A finding that XLA-level decode attention
+materializes broadcast GEMV products.
+"""
+
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+__all__ = ["flash_decode", "flash_decode_ref"]

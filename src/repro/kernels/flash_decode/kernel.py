@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash-decode (single-token attention over a KV cache).
+
+Grid (B, S/bs): for each batch row the KV cache streams through VMEM in
+(bs, Hkv, D) blocks; the online-softmax state (acc (Hkv, grp, D), running
+max m and sum l (Hkv, grp)) lives in VMEM scratch, persisting across the
+sequential S-axis grid steps. HBM traffic = one pass over the row's cache
++ one (Hq, D) output write — the roofline minimum for decode (the
+XLA-level path additionally materializes an (S, Hkv, D)-sized
+broadcast-product; see EXPERIMENTS.md §Perf cell A).
+
+The per-row valid length (pos) arrives via scalar prefetch (SMEM) and
+masks the tail block; fully masked blocks still stream (static grid) but
+contribute zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(
+    pos_ref,      # SMEM (B,) int32: last valid position per row
+    q_ref,        # (1, hkv, grp, d)
+    k_ref,        # (1, bs, hkv, d)
+    v_ref,        # (1, bs, hkv, d)
+    o_ref,        # out (1, hkv, grp, d) f32
+    acc_ref,      # scratch (hkv, grp, d) f32
+    m_ref,        # scratch (hkv, grp) f32
+    l_ref,        # scratch (hkv, grp) f32
+    *,
+    bs: int,
+    nsteps: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                  # (hkv, grp, d) f32 (pre-scaled)
+    k = k_ref[0].astype(jnp.float32)              # (bs, hkv, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s_blk = jnp.einsum("hgd,shd->hgs", q, k)      # (hkv, grp, bs)
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = kpos <= pos_ref[b]
+    s_blk = jnp.where(valid, s_blk, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=-1))
+    p = jnp.exp(s_blk - m_new[..., None])
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * scale[..., None] + jnp.einsum("hgs,shd->hgd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_blocks(q, k, v, pos, block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
+    """q (B, hkv, grp, d) f32 pre-scaled; k/v (B, S, hkv, d); pos (B,) i32.
+
+    Requires S % block_s == 0 (ops.py pads). Returns o (B, hkv, grp, d) f32.
+    """
+    bsz, hkv, grp, d = q.shape
+    s = k.shape[1]
+    nsteps = s // block_s
+
+    grid = (bsz, nsteps)
+    kernel = functools.partial(_kernel, bs=block_s, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                       # pos (SMEM-like)
+            pl.BlockSpec((1, hkv, grp, d), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, d), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, grp, d), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, grp, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, grp, d), jnp.float32),   # acc
+            pltpu.VMEM((hkv, grp), jnp.float32),      # running max
+            pltpu.VMEM((hkv, grp), jnp.float32),      # running sum
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the flash-decode kernel: GQA reshape, scaling, padding."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import DEFAULT_BLOCK_S, flash_decode_blocks
+
+
+def flash_decode(q, k, v, pos, block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
+    """q (B,Hq,D); k/v (B,S,Hkv,D); pos (B,) -> o (B,Hq,D) f32.
+
+    Semantics match ref.flash_decode_ref (attend to positions <= pos).
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    grp = hq // hkv
+    bs = min(block_s, s)
+    s2 = -(-s // bs) * bs
+    if s2 != s:  # pad cache; padded keys are masked by pos anyway
+        padw = ((0, 0), (0, s2 - s), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(b, hkv, grp, d)
+    o = flash_decode_blocks(qg, k, v, pos.astype(jnp.int32), block_s=bs, interpret=interpret)
+    return o.reshape(b, hq, d)

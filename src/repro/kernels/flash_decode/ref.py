@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token decode attention with a KV cache."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_decode_ref(q, k, v, pos):
+    """q (B,Hq,D); k/v (B,S,Hkv,D); pos (B,) valid lengths (attend to < pos+1).
+
+    Returns o (B,Hq,D) f32.
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    grp = hq // hkv
+    qg = q.reshape(b, hkv, grp, d).astype(jnp.float32) / math.sqrt(d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, hq, d)

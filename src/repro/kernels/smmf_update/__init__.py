@@ -1,0 +1,11 @@
+"""Fused SMMF update Pallas TPU kernel.
+
+One pass over HBM: decompress momentum factors, EMA-update with the intact
+gradient, extract+pack signs, emit row/col partial sums for re-factorization,
+and produce the Adam-style update — the eager reference makes ~6 passes.
+"""
+
+from repro.kernels.smmf_update.ops import smmf_update
+from repro.kernels.smmf_update.ref import smmf_update_ref
+
+__all__ = ["smmf_update", "smmf_update_ref"]

@@ -1,0 +1,85 @@
+"""jit'd wrapper around the fused SMMF Pallas kernel.
+
+Handles padding to tile multiples, the final (tiny) partial-sum reductions
+and Algo-4 normalization of the smaller factor, and crops outputs back to
+the true (n, m). Semantics are bit-for-bit those of ref.smmf_update_ref.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.signpack import packed_width
+from repro.kernels.smmf_update.kernel import DEFAULT_BLOCK, smmf_update_tiles
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def smmf_update(
+    g: jnp.ndarray,
+    r_m: jnp.ndarray,
+    c_m: jnp.ndarray,
+    sign: jnp.ndarray,
+    r_v: jnp.ndarray,
+    c_v: jnp.ndarray,
+    *,
+    beta1_t,
+    beta2_t,
+    eps: float,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Fused SMMF update for one square-matricized (n, m) gradient.
+
+    Returns (u, r_m', c_m', sign', r_v', c_v') with unpadded shapes.
+    """
+    n, m = g.shape
+    bn, bm = block
+    # clamp tiles to the (padded-to-lane) problem size so tiny layers don't
+    # blow up into a full 256x512 tile
+    bn = min(bn, max(8, -(-n // 8) * 8))
+    bm = min(bm, max(128, -(-m // 128) * 128))
+    n2 = -(-n // bn) * bn
+    m2 = -(-m // bm) * bm
+    pw, pw2 = packed_width(m), m2 // 8
+
+    gp = _pad_to(g.astype(jnp.float32), n2, m2)
+    rmp = jnp.pad(r_m, (0, n2 - n))
+    cmp_ = jnp.pad(c_m, (0, m2 - m))
+    rvp = jnp.pad(r_v, (0, n2 - n))
+    cvp = jnp.pad(c_v, (0, m2 - m))
+    sgn = _pad_to(sign, n2, pw2)
+    scalars = jnp.stack(
+        [jnp.asarray(beta1_t, jnp.float32), jnp.asarray(beta2_t, jnp.float32), jnp.asarray(eps, jnp.float32)]
+    ).reshape(1, 3)
+
+    u, sign2, rm_part, cm_part, rv_part, cv_part = smmf_update_tiles(
+        gp, rmp, cmp_, sgn, rvp, cvp, scalars, block=(bn, bm), interpret=interpret
+    )
+
+    r_m2 = jnp.sum(rm_part, axis=1)[:n]
+    c_m2 = jnp.sum(cm_part, axis=0)[:m]
+    r_v2 = jnp.sum(rv_part, axis=1)[:n]
+    c_v2 = jnp.sum(cv_part, axis=0)[:m]
+
+    def _norm(r, c):
+        if n <= m:
+            tot = jnp.sum(r)
+            r = jnp.where(tot > 0, r / tot, r)
+        else:
+            tot = jnp.sum(c)
+            c = jnp.where(tot > 0, c / tot, c)
+        return r, c
+
+    r_m2, c_m2 = _norm(r_m2, c_m2)
+    r_v2, c_v2 = _norm(r_v2, c_v2)
+    sign2 = sign2[:n, :pw]
+    if m % 8:  # zero the padding bits of the last byte (keeps state bit-exact)
+        mask = jnp.full((pw,), 0xFF, jnp.uint8).at[-1].set((1 << (m % 8)) - 1)
+        sign2 = sign2 & mask[None, :]
+    return u[:n, :m], r_m2, c_m2, sign2, r_v2, c_v2

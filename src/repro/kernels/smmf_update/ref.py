@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused SMMF update (paper Algo 1 inner loop).
+
+Given the square-matricized gradient G (n, m) and the factorized state
+(r_m, c_m, sign_packed, r_v, c_v), returns
+
+  u        (n, m)  M_t / (sqrt(V_t) + eps)        [unscaled update]
+  r_m, c_m          new |M| factors (smaller vector normalized, Algo 4)
+  sign     (n, pw)  new bit-packed sign of M_t
+  r_v, c_v          new V factors
+
+This is the semantics the Pallas kernel must reproduce exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.signpack import pack_signs, unpack_signs
+
+
+def _normalize(r: jnp.ndarray, c: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n, m = r.shape[0], c.shape[0]
+    if n <= m:
+        tot = jnp.sum(r)
+        r = jnp.where(tot > 0, r / tot, r)
+    else:
+        tot = jnp.sum(c)
+        c = jnp.where(tot > 0, c / tot, c)
+    return r, c
+
+
+def smmf_update_ref(
+    g: jnp.ndarray,
+    r_m: jnp.ndarray,
+    c_m: jnp.ndarray,
+    sign: jnp.ndarray,
+    r_v: jnp.ndarray,
+    c_v: jnp.ndarray,
+    *,
+    beta1_t,
+    beta2_t,
+    eps: float,
+):
+    n, m = g.shape
+    g = g.astype(jnp.float32)
+    signs = unpack_signs(sign, m)
+    m_hat = signs * jnp.outer(r_m, c_m)
+    v_hat = jnp.outer(r_v, c_v)
+    m_t = beta1_t * m_hat + (1.0 - beta1_t) * g
+    v_t = beta2_t * v_hat + (1.0 - beta2_t) * g * g
+    sign2 = pack_signs(m_t >= 0)
+    am = jnp.abs(m_t)
+    r_m2, c_m2 = _normalize(jnp.sum(am, axis=1), jnp.sum(am, axis=0))
+    r_v2, c_v2 = _normalize(jnp.sum(v_t, axis=1), jnp.sum(v_t, axis=0))
+    u = m_t / (jnp.sqrt(v_t) + eps)
+    return u, r_m2, c_m2, sign2, r_v2, c_v2

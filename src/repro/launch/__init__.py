@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, abstract input specs, jit'd step factories."""

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms from the compiled artifact.
+
+MUST be run as its own process (the XLA flag above is read at first jax
+import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell it records: lowering+compile wall time, memory_analysis (per-device
+bytes), cost_analysis (FLOPs / bytes accessed), and per-collective-kind byte
+counts parsed from the post-SPMD HLO, into results/dryrun/<cell>.json.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, cell_status, get_config
+from repro.core.smmf import smmf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.config import SHAPES
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# bytes-on-the-wire multiplier per chip for ring algorithms:
+#   all-gather out=full        -> ~1x full size
+#   all-reduce out=full        -> ~2x (reduce-scatter + all-gather)
+#   reduce-scatter out=shard   -> ~1x full = out * group
+#   all-to-all  out=full-ish   -> ~1x
+#   collective-permute         -> 1x
+_COLL_RE = re.compile(
+    r"=\s*(?P<dtype>[a-z0-9]+)\[(?P<shape>[0-9,]*)\][^ ]*\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-chip wire bytes by collective kind from post-SPMD HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-start" in line and m.group("op") + "-start" not in line:
+            pass
+        dt = _DTYPE_BYTES.get(m.group("dtype"))
+        if dt is None:
+            continue
+        shape = m.group("shape")
+        numel = 1
+        if shape:
+            for d in shape.split(","):
+                numel *= int(d)
+        size = numel * dt
+        op = m.group("op")
+        group = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = gm.group(1).count(",") + 1
+        else:
+            gm = _GROUPS_IOTA_RE.search(line)
+            if gm:
+                group = int(gm.group(2))
+        if op == "all-reduce":
+            size *= 2
+        elif op == "reduce-scatter":
+            size *= group
+        out[op] += size
+        out["count"] += 1
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf",
+             variant: str = "", flags_spec: str = "", verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    status = cell_status(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}.{shape_name}.{mesh_tag}.{opt_name}" + (f".{variant}" if variant else "")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "opt": opt_name,
+           "variant": variant, "status": status}
+    if status != "run":
+        return rec
+
+    opt = None
+    if shape.kind == "train":
+        gamma = -0.5 if cfg.family == "cnn" else -0.8
+        if opt_name == "smmf":
+            opt = smmf(lr=1e-3, decay_rate=gamma)
+        elif opt_name == "smmf_local":
+            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=16)
+        elif opt_name == "adam":
+            from repro.optim import adam
+            opt = adam(1e-3)
+        elif opt_name == "adafactor":
+            from repro.optim import adafactor
+            opt = adafactor(1e-3)
+        else:
+            raise ValueError(opt_name)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models.perf import parse_flags, perf_flags
+
+    t0 = time.time()
+    with perf_flags(**parse_flags(flags_spec)):
+        lowered = lower_cell(mesh, cfg, shape, opt=opt)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_rec[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_rec = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+
+    # loop-trip-aware per-device analysis (cost_analysis counts while bodies
+    # once; see repro.launch.hloanalysis)
+    from repro.launch.hloanalysis import analyze_compiled
+
+    ana = analyze_compiled(compiled)
+
+    # persist the post-SPMD HLO so analyzer improvements never require
+    # recompiling the whole matrix
+    import gzip
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with gzip.open(RESULTS / f"{tag}.hlo.gz", "wt") as f:
+        f.write(compiled.as_text())
+
+    rec.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "devices": int(mesh.devices.size),
+        "memory": mem_rec,
+        "raw_cost_flops": cost_rec.get("flops", 0.0),
+        "raw_cost_bytes": cost_rec.get("bytes accessed", 0.0),
+        "flops": ana["flops"],
+        "bytes_accessed": ana["bytes"],
+        "coll_bytes": ana["coll_bytes"],
+        "collectives": ana["coll_by_kind"],
+        "coll_count": ana["coll_count"],
+        "hlo_bytes": ana["hlo_chars"],
+    })
+    if verbose:
+        print(f"[{tag}] lower {rec['lower_s']}s compile {rec['compile_s']}s "
+              f"flops/dev {rec['flops']:.3e} bytes/dev {rec['bytes_accessed']:.3e} "
+              f"coll/dev {rec['coll_bytes']:.3e}B ({int(rec['coll_count'])} ops)", flush=True)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--opt", default="smmf")
+    ap.add_argument("--variant", default="", help="tag suffix for perf experiments")
+    ap.add_argument("--flags", default="", help="PerfFlags, e.g. bf16_accum_attention,ssd_chunk_override=128")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp, args.opt, args.variant, args.flags)
+                    if rec["status"] != "run":
+                        print(f"[{arch}.{shape}] {rec['status']}", flush=True)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((arch, shape, mp, repr(e)[:500]))
+                    print(f"[{arch}.{shape} mp={mp}] FAILED: {e!r}"[:600], flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

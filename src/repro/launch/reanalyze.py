@@ -1,0 +1,42 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+"""Re-run hloanalysis over saved .hlo.gz artifacts and refresh the JSONs
+(no recompilation). Usage:
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+
+import gzip
+import json
+from pathlib import Path
+
+from repro.launch.hloanalysis import analyze_text
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def main() -> None:
+    n = 0
+    for hf in sorted(RESULTS.glob("*.hlo.gz")):
+        jf = RESULTS / (hf.name[: -len(".hlo.gz")] + ".json")
+        if not jf.exists():
+            continue
+        rec = json.loads(jf.read_text())
+        with gzip.open(hf, "rt") as f:
+            text = f.read()
+        c = analyze_text(text)
+        rec.update({
+            "flops": c.flops,
+            "bytes_accessed": c.bytes,
+            "coll_bytes": sum(c.coll.values()),
+            "collectives": dict(c.coll),
+            "coll_count": c.coll_count,
+        })
+        jf.write_text(json.dumps(rec, indent=1))
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+No device allocation ever happens here — these stand-ins feed
+``jax.jit(...).lower()`` for the multi-pod dry-run, and double as the shape
+contract for the data pipeline and serving driver.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    b = shape.global_batch
+    batch = {"token": _sds((b, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def params_specs(cfg: ModelConfig) -> PyTree:
+    from repro.models import init_encdec, init_lm
+
+    init = init_encdec if cfg.family == "encdec" else init_lm
+    return jax.eval_shape(lambda k: init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    from repro.models import init_cache, init_encdec_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(lambda: init_encdec_cache(cfg, b, s))
+    return jax.eval_shape(lambda: init_cache(cfg, b, s))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    """The step-function operand specs for one cell (excluding params/state)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    return {"batch": decode_batch_specs(cfg, shape), "cache": cache_specs(cfg, shape)}

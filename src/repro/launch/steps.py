@@ -1,0 +1,173 @@
+"""Step factories: train_step / prefill_step / decode_step, mesh-aware.
+
+``make_*`` returns (jitted_fn, in_shardings, out_shardings-compatible
+abstract signature). The model's activation constraints are installed while
+*tracing* via the sharding context, so the same model code serves 1-device
+tests and 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import rules
+from repro.distributed.ctx import sharding_ctx
+from repro.models import (
+    encdec_decode_step,
+    encdec_loss,
+    init_cache,
+    init_encdec_cache,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+from repro.models.config import ModelConfig
+from repro.optim.base import GradientTransformation, apply_updates
+
+PyTree = Any
+
+
+def loss_fn_for(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_loss
+    return lm_loss
+
+
+def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = loss_fn_for(cfg)
+
+    def train_step(params, opt_state, batch):
+        def compute(p, b):
+            loss, metrics = loss_fn(p, cfg, b)
+            return loss, metrics
+
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                msum = jax.tree.map(lambda a, x: a + x, msum, metrics)
+                return (gsum, msum), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]), batch
+            )
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": jnp.zeros(()), "aux": jnp.zeros(()), "loss": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda x: x / grad_accum, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params, batch)
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> (next_token, cache). Greedy sampling."""
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            from repro.models import encode, encdec_logits
+
+            enc = encode(params, cfg, batch["frames"])
+            # teacher prefix not modeled for enc-dec serving: start decode
+            b = batch["frames"].shape[0]
+            cache = init_encdec_cache(cfg, b, batch["tokens"].shape[1])
+            logits, cache = encdec_decode_step(params, cfg, batch["tokens"][:, :1], cache, enc)
+            return jnp.argmax(logits[:, -1], axis=-1), cache
+        logits, cache = lm_prefill(params, cfg, batch["tokens"], batch.get("prefix_embeds"))
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, batch{token[,enc]}, cache) -> (next_token, cache)."""
+
+    def decode_step(params, batch, cache):
+        if cfg.family == "encdec":
+            logits, cache = encdec_decode_step(params, cfg, batch["token"], cache, batch["enc"])
+        else:
+            logits, cache = lm_decode_step(params, cfg, batch["token"], cache)
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware lowering helpers (used by dryrun + real launchers)
+# ---------------------------------------------------------------------------
+
+def shardings_for_cell(mesh, cfg: ModelConfig, kind: str, opt=None, shape=None):
+    """(in_shardings pytree factory) for each step kind."""
+    from repro.launch import specs as S
+
+    p_sds = S.params_specs(cfg)
+    p_sh = rules.param_shardings(mesh, cfg, p_sds)
+    if kind == "train":
+        o_sh = rules.opt_state_shardings(mesh, cfg, p_sds, opt)
+        b_sh = rules.batch_shardings(mesh, S.train_batch_specs(cfg, shape))
+        return (p_sh, o_sh, b_sh)
+    if kind == "prefill":
+        b_sh = rules.batch_shardings(mesh, S.prefill_batch_specs(cfg, shape))
+        return (p_sh, b_sh)
+    c_sds = S.cache_specs(cfg, shape)
+    c_sh = rules.cache_shardings(mesh, cfg, c_sds)
+    b_sh = rules.batch_shardings(mesh, S.decode_batch_specs(cfg, shape))
+    return (p_sh, b_sh, c_sh)
+
+
+def lower_cell(mesh, cfg: ModelConfig, shape, opt=None, donate: bool = True):
+    """Lower (not compile) one (arch x shape) cell's step on `mesh`.
+
+    Returns the jax.stages.Lowered object. Tracing runs inside the
+    activation-rule context so with_sharding_constraint ops are baked in.
+    """
+    from repro.launch import specs as S
+
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+    rule = rules.activation_rules(mesh, cfg, mode)
+
+    p_sds = S.params_specs(cfg)
+    # all shardings below are explicit NamedShardings (mesh embedded), so no
+    # ambient-mesh context is required
+    with sharding_ctx(rule):
+        if shape.kind == "train":
+            step = make_train_step(cfg, opt)
+            in_sh = shardings_for_cell(mesh, cfg, "train", opt=opt, shape=shape)
+            o_sds = jax.eval_shape(opt.init, p_sds)
+            b_sds = S.train_batch_specs(cfg, shape)
+            fn = jax.jit(
+                step,
+                in_shardings=in_sh,
+                out_shardings=(in_sh[0], in_sh[1], None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            return fn.lower(p_sds, o_sds, b_sds)
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            in_sh = shardings_for_cell(mesh, cfg, "prefill", shape=shape)
+            b_sds = S.prefill_batch_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=in_sh)
+            return fn.lower(p_sds, b_sds)
+        step = make_decode_step(cfg)
+        in_sh = shardings_for_cell(mesh, cfg, "decode", shape=shape)
+        b_sds = S.decode_batch_specs(cfg, shape)
+        c_sds = S.cache_specs(cfg, shape)
+        fn = jax.jit(
+            step,
+            in_shardings=in_sh,
+            out_shardings=(None, in_sh[2]),
+            donate_argnums=(2,) if donate else (),
+        )
+        return fn.lower(p_sds, b_sds, c_sds)

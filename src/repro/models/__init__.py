@@ -1,0 +1,43 @@
+"""Model zoo: LM families, encoder-decoder backbone, CNN."""
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.lm import (
+    init_cache,
+    init_lm,
+    lm_decode_step,
+    lm_logits,
+    lm_loss,
+    lm_prefill,
+    vocab_padded,
+)
+from repro.models.encdec import (
+    encdec_decode_step,
+    encdec_logits,
+    encdec_loss,
+    encode,
+    init_encdec,
+    init_encdec_cache,
+)
+from repro.models.cnn import cnn_apply, cnn_loss, init_cnn
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "init_lm",
+    "lm_logits",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "init_cache",
+    "vocab_padded",
+    "init_encdec",
+    "encode",
+    "encdec_logits",
+    "encdec_loss",
+    "encdec_decode_step",
+    "init_encdec_cache",
+    "init_cnn",
+    "cnn_apply",
+    "cnn_loss",
+]

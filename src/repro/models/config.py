@@ -1,0 +1,137 @@
+"""Model configuration shared by every architecture family.
+
+One frozen dataclass covers dense / MoE / hybrid (RG-LRU) / SSM (Mamba2-SSD)
+/ enc-dec (Whisper) / VLM-backbone (LLaVA) families; family-specific fields
+default to "off". Configs for the 10 assigned architectures live in
+``repro/configs/<id>.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "hybrid", "ssm", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_kv_heads: int = 0          # 0 -> = n_heads (MHA)
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    activation: str = "silu"     # silu | gelu | relu | sq_relu
+    gated_mlp: bool = True       # SwiGLU-style gate (llama family)
+    qkv_bias: bool = False       # qwen1.5
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0            # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- hybrid (RecurrentGemma) ---
+    attn_window: int = 0         # sliding-window size for local attention
+    rglru_ratio: int = 0         # N recurrent blocks per attention block
+    lru_width: int = 0           # 0 -> d_model
+    conv_width: int = 4
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # --- enc-dec (Whisper backbone; conv frontend is a stub) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0         # stub frontend output length (audio frames)
+    # --- VLM backbone (LLaVA; anyres tiling frontend is a stub) ---
+    n_patches: int = 0           # stub image-patch prefix length
+    # --- numerics / structure ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode with O(1)/O(window) state (long_500k cell)?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += d * v
+        total += d  # final norm
+        if self.family == "ssm":
+            d_in = self.ssm_expand * d
+            nheads = d_in // self.ssm_headdim
+            per = (
+                d * (2 * d_in + 2 * self.ssm_state + nheads)  # in_proj(z,x,B,C,dt)
+                + self.conv_width * (d_in + 2 * self.ssm_state)
+                + 3 * nheads  # A_log, D, dt_bias
+                + d_in * d  # out_proj
+                + d
+            )
+            return total + self.n_layers * per
+        hd, hq, hkv = self.hd, self.n_heads, self.kv_heads
+        attn = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+        if self.qkv_bias:
+            attn += (hq + 2 * hkv) * hd
+        def _ffn(f):
+            return d * f * (3 if self.gated_mlp else 2)
+        if self.family == "moe":
+            ffn = d * self.n_experts + self.n_experts * _ffn(self.expert_ff)
+            ffn += self.n_shared_experts * _ffn(self.expert_ff)
+        else:
+            ffn = _ffn(self.d_ff)
+        per = attn + ffn + 2 * d
+        total += self.n_layers * per
+        if self.family == "encdec":
+            # encoder blocks + decoder cross-attention
+            total += self.encoder_layers * (attn + _ffn(self.d_ff) + 2 * d)
+            total += self.n_layers * (attn + d)
+        if self.family == "hybrid":
+            pass  # approximation: recurrent blocks ~ attention blocks
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell of the evaluation matrix."""
+
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}

@@ -1,0 +1,147 @@
+"""Encoder-decoder transformer backbone (Whisper-style).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, T_enc, D). The encoder is bidirectional
+self-attention; the decoder is causal self-attention + cross-attention.
+Whisper uses LayerNorm, learned positions (we use RoPE-free sinusoidal-free
+learned embeddings for enc, RoPE for dec self-attn is disabled -> learned),
+and non-gated GELU MLPs; cfg should set norm="layernorm", gated_mlp=False,
+activation="gelu".
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.lm import vocab_padded
+
+PyTree = Any
+
+
+def init_encdec(key, cfg: ModelConfig) -> PyTree:
+    vp = vocab_padded(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg.norm),
+            "attn": L.init_attention(k1, cfg),
+            "norm2": L.init_norm(cfg.d_model, cfg.norm),
+            "ffn": L.init_ffn(k2, cfg),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg.norm),
+            "attn": L.init_attention(k1, cfg),
+            "norm_x": L.init_norm(cfg.d_model, cfg.norm),
+            "xattn": L.init_attention(k2, cfg, cross=True),
+            "norm2": L.init_norm(cfg.d_model, cfg.norm),
+            "ffn": L.init_ffn(k3, cfg),
+        }
+
+    enc = [enc_block(k) for k in enc_keys]
+    dec = [dec_block(k) for k in dec_keys]
+    return {
+        "embed": (jax.random.normal(ks[2], (vp, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "pos_embed": (jax.random.normal(ks[3], (4096 * 16, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "enc_pos": (jax.random.normal(ks[4], (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": L.init_norm(cfg.d_model, cfg.norm),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames (B, T_enc, D) stub frontend output -> encoder states."""
+    b, t, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None, :t]
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(h, p):
+        o, _ = L.attention(p["attn"], L.norm(h, p["norm1"], cfg.norm), cfg, positions,
+                           causal=False, use_rope=False)
+        h = h + o
+        return h + L.ffn(p["ffn"], L.norm(h, p["norm2"], cfg.norm), cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.norm(x, params["enc_norm"], cfg.norm)
+
+
+def _dec_stack(params, cfg, x, positions, enc, caches=None, ring=False):
+    def body(carry, scanned):
+        h = carry
+        p, c = scanned
+        o, c2 = L.attention(p["attn"], L.norm(h, p["norm1"], cfg.norm), cfg, positions,
+                            cache=c, use_rope=False, ring=ring)
+        h = h + o
+        o, _ = L.attention(p["xattn"], L.norm(h, p["norm_x"], cfg.norm), cfg, positions,
+                           kv_x=enc, use_rope=False)
+        h = h + o
+        h = h + L.ffn(p["ffn"], L.norm(h, p["norm2"], cfg.norm), cfg)
+        return h, c2
+
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(body, x, (params["dec_blocks"], caches))
+
+
+def encdec_logits(params, cfg: ModelConfig, tokens, frames):
+    """Teacher-forced decoder logits. tokens (B,S), frames (B,T_enc,D)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_embed"][None, :s]
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _ = _dec_stack(params, cfg, x, positions, enc)
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    return constrain(logits, "logits")
+
+
+def encdec_loss(params, cfg: ModelConfig, batch):
+    logits = encdec_logits(params, cfg, batch["tokens"], batch["frames"])
+    labels = batch["labels"]
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < cfg.vocab, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "loss": ce}
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return {
+        "attn": L.init_attn_cache(cfg, batch, s_max, layers=cfg.n_layers),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, cache, enc):
+    """One decoder step with self-attn cache + cross-attn to `enc`."""
+    pos = cache["pos"]
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    x = x + jnp.take(params["pos_embed"], pos[:, None], axis=0)
+    positions = pos[:, None]
+    x, new_kv = _dec_stack(params, cfg, x, positions, enc, caches=cache["attn"])
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    return constrain(logits, "logits"), {"attn": new_kv, "pos": pos + 1}

@@ -1,0 +1,91 @@
+"""Flash-style blockwise attention in pure JAX (XLA-level, TPU-friendly).
+
+Online-softmax over KV blocks with the query axis pre-blocked, so the peak
+live tensor is O(B * nb * bq * H * bkv) instead of O(B * H * S^2). The
+query-block axis (nb) carries the sequence-parallel sharding when attention
+heads don't divide the model axis; otherwise heads carry it — both are
+plain GSPMD shardings via ctx.constrain("flash_q"/"flash_kv").
+
+Causal and sliding-window masks are generated from block-index iota (never a
+materialized (S, S) mask). This is the memory-hierarchy adaptation of the
+FlashAttention idea to the XLA/TPU stack: blocks sized for VMEM residency,
+with the MXU contraction shapes left to XLA fusion.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+NEG_INF = -1e30
+
+
+def flash_attention(
+    q: jnp.ndarray,       # (B, S, Hq, D)
+    k: jnp.ndarray,       # (B, Sk, Hkv, D)
+    v: jnp.ndarray,       # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 256,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    from repro.models.perf import flags
+
+    b, s, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    grp = hq // hkv
+    if flags().flash_block_kv:
+        block_kv = flags().flash_block_kv
+
+    def _pick(size, target):
+        nb = 1  # double the block count while blocks stay above target size
+        while size % (nb * 2) == 0 and size // nb > target:
+            nb *= 2
+        return nb
+
+    nb = _pick(s, block_q)
+    nkv = _pick(sk, block_kv)
+    bq, bkv = s // nb, sk // nkv
+
+    bf16_ops = flags().bf16_accum_attention
+    qdt = q.dtype if bf16_ops else jnp.float32
+    qb = (q.astype(jnp.float32) / math.sqrt(d)).astype(qdt).reshape(b, nb, bq, hkv, grp, d)
+    qb = constrain(qb, "flash_q")
+    k = constrain(k.astype(qdt), "flash_kv")
+    v = constrain(v.astype(qdt), "flash_kv")
+
+    q_pos = (jnp.arange(nb)[:, None] * bq + jnp.arange(bq)[None, :])  # (nb, bq)
+
+    def body(carry, j):
+        acc, m_run, l_run = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * bkv, bkv, axis=1)    # (b,bkv,hkv,d)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * bkv, bkv, axis=1)
+        s_blk = jnp.einsum("bnqhgd,bkhd->bnqhgk", qb, kj,
+                           preferred_element_type=jnp.float32)        # (b,nb,bq,hkv,grp,bkv)
+        k_pos = j * bkv + jnp.arange(bkv)                             # (bkv,)
+        if causal:
+            mask = k_pos[None, None, :] <= q_pos[:, :, None]          # (nb,bq,bkv)
+            if window:
+                mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+            s_blk = jnp.where(mask[None, :, :, None, None, :], s_blk, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s_blk, axis=-1))
+        p = jnp.exp(s_blk - m_new[..., None])
+        scale = jnp.exp(m_run - m_new)
+        l_new = l_run * scale + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnqhgk,bkhd->bnqhgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * scale[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, nb, bq, hkv, grp, d), jnp.float32)
+    m0 = jnp.full((b, nb, bq, hkv, grp), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nb, bq, hkv, grp), jnp.float32)
+    acc0 = constrain(acc0, "flash_q")
+    (acc, m_run, l_run), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)
+    return out.reshape(b, s, hq, d)

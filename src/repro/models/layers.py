@@ -1,0 +1,613 @@
+"""Neural-net building blocks (pure functions over param dicts).
+
+Everything is written against abstract named-axis einsums so GSPMD can
+propagate shardings; activation sharding hints go through
+``repro.distributed.ctx.constrain`` (identity unless a mesh context is
+installed by the train/serve step factory).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, p, kind: str):
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def init_norm(d: int, kind: str) -> PyTree:
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def activate(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "sq_relu":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate-half RoPE. x (B, S, H, D); positions (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window, optional cross, optional cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> PyTree:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, hq, hd), 1 / math.sqrt(d), dt),
+        "wk": _init(ks[1], (d, hkv, hd), 1 / math.sqrt(d), dt),
+        "wv": _init(ks[2], (d, hkv, hd), 1 / math.sqrt(d), dt),
+        "wo": _init(ks[3], (hq, hd, d), 1 / math.sqrt(hq * hd), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq, hd), dt)
+        p["bk"] = jnp.zeros((hkv, hd), dt)
+        p["bv"] = jnp.zeros((hkv, hd), dt)
+    return p
+
+
+def _qkv(p, x, kv_x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    return q, k, v
+
+
+def gqa_scores(q, k):
+    """q (B,Sq,Hq,D), k (B,Sk,Hkv,D) -> (B,Hq,Sq,Sk) with KV-head grouping."""
+    from repro.models.perf import flags
+
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    grp = hq // hkv
+    qg = q.reshape(b, sq, hkv, grp, d)
+    if flags().attn_bf16_scores:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.bfloat16).astype(jnp.float32)
+    elif flags().bf16_accum_attention:
+        # bf16 operands, f32 MXU accumulation: no materialized f32 K copy
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    return s.reshape(b, hq, sq, k.shape[1]) / math.sqrt(d)
+
+
+def gqa_combine(w, v):
+    """w (B,Hq,Sq,Sk), v (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    from repro.models.perf import flags
+
+    b, hq, sq, sk = w.shape
+    hkv = v.shape[2]
+    grp = hq // hkv
+    wg = w.reshape(b, hkv, grp, sq, sk)
+    if flags().attn_bf16_scores:
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", wg.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.bfloat16)
+    elif flags().bf16_accum_attention:
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", wg.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", wg, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, v.shape[3])
+
+
+def attention(
+    p: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    kv_x: jnp.ndarray | None = None,       # cross-attention source
+    cache: PyTree | None = None,           # {"k","v" (B,S,Hkv,D)}
+    window: int = 0,
+    causal: bool = True,
+    use_rope: bool = True,
+    ring: bool = False,                    # cache is a ring buffer over `window`
+) -> tuple[jnp.ndarray, PyTree | None]:
+    """Full attention: self (train/prefill) or single-token decode with cache.
+
+    ``positions`` are always *absolute* (used for RoPE). In decode, the K/V
+    write index is ``pos`` (or ``pos % cache_len`` for ring buffers); ring
+    buffers attend to every filled slot (they hold exactly the window).
+    Returns (output (B,S,D_model), new_cache).
+    """
+    cross = kv_x is not None
+    q, k, v = _qkv(p, x, kv_x if cross else x, cfg)
+    if use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "heads")
+
+    new_cache = None
+    if cache is not None and not cross:
+        from repro.models.perf import flags
+
+        s_max = cache["k"].shape[1]
+        pos = positions[:, 0]  # (B,) absolute
+        widx = pos % s_max if ring else pos
+        if flags().scatter_cache_update:
+            # in-place scatter: slice-sized traffic. Legal when the cache's
+            # sequence dim is unsharded (kv-heads carry the model axis).
+            bidx = jnp.arange(cache["k"].shape[0])
+            ck = cache["k"].at[bidx, widx].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, widx].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            # one-hot masked update: elementwise, safe for any cache
+            # sharding incl. seq-sharded (cost: full-slice rewrite)
+            hot = jax.nn.one_hot(widx, s_max, dtype=cache["k"].dtype)[:, :, None, None]
+            ck = cache["k"] * (1 - hot) + hot * k.astype(cache["k"].dtype)
+            cv = cache["v"] * (1 - hot) + hot * v.astype(cache["v"].dtype)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+
+    # long full-sequence self-attention: blockwise online-softmax path
+    # (never materializes (S, S) scores; see repro.models.flash)
+    if cache is None and not cross and causal and q.shape[1] >= 4096:
+        from repro.models.flash import flash_attention
+
+        o = flash_attention(q, k, v, causal=True, window=window).astype(x.dtype)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return constrain(out, "residual"), None
+
+    out = attend(p, q, k, v, positions, x.dtype,
+                 decode=cache is not None and not cross,
+                 causal=causal and not cross, window=window, ring=ring)
+    return out, new_cache
+
+
+def attend(p, q, k, v, positions, out_dtype, *, decode: bool, causal: bool = True,
+           window: int = 0, ring: bool = False):
+    """Post-QKV attention: scores -> mask -> softmax -> combine -> out-proj.
+
+    Shared by the internal cache path and the cache-as-carry decode path
+    (where K/V were scattered into the carried cache before this call).
+    """
+    scores = gqa_scores(q, k)  # (B,Hq,Sq,Sk) f32
+
+    sq, sk = scores.shape[2], scores.shape[3]
+    if decode:
+        kpos = jnp.arange(sk)[None, None, None, :]
+        pos_b = positions[:, None, None, :]
+        # valid slots: <= pos normally; every filled slot for ring buffers
+        mask = kpos < jnp.minimum(pos_b + 1, sk) if ring else kpos <= pos_b
+        if window and not ring:
+            mask = mask & (kpos > pos_b - window)
+    elif causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = (kpos <= qpos)[None, None]
+        if window:
+            mask = mask & (kpos > qpos - window)[None, None]
+    else:
+        mask = None
+
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = gqa_combine(w, v).astype(out_dtype)
+    from repro.models.perf import flags as _pf
+
+    if _pf().bf16_rowparallel_reduce:
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"], preferred_element_type=jnp.bfloat16)
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, "residual")
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, s_max: int, layers: int | None = None):
+    """Stacked (L, B, S, Hkv, D) KV cache of zeros."""
+    l = cfg.n_layers if layers is None else layers
+    dt = jnp.dtype(cfg.dtype)
+    shape = (l, batch, s_max, cfg.kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None) -> PyTree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"wi": _init(ks[0], (d, f), dtype=dt), "wo": _init(ks[1], (f, d), dtype=dt)}
+    if cfg.gated_mlp:
+        p["wg"] = _init(ks[2], (d, f), dtype=dt)
+    return p
+
+
+def ffn(p, x, cfg: ModelConfig):
+    from repro.models.perf import flags
+
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = activate(g, cfg.activation) * h
+    else:
+        h = activate(h, cfg.activation)
+    h = constrain(h, "ffn")
+    if flags().bf16_rowparallel_reduce:
+        # partial sums of the row-parallel (TP) matmul reduced in bf16:
+        # halves the all-reduce wire bytes (numerics note in EXPERIMENTS.md)
+        out = jnp.einsum("bsf,fd->bsd", h, p["wo"], preferred_element_type=jnp.bfloat16)
+    else:
+        out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return constrain(out, "residual")
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (GShard-style grouped top-k dispatch with capacity)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> PyTree:
+    from repro.models.perf import flags
+
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    pack = max(1, flags().moe_expert_pack)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e), dtype=jnp.float32),
+        # packed layout (E*P, D, F/P): expert axis divisible by the TP degree
+        "wi": _init(ks[1], (e * pack, d, fe // pack), dtype=dt),
+        "wo": _init(ks[2], (e * pack, fe // pack, d), dtype=dt),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = _init(ks[3], (e * pack, d, fe // pack), dtype=dt)
+    if cfg.n_shared_experts:
+        sub = ModelConfig(**{**cfg.__dict__, "d_ff": fe * cfg.n_shared_experts})
+        p["shared"] = init_ffn(ks[4], sub, fe * cfg.n_shared_experts)
+    return p
+
+
+def moe_ffn(p, x, cfg: ModelConfig, n_groups: int = 16):
+    """x (B, S, D) -> (out, aux_loss). Tokens are routed in G groups per
+    batch row; each group gets its own capacity so the position cumsum stays
+    group-local (no cross-shard cumsum when S is sharded G-way)."""
+    from repro.models.perf import flags
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = math.gcd(n_groups, s)
+    sg = s // g
+    cf = flags().moe_capacity_override or cfg.capacity_factor
+    cap = max(4, int(cf * k * sg / e + 0.999))
+    xg = x.reshape(b, g, sg, d)
+
+    logits = jnp.einsum("bgsd,de->bgse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                      # (b,g,sg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)            # (b,g,sg,k,e)
+    # position of each (token, choice) within its expert queue, group-local
+    flat = onehot.reshape(b, g, sg * k, e)
+    pos = jnp.cumsum(flat, axis=2) - 1.0
+    pos = pos.reshape(b, g, sg, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+
+    # combine tensor (b,g,sg,e,cap): gate value at the kept slot
+    cap_hot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    combine = jnp.einsum("bgske,bgskec->bgsec", onehot * gate_vals[..., None], cap_hot)
+    combine = constrain(combine.astype(x.dtype), "moe_dispatch")
+    dispatch = (combine != 0).astype(x.dtype)
+
+    pack = max(1, flags().moe_expert_pack)
+    if pack > 1:
+        # duplicate the (small) dispatch one-hots per expert F-chunk so the
+        # dispatch einsum directly produces the packed-expert token tensor
+        # (b, E*P, g, cap, d) -- the einsum output resharding g->E is a
+        # single all-to-all instead of a gather of a broadcasted copy
+        dispatch = jnp.repeat(dispatch, pack, axis=3)
+    xe = jnp.einsum("bgsec,bgsd->begcd", dispatch, xg)                 # (b,E*P,g,cap,d)
+    if flags().moe_bf16_dispatch:
+        xe = xe.astype(x.dtype)
+    xe = constrain(xe, "moe_ffn_in")
+    h = jnp.einsum("begcd,edf->begcf", xe, p["wi"])
+    if cfg.gated_mlp:
+        gg = jnp.einsum("begcd,edf->begcf", xe, p["wg"])
+        h = activate(gg, cfg.activation) * h
+    else:
+        h = activate(h, cfg.activation)
+    if flags().moe_bf16_dispatch:
+        h = h.astype(x.dtype)
+    h = constrain(h, "moe_ffn")
+    ye = jnp.einsum("begcf,efd->begcd", h, p["wo"])
+    if pack > 1:
+        # sum the P partial products of each expert's split hidden dim
+        ye = ye.reshape(b, e, pack, g, ye.shape[-2], d).sum(axis=2)
+    if flags().moe_bf16_dispatch:
+        ye = ye.astype(x.dtype)
+    ye = constrain(ye, "moe_ffn_in")
+    out = jnp.einsum("bgsec,begcd->bgsd", combine, ye).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + ffn(p["shared"], x, cfg)
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=(0, 1, 2))                               # mean router prob
+    ce = jnp.mean(onehot[..., 0, :] if k == 1 else jnp.max(onehot, axis=3), axis=(0, 1, 2))
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+    return constrain(out, "residual"), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": _init(ks[0], (d, w), dtype=dt),          # input branch
+        "wy": _init(ks[1], (d, w), dtype=dt),          # gate branch
+        "conv_w": _init(ks[2], (cfg.conv_width, w), 0.1, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wi_gate": _init(ks[3], (w, w), dtype=dt),     # input gate (i_t)
+        "wa_gate": _init(ks[4], (w, w), dtype=dt),     # recurrence gate (r_t)
+        "lam": jnp.full((w,), 2.0, jnp.float32),       # softplus^-1 decay param
+        "wo": _init(ks[5], (w, d), dtype=dt),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """x (B,S,W), w (K,W) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def rglru(p, x, cfg: ModelConfig, state: PyTree | None = None):
+    """Gated linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * u_t).
+
+    Train/prefill: associative scan over S. Decode: one-step with carried
+    state {"h" (B,W), "conv" (B,K-1,W)}. Returns (out, new_state).
+    """
+    u = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    gate_in = jnp.einsum("bsd,dw->bsw", x, p["wy"])
+
+    if state is None:
+        uc = _causal_conv1d(u, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        k = p["conv_w"].shape[0]
+        hist = jnp.concatenate([state["conv"], u], axis=1)  # (B, K, W)
+        uc = jnp.einsum("bkw,kw->bw", hist, p["conv_w"])[:, None, :] + p["conv_b"][None, None, :]
+        new_conv = hist[:, 1:, :]
+
+    i_t = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", gate_in, p["wi_gate"]))
+    r_t = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", gate_in, p["wa_gate"]))
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["lam"])[None, None, :] * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i_t * uc).astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    if state is None:
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(comb, (a, b_t), axis=1)
+        new_state = {"h": h[:, -1, :]}
+    else:
+        h = a * state["h"][:, None, :] + b_t
+        new_state = {"h": h[:, -1, :], "conv": new_conv}
+
+    out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype), p["wo"])
+    return constrain(out, "residual"), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, layers: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((layers, batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def init_ssd(key, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_headdim
+    ns = cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * ns + nh), dtype=dt),
+        "conv_w": _init(ks[1], (cfg.conv_width, din + 2 * ns), 0.1, dt),
+        "conv_b": jnp.zeros((din + 2 * ns,), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": _init(ks[2], (din, d), dtype=dt),
+        "norm": init_norm(din, "rmsnorm"),
+    }
+
+
+def _ssd_chunked(xh, dt_h, a_log, bmat, cmat, chunk: int, bf16_intra: bool = False):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P) head inputs; dt_h (B,S,H) step sizes; a_log (H,);
+    bmat/cmat (B,S,N). Returns (y (B,S,H,P), final state (B,H,P,N)).
+    ``bf16_intra`` keeps the O(c^2) intra-chunk tensors in bf16 (halves
+    their HBM traffic; inter-chunk state math stays f32).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = max(1, s // chunk)
+    c = s // nc
+    xc = xh.reshape(b, nc, c, h, p)
+    dtc = dt_h.reshape(b, nc, c, h)
+    bc = bmat.reshape(b, nc, c, n)
+    cc = cmat.reshape(b, nc, c, n)
+
+    da = -jnp.exp(a_log)[None, None, None, :] * dtc          # (b,nc,c,h) log-decay
+    cum = jnp.cumsum(da, axis=2)                              # within-chunk cumulative
+    seg_tot = cum[:, :, -1, :]                                # (b,nc,h)
+
+    idt = jnp.bfloat16 if bf16_intra else jnp.float32
+
+    # intra-chunk (quadratic within chunk, causal)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,c_q,c_k,h)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0).astype(idt)
+    sc = jnp.einsum("bgqn,bgkn->bgqk", cc.astype(idt), bc.astype(idt),
+                    preferred_element_type=idt)               # (b,nc,c,c)
+    w = sc[..., None] * decay * dtc[:, :, None, :, :].astype(idt)  # (b,nc,q,k,h)
+    y_intra = jnp.einsum("bgqkh,bgkhp->bgqhp", w, xc.astype(idt),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: contribution of each chunk to the carried state
+    decay_to_end = jnp.exp(seg_tot[:, :, None, :] - cum)      # (b,nc,c,h)
+    sstate = jnp.einsum("bgkn,bgkh,bgkhp->bghpn", bc, decay_to_end * dtc, xc)
+
+    # inter-chunk recurrence over nc chunks
+    def comb(c1, c2):
+        a1, s1 = c1
+        a2, s2 = c2
+        return a1 + a2, s2 + s1 * jnp.exp(a2)[..., None, None]
+    init_a = seg_tot.transpose(1, 0, 2)                       # (nc,b,h)
+    init_s = sstate.transpose(1, 0, 2, 3, 4)                  # (nc,b,h,p,n)
+    _, states = jax.lax.associative_scan(comb, (init_a, init_s), axis=0)
+    states = states.transpose(1, 0, 2, 3, 4)                  # (b,nc,h,p,n) state at chunk END
+    prev = jnp.concatenate([jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+
+    # inter-chunk output: y += C_t exp(cum_t) prev_state
+    y_inter = jnp.einsum("bgqn,bgqh,bghpn->bgqhp", cc, jnp.exp(cum), prev)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, states[:, -1]
+
+
+def ssd_block(p, x, cfg: ModelConfig, state: PyTree | None = None):
+    """Mamba2 block. state (decode): {"ssm" (B,H,P,N), "conv" (B,K-1,C)}."""
+    from repro.models.perf import flags
+
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_headdim
+    ns = cfg.ssm_state
+    ph = cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, bmat, cmat, dt_raw = jnp.split(zxbcdt, [din, 2 * din, 2 * din + ns, 2 * din + 2 * ns], axis=-1)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    if state is None:
+        conv_out = _causal_conv1d(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        k = p["conv_w"].shape[0]
+        hist = jnp.concatenate([state["conv"], conv_in], axis=1)
+        conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"])[:, None, :] + p["conv_b"][None, None, :]
+        new_conv = hist[:, 1:, :]
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
+
+    dt_h = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])  # (B,S,H)
+    xh = xin.reshape(b, s, nh, ph).astype(jnp.float32)
+    xh = constrain(xh, "ssd_heads")          # (B,S,H,P): heads over model
+    dt_h = constrain(dt_h, "ssd_dt")
+
+    if state is None:
+        chunk = flags().ssd_chunk_override or cfg.ssm_chunk
+        y, last = _ssd_chunked(xh, dt_h, p["a_log"], bmat.astype(jnp.float32),
+                               cmat.astype(jnp.float32), chunk,
+                               bf16_intra=flags().ssd_bf16_intra)
+        new_state = {"ssm": last}
+    else:
+        da = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt_h[:, 0])           # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_h[:, 0], xh[:, 0], bmat[:, 0].astype(jnp.float32))
+        h_new = state["ssm"] * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h_new)[:, None]
+        new_state = {"ssm": h_new, "conv": new_conv}
+
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return constrain(out, "residual"), new_state
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, layers: int):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_headdim
+    return {
+        "ssm": jnp.zeros((layers, batch, nh, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((layers, batch, cfg.conv_width - 1, din + 2 * cfg.ssm_state), jnp.dtype(cfg.dtype)),
+    }

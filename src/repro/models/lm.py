@@ -1,0 +1,439 @@
+"""Decoder-only LM covering the dense / MoE / hybrid / SSM / VLM families.
+
+Entry points:
+
+  init_lm(key, cfg)                                   -> params
+  lm_logits(params, cfg, tokens, prefix_embeds=None)  -> (logits, aux_loss)
+  lm_loss(params, cfg, batch)                         -> (loss, metrics)
+  init_cache(cfg, batch, s_max)                       -> decode cache pytree
+  lm_prefill(params, cfg, tokens, cache, ...)         -> (last_logits, cache)
+  lm_decode_step(params, cfg, token, pos, cache)      -> (logits, cache)
+
+Homogeneous stacks (dense/moe/ssm/vlm) run under lax.scan over stacked
+(L, ...) layer params with optional remat; the hybrid (RG-LRU + local
+attention, 1:R pattern) unrolls a Python loop over two per-type stacks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> PyTree:
+    """One decoder block's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": L.init_norm(cfg.d_model, cfg.norm)}
+    if cfg.family == "ssm":
+        p["mixer"] = L.init_ssd(ks[0], cfg)
+        return p  # mamba2 blocks have a single mixer, no separate FFN
+    p["attn"] = L.init_attention(ks[0], cfg)
+    p["norm2"] = L.init_norm(cfg.d_model, cfg.norm)
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg)
+    return p
+
+
+def _hybrid_layout(cfg: ModelConfig) -> list[str]:
+    """Layer types, e.g. ['rec','rec','attn', ...] (1 attn per rglru_ratio+1)."""
+    kinds = []
+    period = cfg.rglru_ratio + 1
+    for i in range(cfg.n_layers):
+        kinds.append("attn" if (i % period) == period - 1 else "rec")
+    return kinds
+
+
+def init_lm(key, cfg: ModelConfig) -> PyTree:
+    vp = vocab_padded(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (vp, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(k_head, (cfg.d_model, vp), jnp.float32) * 0.02).astype(dt)
+
+    if cfg.family == "hybrid":
+        kinds = _hybrid_layout(cfg)
+        n_rec = sum(k == "rec" for k in kinds)
+        n_att = len(kinds) - n_rec
+        kr = jax.random.split(jax.random.fold_in(k_blocks, 0), max(n_rec, 1))
+        ka = jax.random.split(jax.random.fold_in(k_blocks, 1), max(n_att, 1))
+        kf = jax.random.split(jax.random.fold_in(k_blocks, 2), cfg.n_layers)
+        rec = [
+            {"norm1": L.init_norm(cfg.d_model, cfg.norm), "mixer": L.init_rglru(kr[i], cfg)}
+            for i in range(n_rec)
+        ]
+        att = [
+            {"norm1": L.init_norm(cfg.d_model, cfg.norm), "attn": L.init_attention(ka[i], cfg)}
+            for i in range(n_att)
+        ]
+        ffn = [
+            {"norm2": L.init_norm(cfg.d_model, cfg.norm), "ffn": L.init_ffn(kf[i], cfg)}
+            for i in range(cfg.n_layers)
+        ]
+        params["rec_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *rec) if rec else {}
+        params["attn_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *att) if att else {}
+        params["ffn_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ffn)
+        return params
+
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = [_init_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, x, cfg: ModelConfig, positions, cache=None, window=0):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h, new_state = L.ssd_block(p["mixer"], L.norm(x, p["norm1"], cfg.norm), cfg, state=cache)
+        return x + h, aux, new_state
+    h, new_cache = L.attention(
+        p["attn"], L.norm(x, p["norm1"], cfg.norm), cfg, positions, cache=cache, window=window
+    )
+    x = x + h
+    hn = L.norm(x, p["norm2"], cfg.norm)
+    if cfg.family == "moe":
+        h, aux = L.moe_ffn(p["moe"], hn, cfg)
+    else:
+        h = L.ffn(p["ffn"], hn, cfg)
+    return x + h, aux, new_cache
+
+
+def _remat_policy():
+    from repro.models.perf import flags
+
+    if flags().remat_policy == "dots":
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _run_stack(params, cfg: ModelConfig, x, positions, caches=None):
+    """Scan homogeneous blocks. caches: stacked pytree or None.
+
+    Returns (x, aux_total, new_caches).
+    """
+    window = cfg.attn_window
+
+    def body(carry, scanned):
+        h, aux = carry
+        p, c = scanned
+        h2, a, c2 = _apply_block(p, h, cfg, positions, cache=c, window=window)
+        return (h2, aux + a), c2
+
+    from repro.models.perf import flags as _pf
+
+    if cfg.remat and _pf().remat_policy != "none":
+        body = jax.checkpoint(body, policy=_remat_policy())
+
+    xs = (params["blocks"], caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_caches
+
+
+def _run_hybrid(params, cfg: ModelConfig, x, positions, att_caches=None, rec_states=None):
+    """Unrolled RG-LRU / local-attention interleave (RecurrentGemma)."""
+    kinds = _hybrid_layout(cfg)
+    ir = ia = 0
+    new_att, new_rec = [], []
+    aux = jnp.zeros((), jnp.float32)
+    for li, kind in enumerate(kinds):
+        fp = jax.tree.map(lambda a, _li=li: a[_li], params["ffn_blocks"])
+        if kind == "rec":
+            rp = jax.tree.map(lambda a, _i=ir: a[_i], params["rec_blocks"])
+            st = jax.tree.map(lambda a, _i=ir: a[_i], rec_states) if rec_states is not None else None
+            h, st2 = L.rglru(rp["mixer"], L.norm(x, rp["norm1"], cfg.norm), cfg, state=st)
+            new_rec.append(st2)
+            ir += 1
+        else:
+            ap = jax.tree.map(lambda a, _i=ia: a[_i], params["attn_blocks"])
+            ca = jax.tree.map(lambda a, _i=ia: a[_i], att_caches) if att_caches is not None else None
+            h, ca2 = L.attention(
+                ap["attn"], L.norm(x, ap["norm1"], cfg.norm), cfg, positions,
+                cache=ca, window=cfg.attn_window,
+            )
+            new_att.append(ca2)
+            ia += 1
+        x = x + h
+        x = x + L.ffn(fp["ffn"], L.norm(x, fp["norm2"], cfg.norm), cfg)
+    stack = lambda lst: jax.tree.map(lambda *xs: jnp.stack(xs), *lst) if lst and lst[0] is not None else None
+    return x, aux, (stack(new_att), stack(new_rec))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence logits (train / prefill-style)
+# ---------------------------------------------------------------------------
+
+def lm_logits(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """tokens (B, S) -> (logits (B, S_total, Vpad), aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:  # VLM: stub image-patch embeddings
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "hybrid":
+        x, aux, _ = _run_hybrid(params, cfg, x, positions)
+    else:
+        x, aux, _ = _run_stack(params, cfg, x, positions)
+
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return constrain(logits, "logits"), aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: {"tokens","labels" (B,S)} (+ "prefix_embeds" for VLM).
+
+    Cross-entropy over the true vocab (padded logit columns are masked),
+    plus the MoE router auxiliary loss when applicable.
+    """
+    logits, aux = lm_logits(params, cfg, batch["tokens"], batch.get("prefix_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:, :]
+    labels = batch["labels"]
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab columns
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < cfg.vocab, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> PyTree:
+    if cfg.family == "ssm":
+        return {"state": L.init_ssd_state(cfg, batch, cfg.n_layers), "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "hybrid":
+        kinds = _hybrid_layout(cfg)
+        n_att = sum(k == "attn" for k in kinds)
+        n_rec = cfg.n_layers - n_att
+        s_window = min(s_max, cfg.attn_window) if cfg.attn_window else s_max
+        return {
+            "attn": L.init_attn_cache(cfg, batch, s_window, layers=n_att),
+            "rec": L.init_rglru_state(cfg, batch, n_rec),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    return {"attn": L.init_attn_cache(cfg, batch, s_max), "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _head_logits(params, cfg, x):
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+
+
+def lm_decode_step(params, cfg: ModelConfig, token, cache):
+    """One decode step. token (B, 1) int32; cache from init_cache.
+
+    For hybrid archs the attention cache is a ring buffer over the local
+    window (cache position = pos % window); SSM archs carry O(1) state.
+    Returns (logits (B, 1, Vpad), new_cache).
+    """
+    pos = cache["pos"]  # (B,)
+    x = jnp.take(params["embed"], token, axis=0)
+    positions = pos[:, None]
+
+    if cfg.family == "ssm":
+        def body(h, scanned):
+            p, st = scanned
+            h2, _, st2 = _apply_block(p, h, cfg, positions, cache=st)
+            return h2, st2
+        x, new_state = jax.lax.scan(body, x, (params["blocks"], cache["state"]))
+        new_cache = {"state": new_state, "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        kinds = _hybrid_layout(cfg)
+        ir = ia = 0
+        new_att_k, new_att_v, new_rec = [], [], []
+        h = x
+        for kind in kinds:
+            if kind == "rec":
+                rp = jax.tree.map(lambda a, _i=ir: a[_i], params["rec_blocks"])
+                st = jax.tree.map(lambda a, _i=ir: a[_i], cache["rec"])
+                o, st2 = L.rglru(rp["mixer"], L.norm(h, rp["norm1"], cfg.norm), cfg, state=st)
+                new_rec.append(st2)
+                ir += 1
+            else:
+                ap = jax.tree.map(lambda a, _i=ia: a[_i], params["attn_blocks"])
+                ca = {"k": cache["attn"]["k"][ia], "v": cache["attn"]["v"][ia]}
+                # ring buffer: write at pos % window; attend to all valid slots
+                o, ca2 = L.attention(
+                    ap["attn"], L.norm(h, ap["norm1"], cfg.norm), cfg, positions,
+                    cache=ca, ring=bool(cfg.attn_window),
+                )
+                new_att_k.append(ca2["k"])
+                new_att_v.append(ca2["v"])
+                ia += 1
+            h = h + o
+            fp = jax.tree.map(lambda a, _li=ir + ia - 1: a[_li], params["ffn_blocks"])
+            h = h + L.ffn(fp["ffn"], L.norm(h, fp["norm2"], cfg.norm), cfg)
+        x = h
+        new_cache = {
+            "attn": {"k": jnp.stack(new_att_k), "v": jnp.stack(new_att_v)},
+            "rec": jax.tree.map(lambda *xs: jnp.stack(xs), *new_rec),
+            "pos": pos + 1,
+        }
+    else:
+        from repro.models.perf import flags as _pf
+
+        if _pf().cache_as_carry:
+            # thread the WHOLE stacked cache as a scan carry: each layer
+            # scatters its one new K/V row in place and reads its slice --
+            # no per-layer full-slice rewrite through the ys buffer
+            kc, vc = cache["attn"]["k"], cache["attn"]["v"]
+            bidx = jnp.arange(kc.shape[1])
+
+            def body(carry, scanned):
+                h, kc, vc = carry
+                p, l = scanned
+                hn = L.norm(h, p["norm1"], cfg.norm)
+                q, k1, v1 = L._qkv(p["attn"], hn, hn, cfg)
+                q = L.rope(q, positions, cfg.rope_theta)
+                k1 = L.rope(k1, positions, cfg.rope_theta)
+                kc = kc.at[l, bidx, pos].set(k1[:, 0].astype(kc.dtype))
+                vc = vc.at[l, bidx, pos].set(v1[:, 0].astype(vc.dtype))
+                o = L.attend(p["attn"], q, kc[l], vc[l], positions, h.dtype,
+                             decode=True, window=cfg.attn_window)
+                h = h + o
+                hn2 = L.norm(h, p["norm2"], cfg.norm)
+                if cfg.family == "moe":
+                    f, _ = L.moe_ffn(p["moe"], hn2, cfg)
+                else:
+                    f = L.ffn(p["ffn"], hn2, cfg)
+                return (h + f, kc, vc), None
+
+            (x, kc, vc), _ = jax.lax.scan(
+                body, (x, kc, vc),
+                (params["blocks"], jnp.arange(cfg.n_layers)),
+            )
+            new_cache = {"attn": {"k": kc, "v": vc}, "pos": pos + 1}
+        else:
+            def body(h, scanned):
+                p, c = scanned
+                h2, _, c2 = _apply_block(p, h, cfg, positions, cache=c, window=cfg.attn_window)
+                return h2, c2
+            h, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["attn"]))
+            x = h
+            new_cache = {"attn": new_kv, "pos": pos + 1}
+
+    logits = _head_logits(params, cfg, x)
+    return constrain(logits, "logits"), new_cache
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """Full-sequence prefill: returns (last-position logits, filled cache).
+
+    The cache is produced by running the full-sequence path and emitting the
+    per-layer K/V (attention) or final state (SSM/RG-LRU).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "ssm":
+        def body(carry, p):
+            h = carry
+            hn = L.norm(h, p["norm1"], cfg.norm)
+            o, st = L.ssd_block(p["mixer"], hn, cfg, state=None)
+            return h + o, st["ssm"]
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        conv_tail = jnp.zeros(
+            (cfg.n_layers, b, cfg.conv_width - 1, cfg.ssm_expand * cfg.d_model + 2 * cfg.ssm_state),
+            jnp.dtype(cfg.dtype),
+        )
+        cache = {"state": {"ssm": states, "conv": conv_tail}, "pos": jnp.full((b,), s, jnp.int32)}
+    elif cfg.family == "hybrid":
+        kinds = _hybrid_layout(cfg)
+        ir = ia = 0
+        att_k, att_v, rec_h = [], [], []
+        win = min(s, cfg.attn_window) if cfg.attn_window else s
+        h = x
+        for kind in kinds:
+            if kind == "rec":
+                rp = jax.tree.map(lambda a, _i=ir: a[_i], params["rec_blocks"])
+                o, st = L.rglru(rp["mixer"], L.norm(h, rp["norm1"], cfg.norm), cfg, state=None)
+                rec_h.append(st["h"])
+                ir += 1
+            else:
+                ap = jax.tree.map(lambda a, _i=ia: a[_i], params["attn_blocks"])
+                hn = L.norm(h, ap["norm1"], cfg.norm)
+                o, _ = L.attention(ap["attn"], hn, cfg, positions, window=cfg.attn_window)
+                # keep the last `win` K/V, laid out so abs position a sits at
+                # ring slot a % win (decode writes at pos % win)
+                q, k, v = L._qkv(ap["attn"], hn, hn, cfg)
+                k = L.rope(k, positions, cfg.rope_theta)
+                shift = s % win
+                att_k.append(jnp.roll(k[:, -win:], shift, axis=1))
+                att_v.append(jnp.roll(v[:, -win:], shift, axis=1))
+                ia += 1
+            h = h + o
+            fp = jax.tree.map(lambda a, _li=ir + ia - 1: a[_li], params["ffn_blocks"])
+            h = h + L.ffn(fp["ffn"], L.norm(h, fp["norm2"], cfg.norm), cfg)
+        x = h
+        cache = {
+            "attn": {"k": jnp.stack(att_k), "v": jnp.stack(att_v)},
+            "rec": {
+                "h": jnp.stack(rec_h),
+                "conv": jnp.zeros((ir, b, cfg.conv_width - 1, cfg.lru_width or cfg.d_model), jnp.dtype(cfg.dtype)),
+            },
+            "pos": jnp.full((b,), s, jnp.int32),
+        }
+    else:
+        def body(carry, p):
+            h = carry
+            hn = L.norm(h, p["norm1"], cfg.norm)
+            o, _ = L.attention(p["attn"], hn, cfg, positions, window=cfg.attn_window)
+            q, k, v = L._qkv(p["attn"], hn, hn, cfg)
+            k = L.rope(k, positions, cfg.rope_theta)
+            h = h + o
+            hn2 = L.norm(h, p["norm2"], cfg.norm)
+            if cfg.family == "moe":
+                f, _ = L.moe_ffn(p["moe"], hn2, cfg)
+            else:
+                f = L.ffn(p["ffn"], hn2, cfg)
+            return h + f, {"k": k.astype(jnp.dtype(cfg.dtype)), "v": v.astype(jnp.dtype(cfg.dtype))}
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, kv = jax.lax.scan(body, x, params["blocks"])
+        cache = {"attn": kv, "pos": jnp.full((b,), s, jnp.int32)}
+
+    logits = _head_logits(params, cfg, x[:, -1:, :])
+    return constrain(logits, "logits"), cache

@@ -1,0 +1,107 @@
+"""Performance variant flags (the §Perf hillclimb switchboard).
+
+The paper-faithful baseline runs with all flags False/None. Each hillclimb
+iteration toggles one flag; `repro.launch.dryrun --flags f1,f2` compiles
+the same cell with those flags and records the roofline delta under a
+variant tag. Flags are a context-var so they bake in at trace time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    # attention: keep operands bf16 and accumulate in f32 inside the MXU
+    # instead of materializing f32 copies of Q/K/V (decode reads the whole
+    # KV cache -- the f32 convert doubles its HBM traffic)
+    bf16_accum_attention: bool = False
+    # decode cache append via scatter (in-place, slice-sized) instead of the
+    # one-hot full-slice rewrite; legal when the cache's sequence dim is
+    # unsharded (kv-heads carry the model axis)
+    scatter_cache_update: bool = False
+    # decode: thread the stacked KV cache as a scan CARRY (in-place scatter
+    # + slice reads) instead of xs->ys (which copies a full layer slice per
+    # step). Implies scatter updates; same sharding legality condition.
+    cache_as_carry: bool = False
+    # SSD intra-chunk quadratic tensors: smaller chunks / bf16 decay math
+    ssd_chunk_override: int = 0
+    ssd_bf16_intra: bool = False
+    # flash attention: bigger KV blocks (fewer accumulator round-trips)
+    flash_block_kv: int = 0
+    # decode scores in bf16 end-to-end (XLA:CPU materializes the GEMV
+    # broadcast-product; bf16 halves it). Numerics: scores rounded to bf16
+    # before softmax -- decode-only experiment
+    attn_bf16_scores: bool = False
+    # MoE: capacity factor override (dispatch tensor size ~ capacity)
+    moe_capacity_override: float = 0.0
+    # remat policy: "" = nothing_saveable (max recompute, min memory);
+    # "dots" = dots_saveable (skip recomputing matmuls in backward at the
+    # cost of keeping their outputs resident)
+    remat_policy: str = ""
+    # drop sequence-parallel residual sharding (batch-only): for SSM archs
+    # the inter-chunk associative scan otherwise spans shards and GSPMD
+    # lowers it into a storm of tiny cross-shard permutes
+    no_sp_residual: bool = False
+    # drop the explicit 2-D sharding constraint on the square-matricized
+    # momentum (let GSPMD propagate through the reshape instead)
+    smmf_no_constraint: bool = False
+    # row-parallel matmul partial sums reduced in bf16 (halves the TP
+    # all-reduce bytes; numerics note in EXPERIMENTS.md)
+    bf16_rowparallel_reduce: bool = False
+    # MoE (indivisible expert count): shard expert activations on the
+    # CAPACITY axis so GSPMD gathers the (small) F-sharded expert weights
+    # instead of the (huge) token tensor
+    moe_cap_sharding: bool = False
+    # cast the dispatched token tensor / expert activations to the model
+    # dtype before they cross the wire (default einsum output is f32)
+    moe_bf16_dispatch: bool = False
+    # pack factor P: store expert FFNs as (E*P, D, F/P) so the expert axis
+    # divides the model axis (grok: 8 experts * P=2 = 16) -> fully local
+    # expert matmuls + one tiny pair-sum reduction; the only big collective
+    # left is the token all-to-all
+    moe_expert_pack: int = 0
+
+
+_FLAGS: contextvars.ContextVar[PerfFlags] = contextvars.ContextVar("perf_flags", default=PerfFlags())
+
+
+def flags() -> PerfFlags:
+    return _FLAGS.get()
+
+
+@contextlib.contextmanager
+def perf_flags(**kw):
+    tok = _FLAGS.set(PerfFlags(**kw))
+    try:
+        yield
+    finally:
+        _FLAGS.reset(tok)
+
+
+def parse_flags(spec: str) -> dict:
+    """'bf16_accum_attention,ssd_chunk_override=128' -> kwargs dict."""
+    out: dict = {}
+    if not spec:
+        return out
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            cur = getattr(PerfFlags(), k)
+            if isinstance(cur, bool):
+                out[k] = v.lower() in ("1", "true")
+            elif isinstance(cur, float):
+                out[k] = float(v)
+            elif isinstance(cur, str):
+                out[k] = v
+            else:
+                out[k] = int(v)
+        else:
+            out[part] = True
+    return out

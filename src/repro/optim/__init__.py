@@ -1,0 +1,26 @@
+from repro.optim.adafactor import adafactor
+from repro.optim.adam import adam, adamw
+from repro.optim.base import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    optimizer_state_bytes,
+)
+from repro.optim.came import came
+from repro.optim.sgd import sgd
+from repro.optim.sm3 import sm3
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "optimizer_state_bytes",
+    "adam",
+    "adamw",
+    "adafactor",
+    "came",
+    "sgd",
+    "sm3",
+]

@@ -1,0 +1,17 @@
+"""Helper: map a per-leaf function over several state trees safely.
+
+Optimizer states may store a *subtree* (e.g. a tuple of per-axis accumulators)
+per parameter leaf. ``multimap`` flattens against the params/grads treedef and
+returns one output tree per output of ``fn`` — no is_leaf ambiguity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def multimap(fn, ref_tree, *trees, nout: int):
+    flat_ref, treedef = jax.tree.flatten(ref_tree)
+    flats = [treedef.flatten_up_to(t) for t in trees]
+    results = [fn(r, *(f[i] for f in flats)) for i, r in enumerate(flat_ref)]
+    return tuple(treedef.unflatten([res[k] for res in results]) for k in range(nout))

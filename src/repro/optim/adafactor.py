@@ -1,0 +1,97 @@
+"""Adafactor baseline (Shazeer & Stern 2018), faithful to the paper's setup.
+
+Factors the second moment of every rank>=2 tensor over its *last two* axes
+(slicing leading axes, as the SMMF paper describes for CNNs / stacked experts:
+memory O(prod_{r<d-1} n_r * (n_{d-1}+n_d))). Rank<=1 tensors keep a full
+second moment. First moment is optional (the SMMF paper runs Adafactor with
+beta1=0.9, so we default it on to match their comparisons).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation, as_schedule
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    m: dict      # first moment (full) or size-0 placeholder
+    vr: dict     # row statistics  (..., n_{d-1})
+    vc: dict     # col statistics  (..., n_d)
+    vfull: dict  # full second moment for rank<=1 leaves, else size-0
+
+
+_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor(
+    lr=1e-3,
+    beta1: float | None = 0.9,
+    decay_rate: float = -0.8,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    lr_fn = as_schedule(lr)
+    factored = lambda p: p.ndim >= 2
+
+    def init(params):
+        def mk(p):
+            m = jnp.zeros(p.shape, jnp.float32) if beta1 is not None else _EMPTY()
+            if factored(p):
+                vr = jnp.zeros(p.shape[:-1], jnp.float32)
+                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                vfull = _EMPTY()
+            else:
+                vr, vc = _EMPTY(), _EMPTY()
+                vfull = jnp.zeros(p.shape, jnp.float32)
+            return m, vr, vc, vfull
+
+        m, vr, vc, vfull = multimap(mk, params, nout=4)
+        return AdafactorState(jnp.zeros((), jnp.int32), m, vr, vc, vfull)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2t = 1.0 - jnp.power(t, decay_rate)
+        lr_t = lr_fn(step)
+
+        def upd(g, m, vr, vc, vfull, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            g2 = g * g + eps1
+            if factored(p):
+                vr2 = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                vc2 = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr2, axis=-1, keepdims=True)
+                vhat = vr2[..., :, None] * vc2[..., None, :] / (denom[..., None] + eps1)
+                vfull2 = vfull
+            else:
+                vfull2 = beta2t * vfull + (1 - beta2t) * g2
+                vhat = vfull2
+                vr2, vc2 = vr, vc
+            u = g / jnp.sqrt(vhat + eps1)
+            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)  # update clipping, d=1.0
+            if beta1 is not None:
+                m2 = beta1 * m + (1 - beta1) * u
+                u = m2
+            else:
+                m2 = m
+            return -lr_t * u, m2, vr2, vc2, vfull2
+
+        updates, m, vr, vc, vfull = multimap(
+            upd, grads, state.m, state.vr, state.vc, state.vfull, params, nout=5
+        )
+        return updates, AdafactorState(step, m, vr, vc, vfull)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,63 @@
+"""Adam / AdamW baselines (Kingma & Ba 2014; Loshchilov & Hutter 2019)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation, as_schedule
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adam(
+    lr=1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    bias_correction: bool = True,
+    decoupled_weight_decay: bool = False,
+) -> GradientTransformation:
+    lr_fn = as_schedule(lr)
+
+    def init(params):
+        (m,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
+        (v,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
+        return AdamState(jnp.zeros((), jnp.int32), m, v)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            if weight_decay and not decoupled_weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)  # Adam-style decay (paper Algo 6)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            if bias_correction:
+                mhat = m2 / (1 - b1**t)
+                vhat = v2 / (1 - b2**t)
+            else:
+                mhat, vhat = m2, v2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and decoupled_weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)  # AdamW (paper Algo 7)
+            return u, m2, v2
+
+        updates, m, v = multimap(upd, grads, state.m, state.v, params, nout=3)
+        return updates, AdamState(step, m, v)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> GradientTransformation:
+    return adam(lr, b1, b2, eps, weight_decay=weight_decay, decoupled_weight_decay=True)

@@ -1,0 +1,100 @@
+"""Minimal from-scratch optax-style optimizer API.
+
+optax is not available in this environment, so the framework defines its own
+``GradientTransformation`` protocol:
+
+  init(params) -> state
+  update(grads, state, params) -> (updates, new_state)
+
+``updates`` are *deltas* to be added to params (they already include the
+negative learning rate), matching optax semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_bytes
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransformation:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates, preserving param dtype (updates may be f32)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+class ChainState(NamedTuple):
+    inner: tuple
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like optax.chain)."""
+
+    def init(params):
+        return ChainState(tuple(t.init(params) for t in transforms))
+
+    def update(grads, state, params):
+        new_states = []
+        for t, s in zip(transforms, state.inner):
+            grads, s = t.update(grads, s, params)
+            new_states.append(s)
+        return grads, ChainState(tuple(new_states))
+
+    return GradientTransformation(init, update)
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ClipState()
+
+    def update(grads, state, params=None):
+        del params
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), state
+
+    return GradientTransformation(init, update)
+
+
+def as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def optimizer_state_bytes(state: PyTree) -> int:
+    """Bytes held by persistent optimizer state (the paper's 'optimizer memory')."""
+    return tree_bytes(state)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,115 @@
+"""CAME baseline (Luo et al. 2023): confidence-guided Adafactor variant.
+
+Keeps Adafactor's factored second moment, a full first moment, and a
+*factored confidence* term U_t = EMA_{beta3} of (m_t - u_t)^2, used to rescale
+the momentum-based update. Rank>=2 tensors factored over last two axes;
+rank<=1 kept full. Memory ~ Adafactor + full first moment (matches paper's
+tables where CAME >= Adafactor).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation, as_schedule
+
+
+class CAMEState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    vr: dict
+    vc: dict
+    vfull: dict
+    ur: dict   # confidence row stats
+    uc: dict   # confidence col stats
+    ufull: dict
+
+
+_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def came(
+    lr=1e-3,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    beta3: float = 0.9999,
+    eps1: float = 1e-30,
+    eps2: float = 1e-16,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    lr_fn = as_schedule(lr)
+    factored = lambda p: p.ndim >= 2
+
+    def init(params):
+        def mk(p):
+            m = jnp.zeros(p.shape, jnp.float32)
+            if factored(p):
+                vr = jnp.zeros(p.shape[:-1], jnp.float32)
+                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                ur = jnp.zeros(p.shape[:-1], jnp.float32)
+                uc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                vfull = _EMPTY()
+                ufull = _EMPTY()
+            else:
+                vr = vc = ur = uc = _EMPTY()
+                vfull = jnp.zeros(p.shape, jnp.float32)
+                ufull = jnp.zeros(p.shape, jnp.float32)
+            return m, vr, vc, vfull, ur, uc, ufull
+
+        m, vr, vc, vfull, ur, uc, ufull = multimap(mk, params, nout=7)
+        return CAMEState(jnp.zeros((), jnp.int32), m, vr, vc, vfull, ur, uc, ufull)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def recon(r, c):
+            denom = jnp.mean(r, axis=-1, keepdims=True)
+            return r[..., :, None] * c[..., None, :] / (denom[..., None] + eps1)
+
+        def upd(g, m, vr, vc, vfull, ur, uc, ufull, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            g2 = g * g + eps1
+            if factored(p):
+                vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                vhat = recon(vr2, vc2)
+                vfull2 = vfull
+            else:
+                vfull2 = beta2 * vfull + (1 - beta2) * g2
+                vhat = vfull2
+                vr2, vc2 = vr, vc
+            u = g / jnp.sqrt(vhat + eps1)
+            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
+            m2 = beta1 * m + (1 - beta1) * u
+            # confidence: instability of momentum vs update
+            inst = (u - m2) ** 2 + eps2
+            if factored(p):
+                ur2 = beta3 * ur + (1 - beta3) * jnp.mean(inst, axis=-1)
+                uc2 = beta3 * uc + (1 - beta3) * jnp.mean(inst, axis=-2)
+                uhat = recon(ur2, uc2)
+                ufull2 = ufull
+            else:
+                ufull2 = beta3 * ufull + (1 - beta3) * inst
+                uhat = ufull2
+                ur2, uc2 = ur, uc
+            out = -lr_t * m2 / jnp.sqrt(uhat + eps2)
+            return out, m2, vr2, vc2, vfull2, ur2, uc2, ufull2
+
+        updates, m, vr, vc, vfull, ur, uc, ufull = multimap(
+            upd, grads, state.m, state.vr, state.vc, state.vfull, state.ur, state.uc, state.ufull,
+            params, nout=8,
+        )
+        return updates, CAMEState(step, m, vr, vc, vfull, ur, uc, ufull)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,44 @@
+"""SGD (+momentum) baseline."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation, as_schedule
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+
+
+def sgd(lr=1e-2, momentum: float = 0.0, weight_decay: float = 0.0) -> GradientTransformation:
+    lr_fn = as_schedule(lr)
+
+    def init(params):
+        if momentum:
+            (m,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
+        else:
+            (m,) = multimap(lambda p: (jnp.zeros((0,), jnp.float32),), params, nout=1)
+        return SGDState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                m2 = momentum * m + g
+                return -lr_t * m2, m2
+            return -lr_t * g, m
+
+        updates, m = multimap(upd, grads, state.m, params, nout=2)
+        return updates, SGDState(step, m)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,68 @@
+"""SM3 baseline (Anil, Gupta, Koren & Singer 2019).
+
+SM3-II with per-axis cover sets: for a rank-d tensor, keeps one accumulator
+vector per axis (memory O(sum_r n_r)). Optional momentum (the SMMF paper runs
+SM3 with beta1; momentum then dominates SM3's memory — matching the paper's
+tables where SM3 ~= Adafactor on Transformers).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.optim._multimap import multimap
+from repro.optim.base import GradientTransformation, as_schedule
+
+
+class SM3State(NamedTuple):
+    step: jnp.ndarray
+    m: dict    # optional momentum (full)
+    acc: dict  # per-leaf tuple of per-axis accumulator vectors
+
+
+def sm3(lr=1e-3, beta1: float | None = 0.9, eps: float = 1e-30) -> GradientTransformation:
+    lr_fn = as_schedule(lr)
+
+    def init(params):
+        def mk(p):
+            shape = p.shape if p.ndim > 0 else (1,)
+            acc = tuple(jnp.zeros((n,), jnp.float32) for n in shape)
+            m = jnp.zeros(p.shape, jnp.float32) if beta1 is not None else jnp.zeros((0,), jnp.float32)
+            return m, acc
+
+        m, acc = multimap(mk, params, nout=2)
+        return SM3State(jnp.zeros((), jnp.int32), m, acc)
+
+    def update(grads, state, params):
+        del params
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, acc):
+            g = g.astype(jnp.float32)
+            shape = g.shape if g.ndim > 0 else (1,)
+            gr = g.reshape(shape)
+            nu = None
+            for ax, a in enumerate(acc):
+                bshape = [1] * len(shape)
+                bshape[ax] = shape[ax]
+                ab = a.reshape(bshape)
+                nu = ab if nu is None else jnp.minimum(nu, ab)
+            nu = nu + gr * gr
+            new_acc = tuple(
+                jnp.max(nu, axis=tuple(i for i in range(len(shape)) if i != ax)) for ax in range(len(shape))
+            )
+            u = (gr / (jnp.sqrt(nu) + eps)).reshape(g.shape)
+            if beta1 is not None:
+                m2 = beta1 * m + (1 - beta1) * u
+                u = m2
+            else:
+                m2 = m
+            return -lr_t * u, m2, new_acc
+
+        updates, m, acc = multimap(upd, grads, state.m, state.acc, nout=3)
+        return updates, SM3State(step, m, acc)
+
+    return GradientTransformation(init, update)

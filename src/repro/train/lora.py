@@ -1,0 +1,89 @@
+"""LoRA fine-tuning (Hu et al. 2021) — the paper's LLaMA-7b setup (Table 4,
+Appendix K): freeze base weights, train rank-r adapters with SMMF, whose
+square-matricized factorization applies to the adapter matrices like any
+other tensor (A (d, r) and B (r, k) square-matricize to near-square).
+
+Functional API matching the rest of the framework:
+
+  lora_init(key, params, targets, rank)   -> adapters pytree
+  lora_merge(params, adapters, scale)     -> effective params (W + s*A@B)
+  lora_train_step(...)                    -> grads flow ONLY to adapters
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+DEFAULT_TARGETS = r"(attn/w[qkvo]|ffn/w[igo])$"
+
+
+def _match(path: str, targets: str) -> bool:
+    return re.search(targets, path) is not None
+
+
+def lora_init(key, params: PyTree, targets: str = DEFAULT_TARGETS, rank: int = 8) -> dict:
+    """Adapters as a flat {path: {"a", "b"}} dict (checkpoint-friendly).
+
+    One (A, B) pair per matching >=2-D leaf. A ~ N(0, 1/r), B = 0 (so the
+    initial adapted model equals the base model). Stacked (L, ...) leaves
+    get stacked adapters; >2-D leaves adapt their last two axes."""
+    from repro.utils.tree import tree_map_with_path
+
+    adapters: dict = {}
+
+    def _mk(path, leaf):
+        if _match(path, targets) and leaf.ndim >= 2:
+            *lead, n, m = leaf.shape
+            k1 = jax.random.fold_in(key, len(adapters))
+            adapters[path] = {
+                "a": jax.random.normal(k1, (*lead, n, rank), jnp.float32) / rank,
+                "b": jnp.zeros((*lead, rank, m), jnp.float32),
+            }
+        return leaf
+
+    tree_map_with_path(_mk, params)
+    return adapters
+
+
+def lora_merge(params: PyTree, adapters: dict, scale: float = 1.0) -> PyTree:
+    """Effective weights W + scale * (A @ B) on adapted leaves."""
+    from repro.utils.tree import tree_map_with_path
+
+    def _one(path, w):
+        ad = adapters.get(path)
+        if ad is None:
+            return w
+        delta = jnp.einsum("...nr,...rm->...nm", ad["a"], ad["b"]) * scale
+        return (w.astype(jnp.float32) + delta).astype(w.dtype)
+
+    return tree_map_with_path(_one, params)
+
+
+def make_lora_train_step(cfg, opt, loss_fn, scale: float = 1.0):
+    """(base_params, adapters, opt_state, batch) -> (adapters, opt_state, metrics).
+
+    Gradients are taken w.r.t. the adapters only; the optimizer state covers
+    only adapter tensors — with SMMF on top, fine-tuning state is doubly
+    small (the paper reports 3.9 MiB for LLaMA-7b vs Adam's 153 MiB).
+    """
+
+    def step(base_params, adapters, opt_state, batch):
+        def compute(ad):
+            merged = lora_merge(base_params, ad, scale)
+            loss, metrics = loss_fn(merged, cfg, batch)
+            return loss, metrics
+
+        (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(adapters)
+        updates, opt_state = opt.update(grads, opt_state, adapters)
+        from repro.optim.base import apply_updates
+
+        adapters = apply_updates(adapters, updates)
+        return adapters, opt_state, metrics
+
+    return step

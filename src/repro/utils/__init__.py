@@ -1,0 +1,3 @@
+from repro.utils.tree import tree_bytes, tree_count, tree_map_with_path
+
+__all__ = ["tree_bytes", "tree_count", "tree_map_with_path"]

@@ -1,0 +1,100 @@
+"""Direct NumPy port of the paper's reference PyTorch SMMF (Appendix M).
+
+Used as the faithfulness oracle: the JAX implementation must produce the
+same parameter trajectories.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def get_effective_shape(numel: int) -> tuple[int, int]:
+    sqrt_num = int(numel ** 0.5) ** 2
+    if numel == sqrt_num:
+        s = int(numel ** 0.5)
+        return (s, s)
+    for i in reversed(range(1, int(numel ** 0.5) + 1)):
+        if numel % i == 0:
+            return (numel // i, i)
+    return (numel, 1)
+
+
+def _nnmf(matrix: np.ndarray):
+    r = matrix.sum(axis=1)
+    c = matrix.sum(axis=0)
+    if matrix.shape[0] < matrix.shape[1]:
+        s = r.sum()
+        if s != 0:
+            r = r / s
+    else:
+        s = c.sum()
+        if s != 0:
+            c = c / s
+    return r, c
+
+
+def _unnmf(rc) -> np.ndarray:
+    return np.outer(rc[0], rc[1])
+
+
+class RefSMMF:
+    """Reference optimizer (paper Appendix M), NumPy, eager per-tensor."""
+
+    def __init__(self, shapes: dict, lr=1e-3, beta=0.9, eps=1e-8,
+                 weight_decay=0.0, decay_rate=-0.5, growth_rate=0.999,
+                 vector_reshape=True, weight_decay_mode="adamw"):
+        self.lr, self.beta, self.eps = lr, beta, eps
+        self.wd, self.gamma, self.lam = weight_decay, decay_rate, growth_rate
+        self.vector_reshape = vector_reshape
+        self.mode = weight_decay_mode
+        self.state: dict = {}
+        for name, shape in shapes.items():
+            squeezed = [s for s in shape if s != 1]
+            dimension = len(squeezed)
+            fact = not (dimension == 1 and not self.vector_reshape)
+            numel = int(np.prod(shape)) if shape else 1
+            st = {"step": 1, "fact": fact}
+            if fact:
+                eff = get_effective_shape(numel)
+                st["eff"] = eff
+                st["rm"] = np.zeros(eff[0])
+                st["cm"] = np.zeros(eff[1])
+                st["sign"] = np.zeros(eff, dtype=bool)
+                st["rv"] = np.zeros(eff[0])
+                st["cv"] = np.zeros(eff[1])
+            else:
+                st["m"] = np.zeros(shape)
+                st["v"] = np.zeros(shape)
+            self.state[name] = st
+
+    def step(self, params: dict, grads: dict) -> dict:
+        out = {}
+        for name, p in params.items():
+            g = grads[name].astype(np.float64).astype(np.float32)
+            st = self.state[name]
+            if self.wd and self.mode == "adam":
+                g = g + self.wd * p
+            elif self.wd and self.mode == "adamw":
+                p = p * (1 - self.lr * self.wd)
+            t = st["step"]
+            beta_m = self.beta * self.lam ** (t - 1.0)
+            beta_v = 1.0 - t ** self.gamma
+            if st["fact"]:
+                gm = g.reshape(st["eff"])
+                m = _unnmf((st["rm"], st["cm"]))
+                m = np.where(st["sign"], m, -m)
+                v = _unnmf((st["rv"], st["cv"]))
+                m = beta_m * m + (1 - beta_m) * gm
+                v = beta_v * v + (1 - beta_v) * gm * gm
+                st["sign"] = m >= 0
+                st["rm"], st["cm"] = _nnmf(np.abs(m))
+                st["rv"], st["cv"] = _nnmf(v)
+                upd = (m / (np.sqrt(v) + self.eps)).reshape(p.shape)
+            else:
+                st["m"] = beta_m * st["m"] + (1 - beta_m) * g
+                st["v"] = beta_v * st["v"] + (1 - beta_v) * g * g
+                upd = st["m"] / (np.sqrt(st["v"]) + self.eps)
+            st["step"] += 1
+            out[name] = p - self.lr * upd
+        return out

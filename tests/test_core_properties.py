@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the paper's core algorithms."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matricize import effective_shape, square_matricize, unmatricize
+from repro.core.nnmf import nnmf_compress, nnmf_decompress
+from repro.core.signpack import np_pack_signs, pack_signs, packed_width, unpack_signs
+
+
+# --------------------------------------------------------------------------
+# square-matricization (Algorithm 2 / Theorems 3.1-3.2)
+# --------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=200_000))
+@settings(max_examples=300, deadline=None)
+def test_effective_shape_invariants(n):
+    a, b = effective_shape(n)
+    assert a * b == n
+    assert a >= b >= 1
+    # b is the largest divisor <= sqrt(n) -> |a-b| minimal over factor pairs
+    for cand in range(b + 1, int(np.sqrt(n)) + 1):
+        assert n % cand != 0 or cand == b
+
+
+@given(st.integers(min_value=1, max_value=5000))
+@settings(max_examples=100, deadline=None)
+def test_effective_shape_minimizes_sum(n):
+    """argmin |a-b| == argmin a+b over factor pairs (Theorem 3.2)."""
+    a, b = effective_shape(n)
+    best_sum = min(d + n // d for d in range(1, int(np.sqrt(n)) + 1) if n % d == 0)
+    assert a + b == best_sum
+
+
+@given(
+    st.lists(st.integers(min_value=1, max_value=12), min_size=1, max_size=4)
+)
+@settings(max_examples=100, deadline=None)
+def test_matricize_roundtrip(dims):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(dims), jnp.float32)
+    m = square_matricize(x)
+    assert m.ndim == 2 and m.size == x.size
+    back = unmatricize(m, tuple(dims))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# NNMF (Algorithm 4/5, Lemma E.7, Theorem I.1)
+# --------------------------------------------------------------------------
+
+@given(st.integers(2, 40), st.integers(2, 40), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_nnmf_error_sums_to_zero(n, m, seed):
+    """Lemma E.7: the decompression error matrix sums to zero."""
+    rng = np.random.default_rng(seed)
+    mat = jnp.asarray(np.abs(rng.standard_normal((n, m))) + 1e-3, jnp.float32)
+    r, c = nnmf_compress(mat)
+    rec = nnmf_decompress(r, c)
+    err = np.asarray(rec - mat, np.float64)
+    assert abs(err.sum()) < 1e-2 * np.asarray(mat).sum()
+
+
+@given(st.integers(2, 30), st.integers(2, 30), st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_nnmf_exact_on_rank1(n, m, seed):
+    rng = np.random.default_rng(seed)
+    r0 = np.abs(rng.standard_normal(n)) + 0.1
+    c0 = np.abs(rng.standard_normal(m)) + 0.1
+    mat = jnp.asarray(np.outer(r0, c0), jnp.float32)
+    r, c = nnmf_compress(mat)
+    rec = np.asarray(nnmf_decompress(r, c))
+    np.testing.assert_allclose(rec, np.asarray(mat), rtol=2e-4)
+
+
+def test_nnmf_zero_matrix():
+    """Theorem I.1 edge: the all-zero matrix factorizes to zeros (no NaN)."""
+    mat = jnp.zeros((5, 7))
+    r, c = nnmf_compress(mat)
+    assert np.all(np.isfinite(np.asarray(r))) and np.all(np.isfinite(np.asarray(c)))
+    np.testing.assert_array_equal(np.asarray(nnmf_decompress(r, c)), 0.0)
+
+
+# --------------------------------------------------------------------------
+# sign bit-packing
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(0, 10_000))
+@settings(max_examples=80, deadline=None)
+def test_signpack_roundtrip(n, m, seed):
+    rng = np.random.default_rng(seed)
+    signs = rng.random((n, m)) < 0.5
+    packed = pack_signs(jnp.asarray(signs))
+    assert packed.shape == (n, packed_width(m))
+    assert packed.dtype == jnp.uint8
+    un = np.asarray(unpack_signs(packed, m))
+    np.testing.assert_array_equal(un, np.where(signs, 1.0, -1.0))
+    # numpy twin used by checkpoint tooling agrees
+    np.testing.assert_array_equal(np_pack_signs(signs), np.asarray(packed))
+
+
+@given(st.integers(1, 30), st.integers(1, 60))
+@settings(max_examples=40, deadline=None)
+def test_signpack_is_32x_smaller_than_f32(n, m):
+    from repro.core.signpack import sign_bytes
+
+    assert sign_bytes((n, m)) <= (n * m * 4) / 8 / 4 + n  # ~1/32 + row padding

@@ -1,0 +1,143 @@
+"""Sharding rules, specs, serving engine, HLO analyzer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import rules
+from repro.launch import specs as S
+from repro.models.config import SHAPES
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_fit_spec_divisibility():
+    sp = rules.fit_spec(MESH, (32, 48), ("data", "model"))
+    assert sp == P("data", "model")
+    sp = rules.fit_spec(MESH, (20, 48), ("data", "model"))  # 20 % 16 != 0
+    assert sp == P(None, "model")
+    sp = rules.fit_spec(MESH3, (128, 4), (("pod", "data"), "model"))
+    assert sp == P(("pod", "data"), None)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["pod", "multipod"])
+def test_param_shardings_cover_all_archs(arch, mesh):
+    """Every param leaf gets a legal sharding (dims divisible per axis)."""
+    cfg = get_config(arch)
+    psds = S.params_specs(cfg)
+    shardings = rules.param_shardings(mesh, cfg, psds)
+    for leaf, sh in zip(jax.tree.leaves(psds), jax.tree.leaves(shardings)):
+        spec = sh.spec
+        assert len(spec) <= len(leaf.shape)
+        for dim, want in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if want is None:
+                continue
+            size = rules._axsize(mesh, want)
+            assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["grok_1_314b", "yi_6b", "mamba2_370m"])
+def test_opt_state_shardings(arch):
+    from repro.core.smmf import smmf
+
+    cfg = get_config(arch)
+    psds = S.params_specs(cfg)
+    opt = smmf(1e-3)
+    sh = rules.opt_state_shardings(MESH, cfg, psds, opt)
+    state_sds = jax.eval_shape(opt.init, psds)
+    for leaf, s in zip(jax.tree.leaves(state_sds), jax.tree.leaves(sh)):
+        for dim, want in zip(leaf.shape, tuple(s.spec) + (None,) * 8):
+            if want is None:
+                continue
+            assert dim % rules._axsize(MESH, want) == 0, (arch, leaf.shape, s.spec)
+
+
+def test_activation_rules_modes():
+    cfg = get_config("yi_6b")
+    for mode in ("train", "prefill", "decode"):
+        rule = rules.activation_rules(MESH, cfg, mode)
+        res = rule("residual", (256, 4096, 4096))
+        assert res is not None
+        got = rule("flash_q", (16, 16, 256, 4, 8, 128))
+        if mode != "decode":
+            # yi: kv=4 indivisible, heads=32 divisible -> defer to GSPMD
+            assert got is None
+
+
+def test_cell_matrix_counts():
+    from repro.configs import all_cells
+
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2] == "run"]
+    skipped = [c for c in cells if c[2] != "run"]
+    assert len(runnable) == 32
+    assert all(c[1] == "long_500k" for c in skipped)
+    assert {c[0] for c in skipped} == {
+        "grok_1_314b", "deepseek_moe_16b", "yi_6b", "deepseek_7b",
+        "qwen1_5_4b", "nemotron_4_15b", "whisper_base", "llava_next_34b",
+    }
+
+
+def test_hloanalysis_scan_tripcount():
+    from repro.launch.hloanalysis import analyze_text
+
+    def f(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    res = analyze_text(c.as_text())
+    expect = 5 * 2 * 64 ** 3
+    assert expect <= res.flops <= 1.2 * expect
+
+
+def test_hloanalysis_collectives():
+    from repro.launch.hloanalysis import analyze_text
+
+    mesh = jax.make_mesh((1,), ("d",))
+    # trivially: unsharded single-device program has zero collectives
+    f = jax.jit(lambda x: x @ x)
+    c = f.lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    res = analyze_text(c.as_text())
+    assert sum(res.coll.values()) == 0
+
+
+def test_serving_engine_generates():
+    from repro.models import ModelConfig, init_lm
+    from repro.serving import GenerationEngine
+    from repro.serving.engine import Request
+
+    cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(params, cfg, slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32) % 64, max_new=6)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    while eng.step():
+        pass
+    for r in reqs:
+        assert r.done and len(r.out) == 6
+        assert all(0 <= t < 64 for t in r.out)
+
+
+def test_mesh_construction_shapes():
+    # run in-process only when enough devices were forced; else assert raises
+    import repro.launch.mesh as M
+
+    if jax.device_count() >= 512:
+        mesh = M.make_production_mesh(multi_pod=True)
+        assert mesh.shape == {"pod": 2, "data": 16, "model": 16}
+    else:
+        with pytest.raises(Exception):
+            M.make_production_mesh()

@@ -1,0 +1,52 @@
+"""Flash-decode Pallas kernel vs jnp oracle (shape/dtype/pos sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+
+SWEEP = [
+    # (B, S, Hq, Hkv, D, block_s)
+    (2, 128, 8, 2, 32, 64),
+    (3, 1000, 4, 4, 64, 256),
+    (1, 64, 16, 1, 128, 64),
+    (2, 513, 6, 3, 16, 128),
+    (4, 2048, 2, 2, 64, 512),
+]
+
+
+def _mk(b, s, hq, hkv, d, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    pos = jnp.asarray(rng.integers(0, s, size=(b,)), jnp.int32)
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d,bs", SWEEP)
+def test_flash_decode_matches_ref(b, s, hq, hkv, d, bs):
+    q, k, v, pos = _mk(b, s, hq, hkv, d, seed=s + hq)
+    ref = flash_decode_ref(q, k, v, pos)
+    out = flash_decode(q, k, v, pos, block_s=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_bf16_cache():
+    q, k, v, pos = _mk(2, 256, 8, 2, 64, seed=7)
+    kb, vb = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    ref = flash_decode_ref(q, kb, vb, pos)
+    out = flash_decode(q, kb, vb, pos, block_s=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
+def test_flash_decode_edge_positions():
+    """pos = 0 (single valid key) and pos = S-1 (full cache)."""
+    q, k, v, _ = _mk(2, 128, 4, 2, 32, seed=3)
+    for p in (0, 127):
+        pos = jnp.full((2,), p, jnp.int32)
+        ref = flash_decode_ref(q, k, v, pos)
+        out = flash_decode(q, k, v, pos, block_s=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,90 @@
+"""Pallas fused SMMF kernel vs the pure-jnp oracle (shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.signpack import pack_signs
+from repro.core.smmf import smmf
+from repro.kernels.smmf_update import smmf_update, smmf_update_ref
+from repro.optim.base import apply_updates
+
+SWEEP = [
+    (8, 8), (64, 48), (128, 128), (300, 280), (517, 999),
+    (1, 7), (2048, 96), (33, 1024),
+]
+
+
+def _mk(n, m, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((n, m)), dtype)
+    m0 = rng.standard_normal((n, m))
+    r_m = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    c_m = jnp.abs(jnp.asarray(rng.standard_normal(m), jnp.float32))
+    r_v = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    c_v = jnp.abs(jnp.asarray(rng.standard_normal(m), jnp.float32))
+    sign = pack_signs(jnp.asarray(m0 >= 0))
+    return g, r_m, c_m, sign, r_v, c_v
+
+
+@pytest.mark.parametrize("n,m", SWEEP)
+def test_kernel_matches_ref(n, m):
+    ops = _mk(n, m, seed=n * 1000 + m)
+    kw = dict(beta1_t=0.85, beta2_t=0.97, eps=1e-8)
+    ref = smmf_update_ref(*ops, **kw)
+    out = smmf_update(*ops, **kw)
+    names = ["u", "r_m", "c_m", "sign", "r_v", "c_v"]
+    for name, a, b in zip(names, out, ref):
+        if name == "sign":
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-6, atol=3e-6, err_msg=f"{n}x{m} {name}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    ops = list(_mk(96, 160, seed=5))
+    ops[0] = ops[0].astype(dtype)
+    kw = dict(beta1_t=0.9, beta2_t=0.5, eps=1e-8)
+    ref = smmf_update_ref(*ops, **kw)
+    out = smmf_update(*ops, **kw)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block", [(8, 128), (16, 256), (256, 512)])
+def test_kernel_block_shapes(block):
+    ops = _mk(200, 333, seed=9)
+    kw = dict(beta1_t=0.8, beta2_t=0.9, eps=1e-8)
+    ref = smmf_update_ref(*ops, **kw)
+    out = smmf_update(*ops, **kw, block=block)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]), rtol=3e-6, atol=3e-6)
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(ref[3]))
+
+
+def test_kernel_beta_extremes():
+    ops = _mk(64, 64, seed=3)
+    for b1, b2 in [(0.0, 0.0), (1.0, 1.0), (0.999, 1e-4)]:
+        ref = smmf_update_ref(*ops, beta1_t=b1, beta2_t=b2, eps=1e-8)
+        out = smmf_update(*ops, beta1_t=b1, beta2_t=b2, eps=1e-8)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                                   rtol=3e-6, atol=3e-6)
+
+
+def test_optimizer_kernel_path_matches_jnp_path():
+    """smmf(use_kernel=True) must produce identical trajectories."""
+    rng = np.random.default_rng(0)
+    p0 = {"w": jnp.asarray(rng.standard_normal((96, 64)), jnp.float32)}
+    o1, o2 = smmf(1e-2), smmf(1e-2, use_kernel=True)
+    s1, s2 = o1.init(p0), o2.init(p0)
+    p1 = p2 = p0
+    for i in range(5):
+        g = {"w": jnp.asarray(rng.standard_normal((96, 64)), jnp.float32)}
+        u1, s1 = o1.update(g, s1, p1)
+        u2, s2 = o2.update(g, s2, p2)
+        p1 = apply_updates(p1, u1)
+        p2 = apply_updates(p2, u2)
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                                   rtol=2e-6, atol=2e-6)

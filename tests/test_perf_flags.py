@@ -1,0 +1,80 @@
+"""Perf-variant flags must preserve semantics (hillclimb safety net)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, init_cache, init_lm, lm_decode_step, lm_logits, lm_loss
+from repro.models.perf import PerfFlags, parse_flags, perf_flags
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_parse_flags():
+    kw = parse_flags("bf16_accum_attention,ssd_chunk_override=128,moe_capacity_override=1.0")
+    assert kw == {"bf16_accum_attention": True, "ssd_chunk_override": 128,
+                  "moe_capacity_override": 1.0}
+    assert parse_flags("") == {}
+
+
+def test_scatter_cache_update_matches_onehot():
+    cfg = ModelConfig("t", "dense", 2, 64, 4, 128, 100, n_kv_heads=2, dtype="float32")
+    p = init_lm(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 24), 0, 100)
+
+    def decode_all(flags_kw):
+        with perf_flags(**flags_kw):
+            c = init_cache(cfg, 2, 24)
+            step = jax.jit(lambda p, t, c: lm_decode_step(p, cfg, t, c))
+            for i in range(24):
+                lg, c = step(p, toks[:, i : i + 1], c)
+        return np.asarray(lg)
+
+    a = decode_all({})
+    b = decode_all({"scatter_cache_update": True})
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_accum_attention_close():
+    cfg = ModelConfig("t", "dense", 2, 64, 4, 128, 100, n_kv_heads=2, dtype="bfloat16")
+    p = init_lm(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 24), 0, 100)
+    base, _ = jax.jit(lambda p, t: lm_logits(p, cfg, t))(p, toks)
+    with perf_flags(bf16_accum_attention=True):
+        opt, _ = jax.jit(lambda p, t: lm_logits(p, cfg, t))(p, toks)
+    # bf16 operands + f32 accumulation: small numeric drift only
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), rtol=0.05, atol=0.05)
+
+
+def test_ssd_chunk_override_matches():
+    cfg = ModelConfig("t", "ssm", 2, 64, 0, 0, 100, ssm_state=16, ssm_headdim=16,
+                      ssm_expand=2, ssm_chunk=16, dtype="float32")
+    p = init_lm(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, 100)
+    base, _ = jax.jit(lambda p, t: lm_logits(p, cfg, t))(p, toks)
+    with perf_flags(ssd_chunk_override=8):
+        alt, _ = jax.jit(lambda p, t: lm_logits(p, cfg, t))(p, toks)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(alt), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16_close():
+    from repro.models.flash import flash_attention
+
+    q = jax.random.normal(KEY, (2, 256, 8, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 256, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 256, 2, 32), jnp.bfloat16)
+    base = flash_attention(q, k, v, block_q=64, block_kv=64)
+    with perf_flags(bf16_accum_attention=True):
+        opt = flash_attention(q, k, v, block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(base, np.float32), np.asarray(opt, np.float32),
+                               rtol=0.06, atol=0.06)
+
+
+def test_moe_capacity_override_traces():
+    cfg = ModelConfig("t", "moe", 2, 64, 4, 48, 100, n_kv_heads=4, n_experts=4,
+                      top_k=2, moe_d_ff=48, dtype="float32")
+    p = init_lm(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, 100)
+    with perf_flags(moe_capacity_override=1.0):
+        loss, _ = jax.jit(lambda p, b: lm_loss(p, cfg, b))(p, {"tokens": toks, "labels": toks})
+    assert np.isfinite(float(loss))
