@@ -1,9 +1,14 @@
-"""Optimizer step-time overhead — paper Table 5.
+"""Optimizer step-time overhead — paper Table 5 — plus launch accounting.
 
 Measures the pure optimizer update (decompress -> EMA -> compress -> update)
 per step for the five optimizers on a transformer-block-sized param set,
 reporting the SMMF/Adam ratio (the paper reports 1.2-1.6x end-to-end; the
 optimizer-only ratio is the upper bound of that overhead).
+
+The ``launches`` column is the leaf-plan engine's static per-step update
+launch count: bucketed variants issue one launch per same-geometry bucket,
+the ``nobucket`` baseline one per leaf. The bucketed/per-leaf ratio is the
+acceptance metric for the engine refactor (>= 5x fewer launches here).
 """
 
 from __future__ import annotations
@@ -15,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.smmf import smmf
+from repro.launch.steps import optimizer_launch_stats
 from repro.optim import adafactor, adam, came, sm3
 from repro.optim.base import apply_updates
 
@@ -24,7 +30,9 @@ OPTS = {
     "sm3": lambda: sm3(1e-3),
     "came": lambda: came(1e-3),
     "smmf": lambda: smmf(1e-3, decay_rate=-0.8),
+    "smmf(nobucket)": lambda: smmf(1e-3, decay_rate=-0.8, bucket=False),
     "smmf(kernel)": lambda: smmf(1e-3, decay_rate=-0.8, use_kernel=True),
+    "smmf(kernel,b=4)": lambda: smmf(1e-3, decay_rate=-0.8, use_kernel=True, blocks=4),
 }
 
 
@@ -38,11 +46,13 @@ def _params(d=1024, layers=4):
     return p
 
 
-def bench(name: str, iters: int = 20) -> float:
+def bench(name: str, iters: int = 20) -> tuple[float, int | None]:
     opt = OPTS[name]()
     params = _params()
     state = opt.init(params)
     grads = jax.tree.map(lambda p: p * 0.01, params)
+    stats = optimizer_launch_stats(opt, params)
+    launches = stats["update_launches"] if stats else None
 
     @jax.jit
     def step(params, state, grads):
@@ -55,17 +65,25 @@ def bench(name: str, iters: int = 20) -> float:
     for _ in range(iters):
         params, state = step(params, state, grads)
     jax.block_until_ready(params)
-    return (time.perf_counter() - t0) / iters * 1e3
+    return (time.perf_counter() - t0) / iters * 1e3, launches
 
 
 def main() -> None:
     base = None
-    print(f"{'optimizer':14s} {'ms/step':>9s} {'vs adam':>8s}")
+    launch = {}
+    print(f"{'optimizer':16s} {'ms/step':>9s} {'vs adam':>8s} {'launches':>9s}")
     for name in OPTS:
-        ms = bench(name)
+        ms, launches = bench(name)
+        launch[name] = launches
         if name == "adam":
             base = ms
-        print(f"{name:14s} {ms:9.2f} {ms/base:7.2f}x" if base else f"{name:14s} {ms:9.2f}")
+        ls = f"{launches:9d}" if launches is not None else f"{'-':>9s}"
+        ratio = f"{ms/base:7.2f}x" if base else ""
+        print(f"{name:16s} {ms:9.2f} {ratio} {ls}")
+    if launch.get("smmf") and launch.get("smmf(nobucket)"):
+        r = launch["smmf(nobucket)"] / launch["smmf"]
+        print(f"\nbucketed engine: {launch['smmf']} launches/step vs "
+              f"{launch['smmf(nobucket)']} per-leaf ({r:.1f}x fewer)")
     print("\n(paper Table 5: SMMF ~1.2-1.6x Adam end-to-end; optimizer-only "
           "overhead is the bound. CPU timings; TPU uses the fused Pallas kernel.)")
 

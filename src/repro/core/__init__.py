@@ -2,9 +2,10 @@
 
 from repro.core.matricize import effective_shape, square_matricize, unmatricize
 from repro.core.nnmf import nnmf_compress, nnmf_decompress
+from repro.core.plan import Bucket, LeafPlan, build_buckets, smmf_planner
 from repro.core.schedules import beta1_schedule, beta2_schedule
 from repro.core.signpack import pack_signs, unpack_signs
-from repro.core.smmf import SMMFState, smmf
+from repro.core.smmf import SMMFState, smmf, smmf_local
 
 __all__ = [
     "effective_shape",
@@ -17,5 +18,10 @@ __all__ = [
     "pack_signs",
     "unpack_signs",
     "smmf",
+    "smmf_local",
     "SMMFState",
+    "LeafPlan",
+    "Bucket",
+    "build_buckets",
+    "smmf_planner",
 ]

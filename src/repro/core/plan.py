@@ -1,0 +1,207 @@
+"""Static per-leaf update plans and geometry bucketing.
+
+The SMMF paper's factorization applies uniformly to any tensor rank, but a
+naive implementation dispatches every pytree leaf through a Python loop and
+launches one (tiny) fused op per leaf. This module computes, once at
+optimizer ``init``, a static :class:`LeafPlan` per parameter — factorized
+vs. dense-fallback, ``(blocks, rows, cols)`` working geometry, fused-kernel
+eligibility and pad geometry, sharding-constraint kind — and groups
+same-geometry leaves into :class:`Bucket` s. The update engine
+(``repro.optim.engine``) then stacks each bucket's leaves along a leading
+axis and runs **one** vectorized (or fused Pallas) launch per bucket instead
+of one per leaf: a Transformer step's hundreds of per-leaf ops collapse into
+a handful of large ones.
+
+Everything here is plain Python over static shapes: it runs at trace time
+only and never appears in the compiled graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from repro.core.matricize import effective_shape
+from repro.core.signpack import packed_width
+
+
+def block_shape(numel: int, blocks: int) -> tuple[int, int, int]:
+    """(B, rows_per_block, cols) for the blockwise SMMF factorization.
+
+    ``blocks=1`` is the paper-faithful global variant. For ``blocks=K`` the
+    square matrix is split into K row-blocks factorized independently; if the
+    row axis is indivisible each of the K equal element-chunks is
+    re-matricized to its own square, and if the element count itself is
+    indivisible the plan degrades gracefully to global.
+    """
+    n, m = effective_shape(numel)
+    if blocks <= 1:
+        return 1, n, m
+    if n % blocks == 0:
+        return blocks, n // blocks, m
+    if numel % blocks == 0:
+        n2, m2 = effective_shape(numel // blocks)
+        return blocks, n2, m2
+    return 1, n, m  # indivisible: degrade gracefully to global
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static update recipe for one parameter leaf.
+
+    ``geometry`` is the per-leaf working shape the update math runs in:
+    ``(blocks, rows, cols)`` for square-matricized SMMF leaves, the native
+    shape for last-two-axes (Adafactor/CAME) and axis-cover (SM3) leaves,
+    and ``(numel,)`` for dense fallback leaves. Leaves sharing
+    ``(factorized, geometry)`` are bucketable into one stacked launch.
+    """
+
+    index: int                      # position in the flattened params
+    shape: tuple[int, ...]          # original leaf shape
+    factorized: bool                # factorized vs dense-fallback
+    geometry: tuple[int, ...]       # per-leaf working geometry (see above)
+    blocks: int = 1                 # SMMF blockwise count (B)
+    kernel_ok: bool = False         # fused Pallas kernel eligible
+    constraint: str | None = None   # ctx.constrain kind for the working matrix
+
+    @property
+    def numel(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bucket_key(self) -> str:
+        kind = "fac" if self.factorized else "dense"
+        return f"{kind}:" + "x".join(map(str, self.geometry))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A group of same-geometry leaves updated by one stacked launch."""
+
+    key: str
+    factorized: bool
+    geometry: tuple[int, ...]
+    plans: tuple[LeafPlan, ...]
+
+    @property
+    def size(self) -> int:
+        return len(self.plans)
+
+    @property
+    def indices(self) -> tuple[int, ...]:
+        return tuple(p.index for p in self.plans)
+
+    @property
+    def kernel_ok(self) -> bool:
+        return self.factorized and all(p.kernel_ok for p in self.plans)
+
+
+def build_buckets(plans: Sequence[LeafPlan], bucket: bool = True) -> tuple[Bucket, ...]:
+    """Group plans by (factorized, geometry), preserving first-seen order.
+
+    ``bucket=False`` gives the per-leaf baseline: one single-leaf bucket per
+    parameter (key suffixed with the leaf index so state names stay unique).
+    """
+    groups: dict[str, list[LeafPlan]] = {}
+    for p in plans:
+        key = p.bucket_key if bucket else f"{p.bucket_key}@{p.index}"
+        groups.setdefault(key, []).append(p)
+    return tuple(
+        Bucket(key=key, factorized=ps[0].factorized, geometry=ps[0].geometry, plans=tuple(ps))
+        for key, ps in groups.items()
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-optimizer planners
+# ---------------------------------------------------------------------------
+
+def smmf_planner(
+    blocks: int = 1,
+    vector_reshape: bool = True,
+    use_kernel: bool = False,
+) -> Callable[[int, tuple[int, ...]], LeafPlan]:
+    """Planner for square-matricized SMMF leaves.
+
+    Mirrors the reference code's policy: rank-1 tensors bypass factorization
+    unless ``vector_reshape`` (default True); scalars never factorize. The
+    fused kernel is eligible for every factorized geometry (padding to the
+    clamped tile, :func:`clamp_kernel_block`, handles lane alignment).
+    """
+
+    def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
+        numel = int(math.prod(shape)) if shape else 1
+        squeezed = [s for s in shape if s != 1]
+        factorized = numel > 1 and not (len(squeezed) <= 1 and not vector_reshape)
+        if not factorized:
+            return LeafPlan(index, shape, False, (numel,))
+        b, n, m = block_shape(numel, blocks)
+        return LeafPlan(
+            index, shape, True, (b, n, m), blocks=b,
+            kernel_ok=use_kernel, constraint="smmf_matrix",
+        )
+
+    return plan
+
+
+def lasttwo_planner() -> Callable[[int, tuple[int, ...]], LeafPlan]:
+    """Planner for Adafactor/CAME: factor rank>=2 leaves over the last two
+    axes (leading axes sliced), keep rank<=1 leaves dense."""
+
+    def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
+        numel = int(math.prod(shape)) if shape else 1
+        if len(shape) >= 2:
+            return LeafPlan(index, shape, True, shape)
+        return LeafPlan(index, shape, False, (numel,))
+
+    return plan
+
+
+def axiscover_planner() -> Callable[[int, tuple[int, ...]], LeafPlan]:
+    """Planner for SM3: one accumulator vector per axis (cover sets), so the
+    working geometry is just the native shape (scalars lift to (1,))."""
+
+    def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
+        geom = shape if shape else (1,)
+        return LeafPlan(index, shape, True, geom)
+
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# kernel geometry + state accounting helpers
+# ---------------------------------------------------------------------------
+
+def clamp_kernel_block(n: int, m: int, block: tuple[int, int]) -> tuple[int, int]:
+    """Clamp kernel tiles to the lane-padded problem so tiny layers don't
+    blow up into a full default tile (the single source of this policy —
+    kernels/smmf_update/ops.py calls it at dispatch).
+
+    Both tile dims must be positive multiples of 8 (the packed-sign tile is
+    bm/8 bytes wide); the clamp preserves that property.
+    """
+    bn, bm = block
+    if bn <= 0 or bm <= 0 or bn % 8 or bm % 8:
+        raise ValueError(f"kernel block dims must be positive multiples of 8, got {block}")
+    bn = min(bn, max(8, -(-n // 8) * 8))
+    bm = min(bm, max(128, -(-m // 128) * 128))
+    return bn, bm
+
+
+def smmf_plan_bytes(p: LeafPlan) -> int:
+    """Predicted persistent optimizer-state bytes for one SMMF leaf plan
+    (the paper's 'optimizer memory'): factor vectors + packed signs, or the
+    dense fallback's full M and V. Only meaningful for plans produced by
+    :func:`smmf_planner` (geometry (blocks, rows, cols))."""
+    if not p.factorized:
+        return 2 * 4 * p.numel
+    b, n, m = p.geometry
+    # (r_m, r_v) 2*b*n + (c_m, c_v) 2*b*m f32 vectors + packed sign bits
+    return 4 * 2 * (b * n + b * m) + b * n * packed_width(m)
+
+
+def smmf_state_bytes(plans: Sequence[LeafPlan]) -> int:
+    """Predicted persistent SMMF optimizer-state bytes for a whole plan set
+    (see :func:`smmf_plan_bytes`; SMMF planner geometries only)."""
+    return sum(smmf_plan_bytes(p) for p in plans)

@@ -33,50 +33,51 @@ Two factorization scopes:
   **zero cross-shard collectives**). State grows to K*(n_hat/K + m_hat)
   which is still O(sqrt(N)) per block.
 
+Execution is driven by the **leaf-plan engine** (repro.optim.engine): at
+``init`` every parameter gets a static LeafPlan (factorized vs fallback,
+(blocks, n, m) geometry, kernel eligibility) and same-geometry leaves are
+bucketed into stacked arrays, so ``update`` runs one vectorized launch per
+bucket instead of one per leaf. State is stored per bucket:
+
+  factors["fac:BxNxM"]  = (r_m (K*B, n), c_m (K*B, m),
+                           sign (K*B*n, pw), r_v (K*B, n), c_v (K*B, m))
+  factors["dense:NUM"]  = (m (K, NUM), v (K, NUM))   # plain-Adam fallback
+
+with K the number of leaves sharing the geometry. ``bucket=False`` recovers
+the per-leaf baseline (one single-leaf bucket per parameter).
+
 When ``use_kernel=True`` the fused Pallas TPU kernel
 (repro.kernels.smmf_update) executes decompress + EMA + sign-extract +
-row/col partial sums + update in one pass over HBM.
+row/col partial sums + update in one pass over HBM — one launch per bucket,
+composing with ``blocks=K`` (the kernel's leading batch axis carries
+buckets x blocks). Requires ``beta1`` (the momentum-free variant takes the
+unfused path).
 """
 
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.matricize import effective_shape
+from repro.core.plan import smmf_planner
 from repro.core.signpack import pack_signs, packed_width, unpack_signs
 from repro.distributed.ctx import constrain
-from repro.optim._multimap import multimap
 from repro.optim.base import GradientTransformation, as_schedule
+from repro.optim.engine import DEFAULT_KERNEL_BLOCK, LeafPlanEngine
 
 PyTree = Any
 
 
 class SMMFState(NamedTuple):
     step: jnp.ndarray
-    factors: PyTree  # per-leaf tuple (r_m, c_m, sign_packed, r_v, c_v)
-
-
-def _block_shape(numel: int, blocks: int) -> tuple[int, int, int]:
-    """(B, rows_per_block, cols) for the blockwise factorization."""
-    n, m = effective_shape(numel)
-    if blocks <= 1:
-        return 1, n, m
-    if n % blocks == 0:
-        return blocks, n // blocks, m
-    if numel % blocks == 0:
-        # re-matricize each of the `blocks` equal chunks to its own square
-        n2, m2 = effective_shape(numel // blocks)
-        return blocks, n2, m2
-    return 1, n, m  # indivisible: degrade gracefully to global
+    factors: PyTree  # dict: bucket key -> stacked factor tuple (see module doc)
 
 
 def _compress(mat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Blockwise Algo 4: mat (B, n, m) non-negative -> r (B, n), c (B, m).
+    """Batched Algo 4: mat (B, n, m) non-negative -> r (B, n), c (B, m).
 
-    Normalizes the *smaller* vector per block (paper Algo 4) so the outer
+    Normalizes the *smaller* vector per matrix (paper Algo 4) so the outer
     product keeps the matrix scale with a single division.
     """
     _, n, m = mat.shape
@@ -92,7 +93,7 @@ def _compress(mat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def _decompress(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """Blockwise Algo 3: r (B, n), c (B, m) -> (B, n, m)."""
+    """Batched Algo 3: r (B, n), c (B, m) -> (B, n, m)."""
     return r[:, :, None] * c[:, None, :]
 
 
@@ -107,12 +108,20 @@ def smmf(
     weight_decay_mode: str = "adamw",
     blocks: int = 1,
     use_kernel: bool = False,
+    bucket: bool = True,
+    kernel_block: tuple[int, int] = DEFAULT_KERNEL_BLOCK,
+    interpret: bool | None = None,
 ) -> GradientTransformation:
     """Build the SMMF gradient transformation.
 
     Args mirror the paper's reference implementation. ``decay_rate`` is the
     gamma of Algo 8 (-0.5 CNN / -0.8 Transformer recommended), ``growth_rate``
     the lambda. ``blocks`` > 1 selects the beyond-paper local variant.
+
+    Engine knobs: ``bucket`` stacks same-geometry leaves into one launch
+    (False = per-leaf baseline); ``use_kernel`` routes factored buckets
+    through the fused Pallas kernel with tile ``kernel_block``;
+    ``interpret=None`` auto-selects interpreter mode off-TPU.
     """
     if isinstance(lr, (int, float)) and lr < 0.0:
         raise ValueError(f"lr must be >= 0, got {lr}")
@@ -124,105 +133,123 @@ def smmf(
         raise ValueError(f"growth_rate must be in [0,1], got {growth_rate}")
     if weight_decay_mode not in ("adam", "adamw"):
         raise ValueError(f"weight_decay_mode must be adam|adamw, got {weight_decay_mode}")
+    bn_k, bm_k = kernel_block
+    if bn_k <= 0 or bm_k <= 0 or bn_k % 8 or bm_k % 8:
+        # the packed-sign tile is bm/8 bytes wide; a non-multiple-of-8 tile
+        # mis-tiles the sign array deep inside the kernel
+        raise ValueError(f"kernel_block dims must be positive multiples of 8, got {kernel_block}")
     lr_fn = as_schedule(lr)
 
-    def _factorized(p) -> bool:
-        # Reference code: rank-1 tensors bypass factorization unless
-        # vector_reshape (default True). Scalars are never factorized.
-        squeezed = [s for s in p.shape if s != 1]
-        if len(squeezed) <= 1 and not vector_reshape:
-            return False
-        return p.size > 1
+    plan_fn = smmf_planner(
+        blocks=blocks, vector_reshape=vector_reshape,
+        # the fused kernel always computes the momentum EMA; the
+        # momentum-free variant keeps the unfused path
+        use_kernel=use_kernel and beta1 is not None,
+    )
+
+    def plan(params) -> LeafPlanEngine:
+        return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):
-        def mk(p):
-            if not _factorized(p):
-                # plain-Adam fallback leaf: full M, V (tiny tensors only)
-                m = jnp.zeros(p.shape, jnp.float32)
-                v = jnp.zeros(p.shape, jnp.float32)
-                return ((m, v),)
-            b, n, m = _block_shape(int(p.size), blocks)
-            r_m = jnp.zeros((b, n), jnp.float32)
-            c_m = jnp.zeros((b, m), jnp.float32)
-            sign = jnp.zeros((b * n, packed_width(m)), jnp.uint8)
-            r_v = jnp.zeros((b, n), jnp.float32)
-            c_v = jnp.zeros((b, m), jnp.float32)
-            return ((r_m, c_m, sign, r_v, c_v),)
-
-        (factors,) = multimap(mk, params, nout=1)
+        engine = plan(params)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            if bk.factorized:
+                b, n, m = bk.geometry
+                factors[bk.key] = (
+                    jnp.zeros((k * b, n), jnp.float32),                  # r_m
+                    jnp.zeros((k * b, m), jnp.float32),                  # c_m
+                    jnp.zeros((k * b * n, packed_width(m)), jnp.uint8),  # sign
+                    jnp.zeros((k * b, n), jnp.float32),                  # r_v
+                    jnp.zeros((k * b, m), jnp.float32),                  # c_v
+                )
+            else:
+                (numel,) = bk.geometry
+                factors[bk.key] = (
+                    jnp.zeros((k, numel), jnp.float32),  # m
+                    jnp.zeros((k, numel), jnp.float32),  # v
+                )
         return SMMFState(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params):
+        engine = plan(params)
         step = state.step + 1
         t = step.astype(jnp.float32)
         lr_t = lr_fn(step)
         beta1_t = (beta1 * jnp.power(growth_rate, t - 1.0)) if beta1 is not None else None
         beta2_t = 1.0 - jnp.power(t, decay_rate)
 
-        def upd(g, fac, p):
-            g = g.astype(jnp.float32)
-            if weight_decay and weight_decay_mode == "adam":
-                g = g + weight_decay * p.astype(jnp.float32)  # Algo 6
+        flat_g = engine.leaves(grads)
+        flat_p = engine.leaves(params)
+        if weight_decay and weight_decay_mode == "adam":
+            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+                      for g, p in zip(flat_g, flat_p)]  # Algo 6
 
-            if len(fac) == 2:  # non-factorized fallback leaf
-                m, v = fac
-                if beta1 is not None:
-                    m2 = beta1_t * m + (1.0 - beta1_t) * g
+        out_flat: list = [None] * len(flat_g)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            fac = state.factors[bk.key]
+            if bk.factorized:
+                b, n, m = bk.geometry
+                kb = k * b
+                gm = engine.gather(flat_g, bk).reshape(kb, n, m)
+                gm = constrain(gm, "smmf_matrix")
+                r_m, c_m, sign, r_v, c_v = fac
+
+                if bk.kernel_ok and beta1 is not None:
+                    from repro.kernels.smmf_update import ops as _kops
+
+                    pw = packed_width(m)
+                    u, r_m2, c_m2, sign2, r_v2, c_v2 = _kops.smmf_update_batched(
+                        gm, r_m, c_m, sign.reshape(kb, n, pw), r_v, c_v,
+                        beta1_t=beta1_t, beta2_t=beta2_t, eps=eps,
+                        block=kernel_block, interpret=interpret,
+                    )
+                    sign2 = sign2.reshape(kb * n, pw)
                 else:
-                    m2 = m
-                v2 = beta2_t * v + (1.0 - beta2_t) * g * g
-                num = m2 if beta1 is not None else g
-                u = num / (jnp.sqrt(v2) + eps)
-                out = -lr_t * u
-                if weight_decay and weight_decay_mode == "adamw":
-                    out = out - lr_t * weight_decay * p.astype(jnp.float32)  # Algo 7
-                return out, (m2, v2)
+                    # Decompression (Algo 3)
+                    v_hat = _decompress(r_v, c_v)
+                    if beta1 is not None:
+                        signs = unpack_signs(sign, m).reshape(kb, n, m)
+                        m_hat = signs * _decompress(r_m, c_m)
+                        # EMA update with the intact current gradient
+                        m_t = beta1_t * m_hat + (1.0 - beta1_t) * gm
+                    else:
+                        m_t = None
+                    v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
+                    # Compression (Algo 4)
+                    if beta1 is not None:
+                        sign2 = pack_signs((m_t >= 0).reshape(kb * n, m))
+                        r_m2, c_m2 = _compress(jnp.abs(m_t))
+                    else:
+                        sign2, r_m2, c_m2 = sign, r_m, c_m
+                    r_v2, c_v2 = _compress(v_t)
+                    num = m_t if beta1 is not None else gm
+                    u = num / (jnp.sqrt(v_t) + eps)
 
-            r_m, c_m, sign, r_v, c_v = fac
-            b, n = r_m.shape
-            m = c_m.shape[1]
-            gm = constrain(g.reshape(b, n, m), "smmf_matrix")
-
-            if use_kernel and b == 1:
-                from repro.kernels.smmf_update import ops as _kops
-
-                u2d, r_m2, c_m2, sign2, r_v2, c_v2 = _kops.smmf_update(
-                    gm[0], r_m[0], c_m[0], sign, r_v[0], c_v[0],
-                    beta1_t=beta1_t, beta2_t=beta2_t, eps=eps,
-                )
-                u = u2d[None]
-                r_m2, c_m2 = r_m2[None], c_m2[None]
-                r_v2, c_v2 = r_v2[None], c_v2[None]
+                factors[bk.key] = (r_m2, c_m2, sign2, r_v2, c_v2)
+                engine.scatter(bk, (-lr_t * u).reshape(k, b * n * m), out_flat)
             else:
-                # Decompression (Algo 3)
-                v_hat = _decompress(r_v, c_v)
+                gm = engine.gather(flat_g, bk)  # (K, numel)
+                m_, v_ = fac
                 if beta1 is not None:
-                    signs = unpack_signs(sign, m).reshape(b, n, m)
-                    m_hat = signs * _decompress(r_m, c_m)
-                    # EMA update with the intact current gradient
-                    m_t = beta1_t * m_hat + (1.0 - beta1_t) * gm
+                    m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
                 else:
-                    m_t = None
-                v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
-                # Compression (Algo 4)
-                if beta1 is not None:
-                    sign2 = pack_signs((m_t >= 0).reshape(b * n, m))
-                    r_m2, c_m2 = _compress(jnp.abs(m_t))
-                else:
-                    sign2, r_m2, c_m2 = sign, r_m, c_m
-                r_v2, c_v2 = _compress(v_t)
-                num = m_t if beta1 is not None else gm
-                u = num / (jnp.sqrt(v_t) + eps)
+                    m2 = m_
+                v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
+                num = m2 if beta1 is not None else gm
+                u = num / (jnp.sqrt(v2) + eps)
+                factors[bk.key] = (m2, v2)
+                engine.scatter(bk, -lr_t * u, out_flat)
 
-            out = -lr_t * u.reshape(g.shape)
-            if weight_decay and weight_decay_mode == "adamw":
-                out = out - lr_t * weight_decay * p.astype(jnp.float32)
-            return out, (r_m2, c_m2, sign2, r_v2, c_v2)
+        if weight_decay and weight_decay_mode == "adamw":
+            out_flat = [o - lr_t * weight_decay * p.astype(jnp.float32)
+                        for o, p in zip(out_flat, flat_p)]  # Algo 7
+        return engine.unflatten(out_flat), SMMFState(step, factors)
 
-        updates, factors = multimap(upd, grads, state.factors, params, nout=2)
-        return updates, SMMFState(step, factors)
-
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, plan=plan)
 
 
 def smmf_local(lr=1e-3, blocks: int = 16, **kw) -> GradientTransformation:

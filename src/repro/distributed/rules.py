@@ -163,16 +163,28 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
 
     def _one(path, leaf):
         shape = tuple(leaf.shape)
-        if shape in pspec_by_shape:  # full-size momentum: shard like the param
-            return pspec_by_shape[shape]
         if len(shape) == 2 and leaf.dtype == np.uint8:  # packed sign matrix
             return NamedSharding(mesh, fit_spec(mesh, shape, ("data", "model")))
-        if len(shape) == 2:
-            # SMMF factor tuple (r_m, c_m, sign, r_v, c_v): rows follow the
-            # matrix row sharding ("data"), cols the column sharding ("model")
-            idx = path.rsplit("/", 1)[-1]
-            want = "model" if idx in ("1", "4") else "data"
+        if shape in pspec_by_shape:  # full-size momentum: shard like the param
+            return pspec_by_shape[shape]
+        if len(shape) >= 3 and shape[1:] in pspec_by_shape:
+            # bucket-stacked full-size rank>=2 moment (leaf-plan engine): the
+            # param's sharding shifted one axis right, stack axis replicated.
+            # 2-D engine leaves stay on the factor-tuple heuristics below —
+            # (K, n) factor vectors must not inherit a 1-D param's spec.
+            base = pspec_by_shape[shape[1:]].spec
+            return NamedSharding(mesh, P(None, *tuple(base)))
+        parts = path.split("/")
+        if (len(shape) == 2 and len(parts) >= 2
+                and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", parts[-2])):
+            # SMMF factored-bucket tuple (r_m, c_m, sign, r_v, c_v) — the key
+            # "fac:BxNxM" identifies it (adafactor/CAME/SM3 buckets never put
+            # 2-D leaves under a 3-int fac key): rows follow the matrix row
+            # sharding ("data"), cols the column sharding ("model")
+            want = "model" if parts[-1] in ("1", "4") else "data"
             return NamedSharding(mesh, fit_spec(mesh, shape, (None, want)))
+        # everything else (stacked dense moments, row/col stats, SM3 accs):
+        # replicate — small vectors, same treatment as pre-engine layouts
         return NamedSharding(mesh, P())
 
     from repro.utils.tree import tree_map_with_path

@@ -1,23 +1,29 @@
 """Pallas TPU kernel: fused SMMF decompress -> EMA -> sign/compress -> update.
 
-Tiling: grid (n/bn, m/bm) over the square-matricized momentum. Each grid
+Operates on a batch of independently-factorized square matrices at once —
+the leading ``B`` axis carries both the blockwise (``blocks=K``) variant and
+the leaf-plan engine's *bucket* axis (K same-geometry leaves x their blocks),
+so one kernel launch updates an entire bucket.
+
+Tiling: grid (B, n/bn, m/bm) over the square-matricized momenta. Each grid
 step holds one (bn, bm) gradient tile in VMEM plus the four factor slices
 (bn / bm vectors) and the (bn, bm/8) packed sign tile, computes everything
 in-register, and writes:
 
   u tile          (bn, bm)     the unscaled update M_t/(sqrt(V_t)+eps)
   sign tile       (bn, bm/8)   new packed signs
-  row partials    (bn, 1) per grid column j  -> (n, nj) partial matrix
-  col partials    (1, bm) per grid row i     -> (ni, m) partial matrix
+  row partials    (bn, 1) per grid column j  -> (B, n, nj) partial tensor
+  col partials    (1, bm) per grid row i     -> (B, ni, m) partial tensor
 
 Partial-sum outputs avoid cross-grid-step accumulation entirely (each output
 block is written exactly once), so the kernel is safe under any grid
-traversal order; the O(n·nj + ni·m) reduction of partials happens in ops.py
+traversal order; the O(n*nj + ni*m) reduction of partials happens in ops.py
 as a trivially small jnp op.
 
 Default tile 256 x 512 (f32): working set ~= (256*512)*4 * 3 live tiles
 ~= 1.6 MiB of VMEM, well inside the ~16 MiB/core budget, with both tile dims
-multiples of the 8x128 VPU lanes.
+multiples of the 8x128 VPU lanes. ``block`` and ``interpret`` are real
+config threaded from the engine (interpret auto-selects off-TPU in ops.py).
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = (256, 512)
+
 
 def _bits3() -> jnp.ndarray:
     """(1, 1, 8) uint8 tensor [1, 2, 4, ..., 128] built in-kernel (TPU needs
@@ -52,95 +59,95 @@ def _pack_tile(nonneg: jnp.ndarray) -> jnp.ndarray:
 
 def _kernel(
     scal_ref,      # (1, 3) f32: [beta1_t, beta2_t, eps]
-    g_ref,         # (bn, bm)
-    rm_ref,        # (bn, 1)
-    cm_ref,        # (1, bm)
-    sign_ref,      # (bn, bm//8) uint8
-    rv_ref,        # (bn, 1)
-    cv_ref,        # (1, bm)
-    u_ref,         # out (bn, bm)
-    sign_out_ref,  # out (bn, bm//8)
-    rmp_ref,       # out (bn, 1)   row partials of |M_t|
-    cmp_ref,       # out (1, bm)   col partials of |M_t|
-    rvp_ref,       # out (bn, 1)
-    cvp_ref,       # out (1, bm)
+    g_ref,         # (1, bn, bm)
+    rm_ref,        # (1, bn, 1)
+    cm_ref,        # (1, 1, bm)
+    sign_ref,      # (1, bn, bm//8) uint8
+    rv_ref,        # (1, bn, 1)
+    cv_ref,        # (1, 1, bm)
+    u_ref,         # out (1, bn, bm)
+    sign_out_ref,  # out (1, bn, bm//8)
+    rmp_ref,       # out (1, bn, 1)   row partials of |M_t|
+    cmp_ref,       # out (1, 1, bm)   col partials of |M_t|
+    rvp_ref,       # out (1, bn, 1)
+    cvp_ref,       # out (1, 1, bm)
 ):
     beta1 = scal_ref[0, 0]
     beta2 = scal_ref[0, 1]
     eps = scal_ref[0, 2]
 
-    g = g_ref[...]
+    g = g_ref[0]
     bm = g.shape[1]
-    signs = _unpack_tile(sign_ref[...], bm)
+    signs = _unpack_tile(sign_ref[0], bm)
 
     # Decompression (Algo 3): rank-1 outer products of the factor slices.
-    m_hat = signs * (rm_ref[...] * cm_ref[...])
-    v_hat = rv_ref[...] * cv_ref[...]
+    m_hat = signs * (rm_ref[0] * cm_ref[0])
+    v_hat = rv_ref[0] * cv_ref[0]
 
     # EMA with the intact current gradient (decompression -> compression).
     m_t = beta1 * m_hat + (1.0 - beta1) * g
     v_t = beta2 * v_hat + (1.0 - beta2) * (g * g)
 
     # Update term.
-    u_ref[...] = m_t / (jnp.sqrt(v_t) + eps)
+    u_ref[0] = m_t / (jnp.sqrt(v_t) + eps)
 
     # Compression (Algo 4): signs + unnormalized row/col sums.
-    sign_out_ref[...] = _pack_tile(m_t >= 0)
+    sign_out_ref[0] = _pack_tile(m_t >= 0)
     am = jnp.abs(m_t)
-    rmp_ref[...] = jnp.sum(am, axis=1, keepdims=True)
-    cmp_ref[...] = jnp.sum(am, axis=0, keepdims=True)
-    rvp_ref[...] = jnp.sum(v_t, axis=1, keepdims=True)
-    cvp_ref[...] = jnp.sum(v_t, axis=0, keepdims=True)
+    rmp_ref[0] = jnp.sum(am, axis=1, keepdims=True)
+    cmp_ref[0] = jnp.sum(am, axis=0, keepdims=True)
+    rvp_ref[0] = jnp.sum(v_t, axis=1, keepdims=True)
+    cvp_ref[0] = jnp.sum(v_t, axis=0, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def smmf_update_tiles(
-    g: jnp.ndarray,
-    r_m: jnp.ndarray,
-    c_m: jnp.ndarray,
-    sign: jnp.ndarray,
-    r_v: jnp.ndarray,
-    c_v: jnp.ndarray,
+    g: jnp.ndarray,        # (B, n, m)
+    r_m: jnp.ndarray,      # (B, n)
+    c_m: jnp.ndarray,      # (B, m)
+    sign: jnp.ndarray,     # (B, n, m//8)
+    r_v: jnp.ndarray,      # (B, n)
+    c_v: jnp.ndarray,      # (B, m)
     scalars: jnp.ndarray,  # (1, 3) [beta1_t, beta2_t, eps]
     block: tuple[int, int] = DEFAULT_BLOCK,
     interpret: bool = True,
 ):
-    """Run the fused kernel on pre-padded operands.
+    """Run the fused kernel on pre-padded batched operands.
 
     Requires n % bn == 0, m % bm == 0, bm % 8 == 0 (ops.py pads).
-    Returns (u, sign_new, rm_partial (n, nj), cm_partial (ni, m),
+    Returns (u, sign_new, rm_partial (B, n, nj), cm_partial (B, ni, m),
              rv_partial, cv_partial).
     """
-    n, m = g.shape
+    bsz, n, m = g.shape
     bn, bm = block
     ni, nj = n // bn, m // bm
     pw, bpw = m // 8, bm // 8
 
-    grid = (ni, nj)
+    grid = (bsz, ni, nj)
     out_shapes = (
-        jax.ShapeDtypeStruct((n, m), jnp.float32),      # u
-        jax.ShapeDtypeStruct((n, pw), jnp.uint8),       # sign
-        jax.ShapeDtypeStruct((n, nj), jnp.float32),     # rm partials
-        jax.ShapeDtypeStruct((ni, m), jnp.float32),     # cm partials
-        jax.ShapeDtypeStruct((n, nj), jnp.float32),     # rv partials
-        jax.ShapeDtypeStruct((ni, m), jnp.float32),     # cv partials
+        jax.ShapeDtypeStruct((bsz, n, m), jnp.float32),   # u
+        jax.ShapeDtypeStruct((bsz, n, pw), jnp.uint8),    # sign
+        jax.ShapeDtypeStruct((bsz, n, nj), jnp.float32),  # rm partials
+        jax.ShapeDtypeStruct((bsz, ni, m), jnp.float32),  # cm partials
+        jax.ShapeDtypeStruct((bsz, n, nj), jnp.float32),  # rv partials
+        jax.ShapeDtypeStruct((bsz, ni, m), jnp.float32),  # cv partials
     )
     in_specs = [
-        pl.BlockSpec((1, 3), lambda i, j: (0, 0)),          # scalars
-        pl.BlockSpec((bn, bm), lambda i, j: (i, j)),        # g
-        pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),         # r_m
-        pl.BlockSpec((1, bm), lambda i, j: (0, j)),         # c_m
-        pl.BlockSpec((bn, bpw), lambda i, j: (i, j)),       # sign
-        pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),         # r_v
-        pl.BlockSpec((1, bm), lambda i, j: (0, j)),         # c_v
+        pl.BlockSpec((1, 3), lambda b, i, j: (0, 0)),             # scalars
+        pl.BlockSpec((1, bn, bm), lambda b, i, j: (b, i, j)),     # g
+        pl.BlockSpec((1, bn, 1), lambda b, i, j: (b, i, 0)),      # r_m
+        pl.BlockSpec((1, 1, bm), lambda b, i, j: (b, 0, j)),      # c_m
+        pl.BlockSpec((1, bn, bpw), lambda b, i, j: (b, i, j)),    # sign
+        pl.BlockSpec((1, bn, 1), lambda b, i, j: (b, i, 0)),      # r_v
+        pl.BlockSpec((1, 1, bm), lambda b, i, j: (b, 0, j)),      # c_v
     ]
     out_specs = [
-        pl.BlockSpec((bn, bm), lambda i, j: (i, j)),        # u
-        pl.BlockSpec((bn, bpw), lambda i, j: (i, j)),       # sign
-        pl.BlockSpec((bn, 1), lambda i, j: (i, j)),         # rm partials
-        pl.BlockSpec((1, bm), lambda i, j: (i, j)),         # cm partials
-        pl.BlockSpec((bn, 1), lambda i, j: (i, j)),         # rv partials
-        pl.BlockSpec((1, bm), lambda i, j: (i, j)),         # cv partials
+        pl.BlockSpec((1, bn, bm), lambda b, i, j: (b, i, j)),     # u
+        pl.BlockSpec((1, bn, bpw), lambda b, i, j: (b, i, j)),    # sign
+        pl.BlockSpec((1, bn, 1), lambda b, i, j: (b, i, j)),      # rm partials
+        pl.BlockSpec((1, 1, bm), lambda b, i, j: (b, i, j)),      # cm partials
+        pl.BlockSpec((1, bn, 1), lambda b, i, j: (b, i, j)),      # rv partials
+        pl.BlockSpec((1, 1, bm), lambda b, i, j: (b, i, j)),      # cv partials
     ]
     return pl.pallas_call(
         _kernel,
@@ -149,4 +156,4 @@ def smmf_update_tiles(
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
-    )(scalars, g, r_m.reshape(n, 1), c_m.reshape(1, m), sign, r_v.reshape(n, 1), c_v.reshape(1, m))
+    )(scalars, g, r_m[:, :, None], c_m[:, None, :], sign, r_v[:, :, None], c_v[:, None, :])

@@ -1,23 +1,104 @@
-"""jit'd wrapper around the fused SMMF Pallas kernel.
+"""jit'd wrappers around the fused SMMF Pallas kernel.
 
-Handles padding to tile multiples, the final (tiny) partial-sum reductions
-and Algo-4 normalization of the smaller factor, and crops outputs back to
-the true (n, m). Semantics are bit-for-bit those of ref.smmf_update_ref.
+``smmf_update_batched`` is the engine-facing entry point: it updates a batch
+of ``B`` independently-factorized square matrices (a whole same-geometry
+bucket, blocks included) in one kernel launch. It handles padding to tile
+multiples, the final (tiny) partial-sum reductions and Algo-4 normalization
+of the smaller factor per matrix, and crops outputs back to the true
+(n, m). ``smmf_update`` keeps the original single-matrix API on top of it.
+Semantics are bit-for-bit those of ref.smmf_update_ref applied per matrix.
+
+``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.core.plan import clamp_kernel_block
 from repro.core.signpack import packed_width
 from repro.kernels.smmf_update.kernel import DEFAULT_BLOCK, smmf_update_tiles
 
+# Trace-time launch counter: incremented once per pallas_call issued. Used by
+# the CLI smoke assertion (train.py --use-kernel) and the engine tests to
+# prove the fused path is actually taken (no silent fallback).
+KERNEL_LAUNCHES = 0
 
-def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
-    pr, pc = rows - x.shape[0], cols - x.shape[1]
-    if pr or pc:
-        x = jnp.pad(x, ((0, pr), (0, pc)))
-    return x
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def smmf_update_batched(
+    g: jnp.ndarray,      # (B, n, m)
+    r_m: jnp.ndarray,    # (B, n)
+    c_m: jnp.ndarray,    # (B, m)
+    sign: jnp.ndarray,   # (B, n, packed_width(m)) uint8
+    r_v: jnp.ndarray,    # (B, n)
+    c_v: jnp.ndarray,    # (B, m)
+    *,
+    beta1_t,
+    beta2_t,
+    eps: float,
+    block: tuple[int, int] | None = None,
+    interpret: bool | None = None,
+):
+    """Fused SMMF update for a batch of square-matricized (n, m) gradients.
+
+    Returns (u, r_m', c_m', sign', r_v', c_v') with unpadded shapes, leading
+    batch axis preserved. Each batch element is factorized independently
+    (per-matrix Algo-4 normalization), exactly as B separate calls would.
+    """
+    global KERNEL_LAUNCHES
+    bsz, n, m = g.shape
+    # clamp tiles to the (padded-to-lane) problem size so tiny layers don't
+    # blow up into a full 256x512 tile
+    bn, bm = clamp_kernel_block(n, m, block if block is not None else DEFAULT_BLOCK)
+    n2 = -(-n // bn) * bn
+    m2 = -(-m // bm) * bm
+    pw, pw2 = packed_width(m), m2 // 8
+
+    gp = jnp.pad(g.astype(jnp.float32), ((0, 0), (0, n2 - n), (0, m2 - m)))
+    rmp = jnp.pad(r_m, ((0, 0), (0, n2 - n)))
+    cmp_ = jnp.pad(c_m, ((0, 0), (0, m2 - m)))
+    rvp = jnp.pad(r_v, ((0, 0), (0, n2 - n)))
+    cvp = jnp.pad(c_v, ((0, 0), (0, m2 - m)))
+    sgn = jnp.pad(sign, ((0, 0), (0, n2 - n), (0, pw2 - pw)))
+    scalars = jnp.stack(
+        [jnp.asarray(beta1_t, jnp.float32), jnp.asarray(beta2_t, jnp.float32), jnp.asarray(eps, jnp.float32)]
+    ).reshape(1, 3)
+
+    KERNEL_LAUNCHES += 1
+    u, sign2, rm_part, cm_part, rv_part, cv_part = smmf_update_tiles(
+        gp, rmp, cmp_, sgn, rvp, cvp, scalars,
+        block=(bn, bm), interpret=_resolve_interpret(interpret),
+    )
+
+    r_m2 = jnp.sum(rm_part, axis=2)[:, :n]
+    c_m2 = jnp.sum(cm_part, axis=1)[:, :m]
+    r_v2 = jnp.sum(rv_part, axis=2)[:, :n]
+    c_v2 = jnp.sum(cv_part, axis=1)[:, :m]
+
+    def _norm(r, c):
+        # per-matrix Algo-4 normalization of the smaller factor
+        if n <= m:
+            tot = jnp.sum(r, axis=1, keepdims=True)
+            r = jnp.where(tot > 0, r / tot, r)
+        else:
+            tot = jnp.sum(c, axis=1, keepdims=True)
+            c = jnp.where(tot > 0, c / tot, c)
+        return r, c
+
+    r_m2, c_m2 = _norm(r_m2, c_m2)
+    r_v2, c_v2 = _norm(r_v2, c_v2)
+    sign2 = sign2[:, :n, :pw]
+    if m % 8:  # zero the padding bits of the last byte (keeps state bit-exact)
+        mask = jnp.full((pw,), 0xFF, jnp.uint8).at[-1].set((1 << (m % 8)) - 1)
+        sign2 = sign2 & mask[None, None, :]
+    return u[:, :n, :m], r_m2, c_m2, sign2, r_v2, c_v2
 
 
 def smmf_update(
@@ -31,55 +112,15 @@ def smmf_update(
     beta1_t,
     beta2_t,
     eps: float,
-    block: tuple[int, int] = DEFAULT_BLOCK,
-    interpret: bool = True,
+    block: tuple[int, int] | None = None,
+    interpret: bool | None = None,
 ):
     """Fused SMMF update for one square-matricized (n, m) gradient.
 
     Returns (u, r_m', c_m', sign', r_v', c_v') with unpadded shapes.
     """
-    n, m = g.shape
-    bn, bm = block
-    # clamp tiles to the (padded-to-lane) problem size so tiny layers don't
-    # blow up into a full 256x512 tile
-    bn = min(bn, max(8, -(-n // 8) * 8))
-    bm = min(bm, max(128, -(-m // 128) * 128))
-    n2 = -(-n // bn) * bn
-    m2 = -(-m // bm) * bm
-    pw, pw2 = packed_width(m), m2 // 8
-
-    gp = _pad_to(g.astype(jnp.float32), n2, m2)
-    rmp = jnp.pad(r_m, (0, n2 - n))
-    cmp_ = jnp.pad(c_m, (0, m2 - m))
-    rvp = jnp.pad(r_v, (0, n2 - n))
-    cvp = jnp.pad(c_v, (0, m2 - m))
-    sgn = _pad_to(sign, n2, pw2)
-    scalars = jnp.stack(
-        [jnp.asarray(beta1_t, jnp.float32), jnp.asarray(beta2_t, jnp.float32), jnp.asarray(eps, jnp.float32)]
-    ).reshape(1, 3)
-
-    u, sign2, rm_part, cm_part, rv_part, cv_part = smmf_update_tiles(
-        gp, rmp, cmp_, sgn, rvp, cvp, scalars, block=(bn, bm), interpret=interpret
+    u, r_m2, c_m2, sign2, r_v2, c_v2 = smmf_update_batched(
+        g[None], r_m[None], c_m[None], sign[None], r_v[None], c_v[None],
+        beta1_t=beta1_t, beta2_t=beta2_t, eps=eps, block=block, interpret=interpret,
     )
-
-    r_m2 = jnp.sum(rm_part, axis=1)[:n]
-    c_m2 = jnp.sum(cm_part, axis=0)[:m]
-    r_v2 = jnp.sum(rv_part, axis=1)[:n]
-    c_v2 = jnp.sum(cv_part, axis=0)[:m]
-
-    def _norm(r, c):
-        if n <= m:
-            tot = jnp.sum(r)
-            r = jnp.where(tot > 0, r / tot, r)
-        else:
-            tot = jnp.sum(c)
-            c = jnp.where(tot > 0, c / tot, c)
-        return r, c
-
-    r_m2, c_m2 = _norm(r_m2, c_m2)
-    r_v2, c_v2 = _norm(r_v2, c_v2)
-    sign2 = sign2[:n, :pw]
-    if m % 8:  # zero the padding bits of the last byte (keeps state bit-exact)
-        mask = jnp.full((pw,), 0xFF, jnp.uint8).at[-1].set((1 << (m % 8)) - 1)
-        sign2 = sign2 & mask[None, :]
-    return u[:n, :m], r_m2, c_m2, sign2, r_v2, c_v2
+    return u[0], r_m2[0], c_m2[0], sign2[0], r_v2[0], c_v2[0]

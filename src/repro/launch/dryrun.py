@@ -92,7 +92,9 @@ def parse_collectives(hlo_text: str) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf",
-             variant: str = "", flags_spec: str = "", verbose: bool = True) -> dict:
+             variant: str = "", flags_spec: str = "", verbose: bool = True,
+             use_kernel: bool = False, blocks: int | None = None,
+             bucket: bool = True) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     status = cell_status(cfg, shape)
@@ -106,10 +108,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf"
     opt = None
     if shape.kind == "train":
         gamma = -0.5 if cfg.family == "cnn" else -0.8
+        ekw = dict(use_kernel=use_kernel, bucket=bucket)
         if opt_name == "smmf":
-            opt = smmf(lr=1e-3, decay_rate=gamma)
+            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=blocks or 1, **ekw)
         elif opt_name == "smmf_local":
-            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=16)
+            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=blocks or 16, **ekw)
         elif opt_name == "adam":
             from repro.optim import adam
             opt = adam(1e-3)
@@ -184,6 +187,9 @@ def main() -> None:
     ap.add_argument("--opt", default="smmf")
     ap.add_argument("--variant", default="", help="tag suffix for perf experiments")
     ap.add_argument("--flags", default="", help="PerfFlags, e.g. bf16_accum_attention,ssd_chunk_override=128")
+    ap.add_argument("--use-kernel", action="store_true", help="fused Pallas SMMF update")
+    ap.add_argument("--blocks", type=int, default=0, help="SMMF blockwise factorization (0 = opt default)")
+    ap.add_argument("--no-bucket", action="store_true", help="per-leaf baseline (no geometry bucketing)")
     ap.add_argument("--all", action="store_true")
     args = ap.parse_args()
 
@@ -196,7 +202,9 @@ def main() -> None:
         for shape in shapes:
             for mp in meshes:
                 try:
-                    rec = run_cell(arch, shape, mp, args.opt, args.variant, args.flags)
+                    rec = run_cell(arch, shape, mp, args.opt, args.variant, args.flags,
+                                   use_kernel=args.use_kernel, blocks=args.blocks or None,
+                                   bucket=not args.no_bucket)
                     if rec["status"] != "run":
                         print(f"[{arch}.{shape}] {rec['status']}", flush=True)
                 except Exception as e:  # noqa: BLE001 - report and continue

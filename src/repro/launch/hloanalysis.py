@@ -105,6 +105,18 @@ class _Instr:
 
 
 _COMMENT = re.compile(r"/\*.*?\*/")
+_ARG_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def _arg_names(args: str) -> list[str]:
+    """Operand instruction names from an HLO arg list.
+
+    Handles both typed operands ("f32[64,64]{1,0} %dot.0, ...") and bare
+    names ("%dot.0, ..." or "dot.0, ...")."""
+    names = _ARG_NAME.findall(args)
+    if names:
+        return names
+    return [a.strip() for a in args.split(",") if a.strip()]
 
 
 def _parse_computations(text: str) -> dict[str, list[_Instr]]:
@@ -142,7 +154,8 @@ def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
     out_b, out_n = _type_bytes_numel(instr.type_str)
     # contracted dims: lhs shape at lhs_contracting_dims
     mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
-    lhs_name = instr.args.split(",")[0].strip().lstrip("%")
+    argn = _arg_names(instr.args)
+    lhs_name = argn[0] if argn else ""
     lhs_type = shapes.get(lhs_name, "")
     sm = _SHAPE.search(lhs_type)
     k = 1
@@ -157,7 +170,8 @@ def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
 
 def _conv_flops(instr: _Instr, shapes: dict[str, str]) -> float:
     out_b, out_n = _type_bytes_numel(instr.type_str)
-    rhs_name = instr.args.split(",")[1].strip().lstrip("%") if "," in instr.args else ""
+    argn = _arg_names(instr.args)
+    rhs_name = argn[1] if len(argn) > 1 else ""
     sm = _SHAPE.search(shapes.get(rhs_name, ""))
     k = 1
     if sm and sm.group(2):
@@ -236,7 +250,7 @@ def analyze_text(text: str) -> Costs:
                 continue
             if op == "scatter":
                 # in-place: traffic ~= 2x the updates operand (+ indices)
-                parts = [a.strip().lstrip("%") for a in ins.args.split(",")]
+                parts = _arg_names(ins.args)
                 ub = 0
                 for a in parts[1:]:
                     if a in shapes:
@@ -259,11 +273,13 @@ def analyze_text(text: str) -> Costs:
                     root = sub_instrs[-1] if sub_instrs else None
                     seen = 0
                     while root is not None and root.op in ("convert", "bitcast", "copy") and seen < 8:
-                        nxt = root.args.split(",")[0].strip().lstrip("%")
+                        rn = _arg_names(root.args)
+                        nxt = rn[0] if rn else ""
                         root = next((i for i in sub_instrs if i.name == nxt), None)
                         seen += 1
                     if root is not None and root.op == "dynamic-update-slice":
-                        upd = root.args.split(",")[1].strip().lstrip("%") if "," in root.args else ""
+                        rn = _arg_names(root.args)
+                        upd = rn[1] if len(rn) > 1 else ""
                         if upd in sub_shapes:
                             ub, _ = _type_bytes_numel(sub_shapes[upd])
                             dus_bytes = 2.0 * ub
@@ -273,8 +289,7 @@ def analyze_text(text: str) -> Costs:
                     # boundary bytes: operands + output
                     ob, _ = _type_bytes_numel(ins.type_str)
                     ib = 0
-                    for a in ins.args.split(","):
-                        a = a.strip().lstrip("%")
+                    for a in _arg_names(ins.args):
                         if a in shapes:
                             b, _ = _type_bytes_numel(shapes[a])
                             ib += b
@@ -290,8 +305,7 @@ def analyze_text(text: str) -> Costs:
                 total.flops += _dot_flops(ins, shapes)
                 ob, _ = _type_bytes_numel(ins.type_str)
                 ib = 0
-                for a in ins.args.split(","):
-                    a = a.strip().lstrip("%")
+                for a in _arg_names(ins.args):
                     if a in shapes:
                         b, _ = _type_bytes_numel(shapes[a])
                         ib += b
@@ -304,7 +318,8 @@ def analyze_text(text: str) -> Costs:
                 continue
             if op == "dynamic-update-slice":
                 # in place: traffic = 2x the updated slice
-                upd = ins.args.split(",")[1].strip().lstrip("%") if "," in ins.args else ""
+                argn = _arg_names(ins.args)
+                upd = argn[1] if len(argn) > 1 else ""
                 if upd in shapes:
                     ub, _ = _type_bytes_numel(shapes[upd])
                     total.bytes += 2.0 * ub
@@ -320,7 +335,8 @@ def analyze_text(text: str) -> Costs:
                 continue
             if op == "reduce" or op == "reduce-window":
                 # flops ~= numel of the reduced input
-                a0 = ins.args.split(",")[0].strip().lstrip("%")
+                argn = _arg_names(ins.args)
+                a0 = argn[0] if argn else ""
                 if a0 in shapes:
                     _, n_in = _type_bytes_numel(shapes[a0])
                     total.flops += n_in

@@ -37,6 +37,20 @@ def loss_fn_for(cfg: ModelConfig):
     return lm_loss
 
 
+def optimizer_launch_stats(opt: GradientTransformation, params: PyTree) -> dict | None:
+    """Static per-step update-launch accounting for engine-based optimizers.
+
+    Returns the leaf-plan engine's stats dict (leaves, buckets,
+    update_launches, kernel_buckets, ...) or None for plain transforms.
+    ``params`` may be concrete arrays or ShapeDtypeStructs — only shapes are
+    read. Used by the train launcher's kernel-path assertion and by
+    benchmarks/step_time.py's launch column.
+    """
+    from repro.optim.engine import engine_stats
+
+    return engine_stats(opt, params)
+
+
 def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1):
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
     loss_fn = loss_fn_for(cfg)

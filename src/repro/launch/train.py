@@ -25,22 +25,30 @@ import jax
 
 from repro.configs import get_config, smoke_config
 from repro.data import SyntheticLMStream
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_train_step, optimizer_launch_stats
 from repro.models import init_encdec, init_lm
 from repro.optim import adafactor, adam, came, sm3
 from repro.core.smmf import smmf
 from repro.train import TrainLoop, TrainLoopConfig
 
 
-def build_optimizer(name: str, lr: float, family: str):
+def build_optimizer(name: str, lr: float, family: str, *,
+                    blocks: int | None = None, use_kernel: bool = False,
+                    bucket: bool = True):
+    """Build the named optimizer with the leaf-plan engine knobs threaded.
+
+    ``blocks=None`` keeps each optimizer's default block count (1 for smmf,
+    4 for smmf_local). Non-engine optimizers ignore the SMMF-only knobs.
+    """
     gamma = -0.5 if family == "cnn" else -0.8
+    ekw = dict(use_kernel=use_kernel, bucket=bucket)
     return {
-        "smmf": lambda: smmf(lr, decay_rate=gamma),
-        "smmf_local": lambda: smmf(lr, decay_rate=gamma, blocks=4),
+        "smmf": lambda: smmf(lr, decay_rate=gamma, blocks=blocks or 1, **ekw),
+        "smmf_local": lambda: smmf(lr, decay_rate=gamma, blocks=blocks or 4, **ekw),
         "adam": lambda: adam(lr),
-        "adafactor": lambda: adafactor(lr),
-        "came": lambda: came(lr),
-        "sm3": lambda: sm3(lr),
+        "adafactor": lambda: adafactor(lr, bucket=bucket),
+        "came": lambda: came(lr, bucket=bucket),
+        "sm3": lambda: sm3(lr, bucket=bucket),
     }[name]()
 
 
@@ -53,10 +61,19 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--opt", default="smmf")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="SMMF blockwise factorization (0 = optimizer default)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route factored buckets through the fused Pallas kernel")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="per-leaf baseline (disable geometry bucketing)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.use_kernel and args.opt not in ("smmf", "smmf_local"):
+        ap.error(f"--use-kernel is only supported with --opt smmf|smmf_local "
+                 f"(got --opt {args.opt})")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, opt={args.opt}")
@@ -64,13 +81,34 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     init = init_encdec if cfg.family == "encdec" else init_lm
     params = init(key, cfg)
-    opt = build_optimizer(args.opt, args.lr, cfg.family)
+    opt = build_optimizer(args.opt, args.lr, cfg.family, blocks=args.blocks or None,
+                          use_kernel=args.use_kernel, bucket=not args.no_bucket)
     opt_state = opt.init(params)
 
     from repro.utils.tree import tree_bytes
 
     print(f"[train] param bytes {tree_bytes(params)/1e6:.2f}MB, "
           f"optimizer state bytes {tree_bytes(opt_state)/1e6:.3f}MB")
+
+    stats = optimizer_launch_stats(opt, params)
+    if stats is not None:
+        print(f"[train] update engine: {stats['leaves']} leaves -> "
+              f"{stats['update_launches']} launches/step "
+              f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
+              f"{stats['kernel_buckets']} kernel)")
+    if args.use_kernel:
+        # static half of the no-silent-fallback assertion: every factored
+        # bucket must be planned onto the fused kernel path
+        if not stats or stats["kernel_buckets"] == 0 or \
+                stats["kernel_buckets"] != stats["factored_buckets"]:
+            raise RuntimeError(
+                f"--use-kernel requested but the plan routes "
+                f"{0 if not stats else stats['kernel_buckets']}/"
+                f"{0 if not stats else stats['factored_buckets']} factored "
+                f"buckets through the fused kernel")
+        from repro.kernels.smmf_update import ops as _kops
+
+        kernel_launches0 = _kops.KERNEL_LAUNCHES
 
     stream = SyntheticLMStream(cfg, args.batch, args.seq, seed=args.seed)
     step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
@@ -80,6 +118,14 @@ def main() -> None:
                         ckpt_dir=args.ckpt_dir, log_every=10),
     )
     out = loop.run()
+    if args.use_kernel:
+        # dynamic half: tracing the train step must have issued pallas_calls
+        # (catches a silent degrade to the unfused branch)
+        issued = _kops.KERNEL_LAUNCHES - kernel_launches0
+        if issued == 0:
+            raise RuntimeError("--use-kernel requested but no fused kernel "
+                               "launch was traced (silent fallback)")
+        print(f"[train] fused kernel path verified: {issued} bucket launches traced")
     print(f"[train] done: {out['final_step']} steps, "
           f"last loss {out['history'][-1]['loss']:.4f}" if out["history"] else "[train] done")
 

@@ -8,10 +8,13 @@ from repro.optim.base import (
     optimizer_state_bytes,
 )
 from repro.optim.came import came
+from repro.optim.engine import LeafPlanEngine, engine_stats
 from repro.optim.sgd import sgd
 from repro.optim.sm3 import sm3
 
 __all__ = [
+    "LeafPlanEngine",
+    "engine_stats",
     "GradientTransformation",
     "apply_updates",
     "chain",

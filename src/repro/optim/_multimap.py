@@ -3,6 +3,11 @@
 Optimizer states may store a *subtree* (e.g. a tuple of per-axis accumulators)
 per parameter leaf. ``multimap`` flattens against the params/grads treedef and
 returns one output tree per output of ``fn`` — no is_leaf ambiguity.
+
+Used by the dense per-leaf optimizers (adam, sgd). The factored optimizers
+(smmf, adafactor, came, sm3) run on the bucketed leaf-plan engine instead
+(``repro.optim.engine``), which replaces the per-leaf loop with one stacked
+launch per same-geometry bucket.
 """
 
 from __future__ import annotations

@@ -5,6 +5,17 @@ Factors the second moment of every rank>=2 tensor over its *last two* axes
 memory O(prod_{r<d-1} n_r * (n_{d-1}+n_d))). Rank<=1 tensors keep a full
 second moment. First moment is optional (the SMMF paper runs Adafactor with
 beta1=0.9, so we default it on to match their comparisons).
+
+Runs on the leaf-plan engine (repro.optim.engine): same-shape rank>=2 leaves
+are stacked into one (K, ...) bucket and updated with a single vectorized
+launch; rank<=1 leaves bucket by element count. The RMS update clip stays
+*per leaf* (reduced over all but the stack axis). State per bucket:
+
+  factors["fac:SHAPE"]  = (m (K, *shape)?, vr (K, *shape[:-1]),
+                           vc (K, *shape[:-2] + shape[-1:]))
+  factors["dense:NUM"]  = (m (K, NUM)?, vfull (K, NUM))
+
+(the m slot is present iff beta1 is not None).
 """
 
 from __future__ import annotations
@@ -13,23 +24,20 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.optim._multimap import multimap
+from repro.core.plan import lasttwo_planner
 from repro.optim.base import GradientTransformation, as_schedule
+from repro.optim.engine import LeafPlanEngine
 
 
 class AdafactorState(NamedTuple):
     step: jnp.ndarray
-    m: dict      # first moment (full) or size-0 placeholder
-    vr: dict     # row statistics  (..., n_{d-1})
-    vc: dict     # col statistics  (..., n_d)
-    vfull: dict  # full second moment for rank<=1 leaves, else size-0
-
-
-_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+    factors: dict  # bucket key -> stacked moment tuple (see module doc)
 
 
 def _rms(x):
-    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+    """Per-leaf RMS: reduced over all but the leading stack axis."""
+    axes = tuple(range(1, x.ndim))
+    return jnp.sqrt(jnp.mean(jnp.square(x), axis=axes, keepdims=True) + 1e-30)
 
 
 def adafactor(
@@ -40,58 +48,74 @@ def adafactor(
     eps2: float = 1e-3,
     clip_threshold: float = 1.0,
     weight_decay: float = 0.0,
+    bucket: bool = True,
 ) -> GradientTransformation:
     lr_fn = as_schedule(lr)
-    factored = lambda p: p.ndim >= 2
+    plan_fn = lasttwo_planner()
+
+    def plan(params) -> LeafPlanEngine:
+        return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):
-        def mk(p):
-            m = jnp.zeros(p.shape, jnp.float32) if beta1 is not None else _EMPTY()
-            if factored(p):
-                vr = jnp.zeros(p.shape[:-1], jnp.float32)
-                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
-                vfull = _EMPTY()
+        engine = plan(params)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            if bk.factorized:
+                shape = bk.geometry
+                vr = jnp.zeros((k,) + shape[:-1], jnp.float32)
+                vc = jnp.zeros((k,) + shape[:-2] + shape[-1:], jnp.float32)
+                second = (vr, vc)
             else:
-                vr, vc = _EMPTY(), _EMPTY()
-                vfull = jnp.zeros(p.shape, jnp.float32)
-            return m, vr, vc, vfull
-
-        m, vr, vc, vfull = multimap(mk, params, nout=4)
-        return AdafactorState(jnp.zeros((), jnp.int32), m, vr, vc, vfull)
+                second = (jnp.zeros((k,) + bk.geometry, jnp.float32),)
+            if beta1 is not None:
+                m = jnp.zeros((k,) + bk.geometry, jnp.float32)
+                factors[bk.key] = (m,) + second
+            else:
+                factors[bk.key] = second
+        return AdafactorState(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params):
+        engine = plan(params)
         step = state.step + 1
         t = step.astype(jnp.float32)
         beta2t = 1.0 - jnp.power(t, decay_rate)
         lr_t = lr_fn(step)
 
-        def upd(g, m, vr, vc, vfull, p):
-            g = g.astype(jnp.float32)
-            if weight_decay:
-                g = g + weight_decay * p.astype(jnp.float32)
+        flat_g = engine.leaves(grads)
+        if weight_decay:
+            flat_p = engine.leaves(params)
+            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+                      for g, p in zip(flat_g, flat_p)]
+
+        out_flat: list = [None] * len(flat_g)
+        factors = {}
+        for bk in engine.buckets:
+            fac = state.factors[bk.key]
+            m = fac[0] if beta1 is not None else None
+            g = engine.gather(flat_g, bk)  # (K, *geometry)
             g2 = g * g + eps1
-            if factored(p):
+            if bk.factorized:
+                vr, vc = fac[-2:]
                 vr2 = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
                 vc2 = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
                 denom = jnp.mean(vr2, axis=-1, keepdims=True)
                 vhat = vr2[..., :, None] * vc2[..., None, :] / (denom[..., None] + eps1)
-                vfull2 = vfull
+                second = (vr2, vc2)
             else:
-                vfull2 = beta2t * vfull + (1 - beta2t) * g2
+                vfull2 = beta2t * fac[-1] + (1 - beta2t) * g2
                 vhat = vfull2
-                vr2, vc2 = vr, vc
+                second = (vfull2,)
             u = g / jnp.sqrt(vhat + eps1)
             u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)  # update clipping, d=1.0
             if beta1 is not None:
                 m2 = beta1 * m + (1 - beta1) * u
                 u = m2
+                factors[bk.key] = (m2,) + second
             else:
-                m2 = m
-            return -lr_t * u, m2, vr2, vc2, vfull2
+                factors[bk.key] = second
+            engine.scatter(bk, -lr_t * u, out_flat)
 
-        updates, m, vr, vc, vfull = multimap(
-            upd, grads, state.m, state.vr, state.vc, state.vfull, params, nout=5
-        )
-        return updates, AdafactorState(step, m, vr, vc, vfull)
+        return engine.unflatten(out_flat), AdafactorState(step, factors)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, plan=plan)

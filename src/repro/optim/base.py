@@ -28,6 +28,9 @@ Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> scalar
 class GradientTransformation:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # engine-based optimizers expose their static leaf-plan for a given
+    # params pytree (launch/bucket introspection); None for plain transforms
+    plan: Callable[[PyTree], Any] | None = None
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:

@@ -5,6 +5,13 @@ Keeps Adafactor's factored second moment, a full first moment, and a
 the momentum-based update. Rank>=2 tensors factored over last two axes;
 rank<=1 kept full. Memory ~ Adafactor + full first moment (matches paper's
 tables where CAME >= Adafactor).
+
+Runs on the leaf-plan engine (repro.optim.engine): same-shape leaves are
+stacked into one (K, ...) bucket per geometry and updated with a single
+vectorized launch (RMS clip stays per leaf). State per bucket:
+
+  factors["fac:SHAPE"]  = (m, vr, vc, ur, uc)   all (K, ...)-stacked
+  factors["dense:NUM"]  = (m, vfull, ufull)
 """
 
 from __future__ import annotations
@@ -13,26 +20,20 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.optim._multimap import multimap
+from repro.core.plan import lasttwo_planner
 from repro.optim.base import GradientTransformation, as_schedule
+from repro.optim.engine import LeafPlanEngine
 
 
 class CAMEState(NamedTuple):
     step: jnp.ndarray
-    m: dict
-    vr: dict
-    vc: dict
-    vfull: dict
-    ur: dict   # confidence row stats
-    uc: dict   # confidence col stats
-    ufull: dict
-
-
-_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+    factors: dict  # bucket key -> stacked moment tuple (see module doc)
 
 
 def _rms(x):
-    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+    """Per-leaf RMS: reduced over all but the leading stack axis."""
+    axes = tuple(range(1, x.ndim))
+    return jnp.sqrt(jnp.mean(jnp.square(x), axis=axes, keepdims=True) + 1e-30)
 
 
 def came(
@@ -44,30 +45,38 @@ def came(
     eps2: float = 1e-16,
     clip_threshold: float = 1.0,
     weight_decay: float = 0.0,
+    bucket: bool = True,
 ) -> GradientTransformation:
     lr_fn = as_schedule(lr)
-    factored = lambda p: p.ndim >= 2
+    plan_fn = lasttwo_planner()
+
+    def plan(params) -> LeafPlanEngine:
+        return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):
-        def mk(p):
-            m = jnp.zeros(p.shape, jnp.float32)
-            if factored(p):
-                vr = jnp.zeros(p.shape[:-1], jnp.float32)
-                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
-                ur = jnp.zeros(p.shape[:-1], jnp.float32)
-                uc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
-                vfull = _EMPTY()
-                ufull = _EMPTY()
+        engine = plan(params)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            m = jnp.zeros((k,) + bk.geometry, jnp.float32)
+            if bk.factorized:
+                shape = bk.geometry
+                row = (k,) + shape[:-1]
+                col = (k,) + shape[:-2] + shape[-1:]
+                factors[bk.key] = (
+                    m,
+                    jnp.zeros(row, jnp.float32), jnp.zeros(col, jnp.float32),  # vr, vc
+                    jnp.zeros(row, jnp.float32), jnp.zeros(col, jnp.float32),  # ur, uc
+                )
             else:
-                vr = vc = ur = uc = _EMPTY()
-                vfull = jnp.zeros(p.shape, jnp.float32)
-                ufull = jnp.zeros(p.shape, jnp.float32)
-            return m, vr, vc, vfull, ur, uc, ufull
-
-        m, vr, vc, vfull, ur, uc, ufull = multimap(mk, params, nout=7)
-        return CAMEState(jnp.zeros((), jnp.int32), m, vr, vc, vfull, ur, uc, ufull)
+                full = (k,) + bk.geometry
+                factors[bk.key] = (
+                    m, jnp.zeros(full, jnp.float32), jnp.zeros(full, jnp.float32)
+                )
+        return CAMEState(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params):
+        engine = plan(params)
         step = state.step + 1
         lr_t = lr_fn(step)
 
@@ -75,41 +84,42 @@ def came(
             denom = jnp.mean(r, axis=-1, keepdims=True)
             return r[..., :, None] * c[..., None, :] / (denom[..., None] + eps1)
 
-        def upd(g, m, vr, vc, vfull, ur, uc, ufull, p):
-            g = g.astype(jnp.float32)
-            if weight_decay:
-                g = g + weight_decay * p.astype(jnp.float32)
+        flat_g = engine.leaves(grads)
+        if weight_decay:
+            flat_p = engine.leaves(params)
+            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+                      for g, p in zip(flat_g, flat_p)]
+
+        out_flat: list = [None] * len(flat_g)
+        factors = {}
+        for bk in engine.buckets:
+            g = engine.gather(flat_g, bk)  # (K, *geometry)
             g2 = g * g + eps1
-            if factored(p):
+            if bk.factorized:
+                m, vr, vc, ur, uc = state.factors[bk.key]
                 vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
                 vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
                 vhat = recon(vr2, vc2)
-                vfull2 = vfull
             else:
+                m, vfull, ufull = state.factors[bk.key]
                 vfull2 = beta2 * vfull + (1 - beta2) * g2
                 vhat = vfull2
-                vr2, vc2 = vr, vc
             u = g / jnp.sqrt(vhat + eps1)
             u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
             m2 = beta1 * m + (1 - beta1) * u
             # confidence: instability of momentum vs update
             inst = (u - m2) ** 2 + eps2
-            if factored(p):
+            if bk.factorized:
                 ur2 = beta3 * ur + (1 - beta3) * jnp.mean(inst, axis=-1)
                 uc2 = beta3 * uc + (1 - beta3) * jnp.mean(inst, axis=-2)
                 uhat = recon(ur2, uc2)
-                ufull2 = ufull
+                factors[bk.key] = (m2, vr2, vc2, ur2, uc2)
             else:
                 ufull2 = beta3 * ufull + (1 - beta3) * inst
                 uhat = ufull2
-                ur2, uc2 = ur, uc
-            out = -lr_t * m2 / jnp.sqrt(uhat + eps2)
-            return out, m2, vr2, vc2, vfull2, ur2, uc2, ufull2
+                factors[bk.key] = (m2, vfull2, ufull2)
+            engine.scatter(bk, -lr_t * m2 / jnp.sqrt(uhat + eps2), out_flat)
 
-        updates, m, vr, vc, vfull, ur, uc, ufull = multimap(
-            upd, grads, state.m, state.vr, state.vc, state.vfull, state.ur, state.uc, state.ufull,
-            params, nout=8,
-        )
-        return updates, CAMEState(step, m, vr, vc, vfull, ur, uc, ufull)
+        return engine.unflatten(out_flat), CAMEState(step, factors)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, plan=plan)

@@ -4,6 +4,14 @@ SM3-II with per-axis cover sets: for a rank-d tensor, keeps one accumulator
 vector per axis (memory O(sum_r n_r)). Optional momentum (the SMMF paper runs
 SM3 with beta1; momentum then dominates SM3's memory — matching the paper's
 tables where SM3 ~= Adafactor on Transformers).
+
+Runs on the leaf-plan engine (repro.optim.engine): same-shape leaves stack
+into one (K, ...) bucket updated by a single vectorized launch. State per
+bucket (scalars lift to shape (1,)):
+
+  factors["fac:SHAPE"] = (m (K, *shape)?, (acc_ax0 (K, n_0), acc_ax1 ...))
+
+(the m slot is present iff beta1 is not None).
 """
 
 from __future__ import annotations
@@ -12,57 +20,71 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.optim._multimap import multimap
+from repro.core.plan import axiscover_planner
 from repro.optim.base import GradientTransformation, as_schedule
+from repro.optim.engine import LeafPlanEngine
 
 
 class SM3State(NamedTuple):
     step: jnp.ndarray
-    m: dict    # optional momentum (full)
-    acc: dict  # per-leaf tuple of per-axis accumulator vectors
+    factors: dict  # bucket key -> (momentum?, per-axis accumulator tuple)
 
 
-def sm3(lr=1e-3, beta1: float | None = 0.9, eps: float = 1e-30) -> GradientTransformation:
+def sm3(lr=1e-3, beta1: float | None = 0.9, eps: float = 1e-30,
+        bucket: bool = True) -> GradientTransformation:
     lr_fn = as_schedule(lr)
+    plan_fn = axiscover_planner()
+
+    def plan(params) -> LeafPlanEngine:
+        return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):
-        def mk(p):
-            shape = p.shape if p.ndim > 0 else (1,)
-            acc = tuple(jnp.zeros((n,), jnp.float32) for n in shape)
-            m = jnp.zeros(p.shape, jnp.float32) if beta1 is not None else jnp.zeros((0,), jnp.float32)
-            return m, acc
-
-        m, acc = multimap(mk, params, nout=2)
-        return SM3State(jnp.zeros((), jnp.int32), m, acc)
+        engine = plan(params)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            acc = tuple(jnp.zeros((k, n), jnp.float32) for n in bk.geometry)
+            if beta1 is not None:
+                factors[bk.key] = (jnp.zeros((k,) + bk.geometry, jnp.float32), acc)
+            else:
+                factors[bk.key] = (acc,)
+        return SM3State(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params):
-        del params
+        engine = plan(params)
         step = state.step + 1
         lr_t = lr_fn(step)
 
-        def upd(g, m, acc):
-            g = g.astype(jnp.float32)
-            shape = g.shape if g.ndim > 0 else (1,)
-            gr = g.reshape(shape)
+        flat_g = engine.leaves(grads)
+        out_flat: list = [None] * len(flat_g)
+        factors = {}
+        for bk in engine.buckets:
+            k = bk.size
+            geom = bk.geometry
+            fac = state.factors[bk.key]
+            acc = fac[-1]
+            g = engine.gather(flat_g, bk)  # (K, *geometry)
+            # min-combine the per-axis cover accumulators (SM3-II)
             nu = None
             for ax, a in enumerate(acc):
-                bshape = [1] * len(shape)
-                bshape[ax] = shape[ax]
+                bshape = [k] + [1] * len(geom)
+                bshape[ax + 1] = geom[ax]
                 ab = a.reshape(bshape)
                 nu = ab if nu is None else jnp.minimum(nu, ab)
-            nu = nu + gr * gr
+            nu = nu + g * g
             new_acc = tuple(
-                jnp.max(nu, axis=tuple(i for i in range(len(shape)) if i != ax)) for ax in range(len(shape))
+                jnp.max(nu, axis=tuple(i + 1 for i in range(len(geom)) if i != ax))
+                for ax in range(len(geom))
             )
-            u = (gr / (jnp.sqrt(nu) + eps)).reshape(g.shape)
+            u = g / (jnp.sqrt(nu) + eps)
             if beta1 is not None:
-                m2 = beta1 * m + (1 - beta1) * u
+                m2 = beta1 * fac[0] + (1 - beta1) * u
                 u = m2
+                factors[bk.key] = (m2, new_acc)
             else:
-                m2 = m
-            return -lr_t * u, m2, new_acc
+                factors[bk.key] = (new_acc,)
+            engine.scatter(bk, -lr_t * u, out_flat)
 
-        updates, m, acc = multimap(upd, grads, state.m, state.acc, nout=3)
-        return updates, SM3State(step, m, acc)
+        return engine.unflatten(out_flat), SM3State(step, factors)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, plan=plan)

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.matricize import effective_shape, square_matricize, unmatricize
 from repro.core.nnmf import nnmf_compress, nnmf_decompress

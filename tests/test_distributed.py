@@ -11,8 +11,8 @@ from repro.distributed import rules
 from repro.launch import specs as S
 from repro.models.config import SHAPES
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_fit_spec_divisibility():

@@ -1,0 +1,204 @@
+"""Leaf-plan update engine: bucketing, blockwise-kernel, and launch counts.
+
+Covers the engine refactor's acceptance criteria:
+
+* bucketed updates are bit-compatible with the per-leaf baseline and track
+  the paper's reference trajectories on a mixed pytree;
+* ``use_kernel=True`` composes with ``blocks>1`` (no silent fallback) and
+  matches the unfused blockwise path;
+* bucketing collapses per-step update launches by >= 5x on a
+  transformer-shaped param set.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import build_buckets, smmf_planner
+from repro.core.smmf import smmf
+from repro.kernels.smmf_update import ops as kops
+from repro.optim import adafactor, came, sm3
+from repro.optim.base import apply_updates
+from repro.utils.tree import tree_bytes
+
+from reference_smmf import RefSMMF
+
+# mixed pytree: bias / conv / embedding / scalar shapes, with repeated
+# geometries so bucketing actually groups leaves
+SHAPES = {
+    "wq": (48, 96),
+    "wk": (48, 96),
+    "wv": (48, 96),
+    "bias_q": (96,),
+    "bias_k": (96,),
+    "conv": (3, 3, 8, 16),
+    "embed": (128, 24),
+    "scalar": (),
+}
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: rng.standard_normal(s).astype(np.float32) for k, s in SHAPES.items()}
+
+
+def _run(opt, steps=6, seed0=50):
+    params = jax.tree.map(jnp.asarray, _tree(0))
+    state = opt.init(params)
+    for s in range(steps):
+        grads = jax.tree.map(jnp.asarray, _tree(seed0 + s))
+        u, state = opt.update(grads, state, params)
+        params = apply_updates(params, u)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# plan / bucket invariants
+# ---------------------------------------------------------------------------
+
+def test_plans_and_buckets():
+    plan_fn = smmf_planner(blocks=1)
+    flat = [jnp.zeros(s) for s in SHAPES.values()]
+    plans = [plan_fn(i, tuple(p.shape)) for i, p in enumerate(flat)]
+    # same-geometry leaves share a bucket; per-leaf mode never groups
+    buckets = build_buckets(plans, bucket=True)
+    nobuckets = build_buckets(plans, bucket=False)
+    assert len(buckets) < len(plans)
+    assert len(nobuckets) == len(plans)
+    assert sum(b.size for b in buckets) == len(plans)
+    by_key = {b.key: b for b in buckets}
+    assert by_key["fac:1x72x64"].size == 3          # the three 48x96 leaves
+    assert by_key["dense:1"].size == 1              # scalar fallback
+    # blockwise geometry divides the row axis
+    p = smmf_planner(blocks=4)(0, (64, 64))
+    assert p.geometry == (4, 16, 64)
+
+
+def test_engine_state_bytes_matches_actual():
+    from repro.core.plan import smmf_state_bytes
+
+    params = jax.tree.map(jnp.asarray, _tree(0))
+    opt = smmf(1e-3)
+    eng = opt.plan(params)
+    state = jax.eval_shape(opt.init, params)
+    assert smmf_state_bytes(eng.plans) == tree_bytes(state.factors)
+
+
+# ---------------------------------------------------------------------------
+# bucketed-update parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blocks", [1, 4])
+def test_bucketed_matches_per_leaf(blocks):
+    """bucket=True must be numerically identical to the per-leaf baseline."""
+    a = _run(smmf(1e-2, decay_rate=-0.8, blocks=blocks, bucket=True))
+    b = _run(smmf(1e-2, decay_rate=-0.8, blocks=blocks, bucket=False))
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+
+
+def test_bucketed_matches_paper_reference():
+    """Bucketed engine tracks the paper's reference trajectories on the
+    mixed pytree (bias / conv / embedding / scalar)."""
+    params_np = _tree(0)
+    ref = RefSMMF({k: v.shape for k, v in params_np.items()}, lr=1e-2, decay_rate=-0.5)
+    opt = smmf(lr=1e-2, decay_rate=-0.5)
+    params = jax.tree.map(jnp.asarray, params_np)
+    state = opt.init(params)
+    for step in range(6):
+        grads_np = _tree(step + 200)
+        u, state = opt.update(jax.tree.map(jnp.asarray, grads_np), state, params)
+        params = apply_updates(params, u)
+        params_np = ref.step(params_np, grads_np)
+        for k in params_np:
+            np.testing.assert_allclose(np.asarray(params[k]), params_np[k],
+                                       rtol=3e-5, atol=3e-6, err_msg=f"step {step} leaf {k}")
+
+
+@pytest.mark.parametrize("name,mk", [
+    ("adafactor", lambda b: adafactor(1e-2, bucket=b)),
+    ("came", lambda b: came(1e-2, bucket=b)),
+    ("sm3", lambda b: sm3(1e-2, bucket=b)),
+])
+def test_baseline_optimizers_bucket_parity(name, mk):
+    a = _run(mk(True))
+    b = _run(mk(False))
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=f"{name} {k}")
+
+
+# ---------------------------------------------------------------------------
+# blockwise kernel path (use_kernel x blocks>1)
+# ---------------------------------------------------------------------------
+
+def test_kernel_composes_with_blocks():
+    """use_kernel + blocks=4 takes the fused path (no silent fallback) and
+    matches the unfused blockwise update within 1e-5."""
+    before = kops.KERNEL_LAUNCHES
+    a = _run(smmf(1e-2, decay_rate=-0.8, blocks=4, use_kernel=True))
+    assert kops.KERNEL_LAUNCHES > before, "kernel path silently skipped"
+    b = _run(smmf(1e-2, decay_rate=-0.8, blocks=4, use_kernel=False))
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_batched_kernel_matches_ref_stack():
+    """The batched kernel on a (B, n, m) stack equals B single-matrix
+    reference calls."""
+    from repro.core.signpack import pack_signs
+    from repro.kernels.smmf_update import smmf_update_ref
+
+    rng = np.random.default_rng(7)
+    B, n, m = 3, 96, 72
+    g = jnp.asarray(rng.standard_normal((B, n, m)), jnp.float32)
+    r_m = jnp.abs(jnp.asarray(rng.standard_normal((B, n)), jnp.float32))
+    c_m = jnp.abs(jnp.asarray(rng.standard_normal((B, m)), jnp.float32))
+    r_v = jnp.abs(jnp.asarray(rng.standard_normal((B, n)), jnp.float32))
+    c_v = jnp.abs(jnp.asarray(rng.standard_normal((B, m)), jnp.float32))
+    sign = jnp.stack([pack_signs(jnp.asarray(rng.standard_normal((n, m)) >= 0))
+                      for _ in range(B)])
+    kw = dict(beta1_t=0.85, beta2_t=0.97, eps=1e-8)
+    out = kops.smmf_update_batched(g, r_m, c_m, sign, r_v, c_v, **kw)
+    for b in range(B):
+        ref = smmf_update_ref(g[b], r_m[b], c_m[b], sign[b], r_v[b], c_v[b], **kw)
+        names = ["u", "r_m", "c_m", "sign", "r_v", "c_v"]
+        for name, got, want in zip(names, [o[b] for o in out], ref):
+            if name == "sign":
+                np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            else:
+                np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                           rtol=3e-6, atol=3e-6, err_msg=f"b={b} {name}")
+
+
+# ---------------------------------------------------------------------------
+# launch accounting (acceptance: >= 5x fewer launches than per-leaf)
+# ---------------------------------------------------------------------------
+
+def _transformer_params(d=256, layers=4):
+    rng = np.random.default_rng(0)
+    p = {}
+    for i in range(layers):
+        p[f"attn{i}"] = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+        p[f"ffn{i}"] = jnp.asarray(rng.standard_normal((d, 4 * d)), jnp.float32)
+        p[f"out{i}"] = jnp.asarray(rng.standard_normal((4 * d, d)), jnp.float32)
+        p[f"bias{i}"] = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+        p[f"scale{i}"] = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    return p
+
+
+def test_bucketing_collapses_launches_5x():
+    params = _transformer_params()
+    bucketed = smmf(1e-3).plan(params).stats()
+    per_leaf = smmf(1e-3, bucket=False).plan(params).stats()
+    assert per_leaf["update_launches"] == len(jax.tree.leaves(params))
+    assert bucketed["update_launches"] * 5 <= per_leaf["update_launches"]
+
+
+def test_kernel_plan_covers_all_factored_buckets():
+    params = _transformer_params()
+    stats = smmf(1e-3, use_kernel=True, blocks=4).plan(params).stats()
+    assert stats["kernel_buckets"] == stats["factored_buckets"] > 0

@@ -172,9 +172,13 @@ def test_vector_reshape_off_uses_dense_adam_path():
     opt = smmf(lr=1e-2, vector_reshape=False)
     p = {"b": jnp.zeros((64,))}
     s = opt.init(p)
-    leaves = jax.tree.leaves(s.factors)
-    # fallback leaf: full m and v
-    assert any(l.shape == (64,) for l in leaves)
+    # fallback bucket: full-size m and v, stacked (K=1, numel)
+    assert set(s.factors) == {"dense:64"}
+    m, v = s.factors["dense:64"]
+    assert m.shape == v.shape == (1, 64)
+    # factorized when vector_reshape=True: O(sqrt) factors instead
+    s2 = smmf(lr=1e-2).init(p)
+    assert set(s2.factors) == {"fac:1x8x8"}
 
 
 def test_validation_errors():
