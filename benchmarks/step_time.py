@@ -9,6 +9,12 @@ The ``launches`` column is the leaf-plan engine's static per-step update
 launch count: bucketed variants issue one launch per same-geometry bucket,
 the ``nobucket`` baseline one per leaf. The bucketed/per-leaf ratio is the
 acceptance metric for the engine refactor (>= 5x fewer launches here).
+
+A second table runs SMMF on a dense-fallback-heavy (CNN-like) tree —
+``vector_reshape=False`` leaves every 1-D bias/scale on the plain-Adam
+fallback — showing the fused flat dense launch (``fuse_dense``, PR 2):
+all fallback leaves of a dtype dispatch as **one** concatenated launch
+instead of one per distinct element count, and ``stats()`` counts it as 1.
 """
 
 from __future__ import annotations
@@ -46,9 +52,36 @@ def _params(d=1024, layers=4):
     return p
 
 
-def bench(name: str, iters: int = 20) -> tuple[float, int | None]:
-    opt = OPTS[name]()
-    params = _params()
+def _cnn_params(layers=6):
+    """Fallback-heavy tree: conv kernels plus many distinct-size 1-D leaves
+    (biases / bn stats) that land on the dense path when vector_reshape is
+    off — one dense bucket per element count without fusion."""
+    rng = np.random.default_rng(1)
+    p = {}
+    for i in range(layers):
+        c = 8 * (i + 1)
+        p[f"conv{i}/w"] = jnp.asarray(rng.standard_normal((3, 3, c, 2 * c)), jnp.float32)
+        p[f"conv{i}/b"] = jnp.asarray(rng.standard_normal((2 * c,)), jnp.float32)
+        p[f"bn{i}/scale"] = jnp.asarray(rng.standard_normal((2 * c,)), jnp.float32)
+        p[f"bn{i}/bias"] = jnp.asarray(rng.standard_normal((2 * c,)), jnp.float32)
+    return p
+
+
+# dense-fallback fusion scenarios (second table): vector_reshape=False keeps
+# 1-D leaves dense, isolating the fused flat launch from factorization
+DENSE_OPTS = {
+    "smmf(fused dense)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False),
+    "smmf(per-geom dense)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False,
+                                         fuse_dense=False),
+    "smmf(nobucket)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False,
+                                   bucket=False),
+}
+
+
+def bench(name: str, iters: int = 20, opts=None, params_fn=_params) -> tuple[float, int | None]:
+    """Compile + time ``iters`` optimizer-only steps; returns (ms, launches)."""
+    opt = (opts or OPTS)[name]()
+    params = params_fn()
     state = opt.init(params)
     grads = jax.tree.map(lambda p: p * 0.01, params)
     stats = optimizer_launch_stats(opt, params)
@@ -69,6 +102,7 @@ def bench(name: str, iters: int = 20) -> tuple[float, int | None]:
 
 
 def main() -> None:
+    """Print the step-time table and the dense-fallback fusion table."""
     base = None
     launch = {}
     print(f"{'optimizer':16s} {'ms/step':>9s} {'vs adam':>8s} {'launches':>9s}")
@@ -84,6 +118,14 @@ def main() -> None:
         r = launch["smmf(nobucket)"] / launch["smmf"]
         print(f"\nbucketed engine: {launch['smmf']} launches/step vs "
               f"{launch['smmf(nobucket)']} per-leaf ({r:.1f}x fewer)")
+
+    print(f"\ndense-fallback fusion (CNN-like tree, vector_reshape=False):")
+    print(f"{'variant':22s} {'ms/step':>9s} {'launches':>9s}")
+    for name in DENSE_OPTS:
+        ms, launches = bench(name, opts=DENSE_OPTS, params_fn=_cnn_params)
+        ls = f"{launches:9d}" if launches is not None else f"{'-':>9s}"
+        print(f"{name:22s} {ms:9.2f} {ls}")
+
     print("\n(paper Table 5: SMMF ~1.2-1.6x Adam end-to-end; optimizer-only "
           "overhead is the bound. CPU timings; TPU uses the fused Pallas kernel.)")
 

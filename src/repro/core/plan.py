@@ -64,53 +64,149 @@ class LeafPlan:
     blocks: int = 1                 # SMMF blockwise count (B)
     kernel_ok: bool = False         # fused Pallas kernel eligible
     constraint: str | None = None   # ctx.constrain kind for the working matrix
+    dtype: str = "float32"          # parameter dtype (fused-dense grouping)
 
     @property
     def numel(self) -> int:
+        """Total element count of the original leaf."""
         return int(math.prod(self.shape)) if self.shape else 1
 
     @property
     def bucket_key(self) -> str:
+        """Deterministic state-dict key prefix: ``fac:GEOM`` / ``dense:GEOM``."""
         kind = "fac" if self.factorized else "dense"
         return f"{kind}:" + "x".join(map(str, self.geometry))
 
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """A group of same-geometry leaves updated by one stacked launch."""
+    """A group of leaves updated by one stacked (or concatenated) launch.
+
+    Regular buckets hold same-geometry leaves stacked along a new leading
+    axis of length ``size``. **Fused dense** buckets (``fused=True``, key
+    ``dense:flat:<dtype>``) instead concatenate *all* dense-fallback leaves
+    of one dtype into a single flat ``(1, total_numel)`` row — dense math is
+    elementwise, so fallback-heavy trees dispatch one launch per dtype
+    instead of one per distinct element count.
+    """
 
     key: str
     factorized: bool
     geometry: tuple[int, ...]
     plans: tuple[LeafPlan, ...]
+    fused: bool = False
 
     @property
     def size(self) -> int:
+        """Number of parameter leaves in this bucket."""
         return len(self.plans)
 
     @property
+    def stack(self) -> int:
+        """Leading stack-axis length of the bucket's state arrays (1 when
+        the bucket is a fused flat concatenation)."""
+        return 1 if self.fused else len(self.plans)
+
+    @property
     def indices(self) -> tuple[int, ...]:
+        """Flat-param indices of the bucket's leaves, in stack order."""
         return tuple(p.index for p in self.plans)
 
     @property
+    def offsets(self) -> tuple[int, ...]:
+        """Per-leaf start offsets into the fused flat row (fused buckets)."""
+        out, off = [], 0
+        for p in self.plans:
+            out.append(off)
+            off += p.numel
+        return tuple(out)
+
+    @property
     def kernel_ok(self) -> bool:
+        """True iff every leaf in the bucket planned onto the fused kernel."""
         return self.factorized and all(p.kernel_ok for p in self.plans)
 
 
-def build_buckets(plans: Sequence[LeafPlan], bucket: bool = True) -> tuple[Bucket, ...]:
+def build_buckets(
+    plans: Sequence[LeafPlan], bucket: bool = True, fuse_dense: bool = False,
+) -> tuple[Bucket, ...]:
     """Group plans by (factorized, geometry), preserving first-seen order.
 
     ``bucket=False`` gives the per-leaf baseline: one single-leaf bucket per
     parameter (key suffixed with the leaf index so state names stay unique).
+    ``fuse_dense=True`` additionally merges *all* dense-fallback groups of a
+    dtype into one concatenated flat bucket (``dense:flat:<dtype>``,
+    geometry ``(total_numel,)``) so dense leaves cost one launch per dtype.
+    Only valid for optimizers whose dense math is purely elementwise (no
+    per-leaf reductions); ignored in per-leaf mode.
     """
     groups: dict[str, list[LeafPlan]] = {}
     for p in plans:
         key = p.bucket_key if bucket else f"{p.bucket_key}@{p.index}"
         groups.setdefault(key, []).append(p)
-    return tuple(
-        Bucket(key=key, factorized=ps[0].factorized, geometry=ps[0].geometry, plans=tuple(ps))
-        for key, ps in groups.items()
-    )
+    out: list[Bucket] = []
+    dense_by_dtype: dict[str, list[LeafPlan]] = {}
+    for key, ps in groups.items():
+        if fuse_dense and bucket and not ps[0].factorized:
+            for p in ps:
+                dense_by_dtype.setdefault(p.dtype, []).append(p)
+            continue
+        out.append(Bucket(key=key, factorized=ps[0].factorized,
+                          geometry=ps[0].geometry, plans=tuple(ps)))
+    for dt, ps in dense_by_dtype.items():
+        total = sum(p.numel for p in ps)
+        out.append(Bucket(key=f"dense:flat:{dt}", factorized=False,
+                          geometry=(total,), plans=tuple(ps), fused=True))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# per-bucket partition wants (mesh placement of the stacked state)
+# ---------------------------------------------------------------------------
+
+def bucket_stack_wants(leading: int, data_size: int) -> bool:
+    """True when a bucket's stacked leading axis (``K*B`` for SMMF, ``K``
+    for the other engine optimizers) should carry the "data"/fsdp mesh axis:
+    the axis must exist (size > 1) and divide the stack.
+
+    This is the single divisibility policy behind both the optimizer-state
+    shardings (``repro.distributed.rules.opt_state_shardings``) and the
+    in-update ``with_sharding_constraint`` kinds ("smmf_matrix",
+    "smmf_rows", "smmf_cols") — keeping them agreed prevents per-step
+    resharding collectives.
+    """
+    return data_size > 1 and leading % data_size == 0
+
+
+def bucket_partition_wants(kind: str, shape: tuple[int, ...], data_size: int) -> tuple:
+    """Axis-name *wants* for one stacked SMMF state tensor of a bucket.
+
+    ``kind`` is one of ``"matrix"`` (the (K·B, n, m) working matrix),
+    ``"rows"`` (r_m / r_v, (K·B, n)), ``"cols"`` (c_m / c_v, (K·B, m)),
+    ``"sign"`` (the (K·B·n, ceil(m/8)) packed-sign matrix) or ``"dense"``
+    (a (K, numel) / (1, total) dense-fallback moment). Preference order:
+
+    * stack axis → "data" when :func:`bucket_stack_wants` holds — every
+      per-device state slice then shrinks ~linearly with the fsdp axis and
+      the per-stack-entry factorization needs zero cross-shard collectives;
+    * otherwise fall back to the working-matrix rules (rows → "data",
+      cols → "model"), which is the pre-sharded (PR 1) placement.
+
+    Divisibility of the *non-stack* dims is checked downstream by
+    ``rules.fit_spec`` (indivisible axes degrade to replication).
+    """
+    if kind == "sign":
+        return ("data", "model")
+    if kind == "dense":
+        return (None, "data")
+    stacked = bucket_stack_wants(shape[0], data_size)
+    if kind == "matrix":
+        return ("data", None, "model") if stacked else (None, "data", "model")
+    if kind == "rows":
+        return ("data", None) if stacked else (None, "data")
+    if kind == "cols":
+        return ("data", "model") if stacked else (None, "model")
+    raise ValueError(f"unknown bucket state kind: {kind!r}")
 
 
 # ---------------------------------------------------------------------------

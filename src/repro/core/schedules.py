@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 
 def beta1_schedule(beta1: float, growth_rate: float):
+    """step -> beta1 * lambda^(t-1) (paper Algo 8, first-moment schedule)."""
     def sched(step: jnp.ndarray) -> jnp.ndarray:
         t = step.astype(jnp.float32)
         return beta1 * jnp.power(growth_rate, t - 1.0)
@@ -20,6 +21,7 @@ def beta1_schedule(beta1: float, growth_rate: float):
 
 
 def beta2_schedule(decay_rate: float):
+    """step -> 1 - t^gamma (paper Algo 8, second-moment schedule)."""
     def sched(step: jnp.ndarray) -> jnp.ndarray:
         t = step.astype(jnp.float32)
         return 1.0 - jnp.power(t, decay_rate)

@@ -15,6 +15,7 @@ _BITS = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
 
 
 def packed_width(m: int) -> int:
+    """uint8 columns needed to bit-pack an m-wide sign row: ceil(m/8)."""
     return (m + 7) // 8
 
 

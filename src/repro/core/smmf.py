@@ -39,12 +39,24 @@ Execution is driven by the **leaf-plan engine** (repro.optim.engine): at
 bucketed into stacked arrays, so ``update`` runs one vectorized launch per
 bucket instead of one per leaf. State is stored per bucket:
 
-  factors["fac:BxNxM"]  = (r_m (K*B, n), c_m (K*B, m),
-                           sign (K*B*n, pw), r_v (K*B, n), c_v (K*B, m))
-  factors["dense:NUM"]  = (m (K, NUM), v (K, NUM))   # plain-Adam fallback
+  factors["fac:BxNxM"]        = (r_m (K*B, n), c_m (K*B, m),
+                                 sign (K*B*n, pw), r_v (K*B, n), c_v (K*B, m))
+  factors["dense:flat:DTYPE"] = (m (1, TOTAL), v (1, TOTAL))  # fused fallback
 
-with K the number of leaves sharing the geometry. ``bucket=False`` recovers
-the per-leaf baseline (one single-leaf bucket per parameter).
+with K the number of leaves sharing the geometry. The dense plain-Adam
+fallback is **fused**: all fallback leaves of one dtype are concatenated
+into a single flat row, so fallback-heavy (CNN-like) trees dispatch one
+dense launch per dtype instead of one per distinct element count
+(``fuse_dense=False`` restores per-geometry ``dense:NUM`` buckets of shape
+(K, NUM)). ``bucket=False`` recovers the per-leaf baseline (one single-leaf
+bucket per parameter, dense fusion off).
+
+On a mesh, the stacked state is sharded rather than replicated: the leading
+K*B stack axis carries the "data"/fsdp axis whenever divisible, and the
+update emits matching sharding constraints ("smmf_matrix", "smmf_rows",
+"smmf_cols", "smmf_sign", "dense_flat") on every stacked moment so per-chip
+optimizer bytes shrink ~linearly with the fsdp axis (see docs/sharding.md
+and repro.distributed.rules.opt_state_shardings).
 
 When ``use_kernel=True`` the fused Pallas TPU kernel
 (repro.kernels.smmf_update) executes decompress + EMA + sign-extract +
@@ -109,6 +121,7 @@ def smmf(
     blocks: int = 1,
     use_kernel: bool = False,
     bucket: bool = True,
+    fuse_dense: bool = True,
     kernel_block: tuple[int, int] = DEFAULT_KERNEL_BLOCK,
     interpret: bool | None = None,
 ) -> GradientTransformation:
@@ -119,9 +132,12 @@ def smmf(
     the lambda. ``blocks`` > 1 selects the beyond-paper local variant.
 
     Engine knobs: ``bucket`` stacks same-geometry leaves into one launch
-    (False = per-leaf baseline); ``use_kernel`` routes factored buckets
-    through the fused Pallas kernel with tile ``kernel_block``;
-    ``interpret=None`` auto-selects interpreter mode off-TPU.
+    (False = per-leaf baseline); ``fuse_dense`` concatenates all dense
+    fallback leaves of a dtype into one flat launch (legal because the
+    fallback is plain elementwise Adam; see module docstring);
+    ``use_kernel`` routes factored buckets through the fused Pallas kernel
+    with tile ``kernel_block``; ``interpret=None`` auto-selects interpreter
+    mode off-TPU.
     """
     if isinstance(lr, (int, float)) and lr < 0.0:
         raise ValueError(f"lr must be >= 0, got {lr}")
@@ -148,7 +164,9 @@ def smmf(
     )
 
     def plan(params) -> LeafPlanEngine:
-        return LeafPlanEngine(params, plan_fn, bucket=bucket)
+        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
+        return LeafPlanEngine(params, plan_fn, bucket=bucket,
+                              fuse_dense=fuse_dense and bucket)
 
     def init(params):
         engine = plan(params)
@@ -165,10 +183,10 @@ def smmf(
                     jnp.zeros((k * b, m), jnp.float32),                  # c_v
                 )
             else:
-                (numel,) = bk.geometry
+                (numel,) = bk.geometry  # total numel for fused buckets
                 factors[bk.key] = (
-                    jnp.zeros((k, numel), jnp.float32),  # m
-                    jnp.zeros((k, numel), jnp.float32),  # v
+                    jnp.zeros((bk.stack, numel), jnp.float32),  # m
+                    jnp.zeros((bk.stack, numel), jnp.float32),  # v
                 )
         return SMMFState(jnp.zeros((), jnp.int32), factors)
 
@@ -229,10 +247,18 @@ def smmf(
                     num = m_t if beta1 is not None else gm
                     u = num / (jnp.sqrt(v_t) + eps)
 
+                # keep the re-compressed stacked state placed where
+                # opt_state_shardings puts it (stack axis over "data" when
+                # divisible) so donation aliases buffers without resharding
+                r_m2 = constrain(r_m2, "smmf_rows")
+                r_v2 = constrain(r_v2, "smmf_rows")
+                c_m2 = constrain(c_m2, "smmf_cols")
+                c_v2 = constrain(c_v2, "smmf_cols")
+                sign2 = constrain(sign2, "smmf_sign")
                 factors[bk.key] = (r_m2, c_m2, sign2, r_v2, c_v2)
                 engine.scatter(bk, (-lr_t * u).reshape(k, b * n * m), out_flat)
             else:
-                gm = engine.gather(flat_g, bk)  # (K, numel)
+                gm = engine.gather(flat_g, bk)  # (K, numel) / fused (1, total)
                 m_, v_ = fac
                 if beta1 is not None:
                     m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
@@ -241,6 +267,9 @@ def smmf(
                 v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
                 num = m2 if beta1 is not None else gm
                 u = num / (jnp.sqrt(v2) + eps)
+                if bk.fused:
+                    m2 = constrain(m2, "dense_flat")
+                    v2 = constrain(v2, "dense_flat")
                 factors[bk.key] = (m2, v2)
                 engine.scatter(bk, -lr_t * u, out_flat)
 

@@ -29,6 +29,8 @@ class EFState(NamedTuple):
 
 
 def int8_compress(inner: GradientTransformation) -> GradientTransformation:
+    """Wrap ``inner`` with int8 gradient quantization + error feedback: the
+    EF residual keeps the quantization bias out of the long-run trajectory."""
     class State(NamedTuple):
         ef: dict
         inner: object

@@ -19,6 +19,8 @@ _RULE: contextvars.ContextVar[Callable | None] = contextvars.ContextVar("shard_r
 
 
 def constrain(x, kind: str):
+    """Apply the ambient sharding rule for ``kind`` to ``x`` (identity when
+    no rule is installed or the rule returns None for this kind/shape)."""
     rule = _RULE.get()
     if rule is None:
         return x
@@ -30,6 +32,8 @@ def constrain(x, kind: str):
 
 @contextlib.contextmanager
 def sharding_ctx(rule: Callable):
+    """Install ``rule(kind, shape) -> sharding|None`` for the duration of a
+    trace (see module docstring)."""
     tok = _RULE.set(rule)
     try:
         yield

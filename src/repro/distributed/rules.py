@@ -149,14 +149,34 @@ def param_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTree) -
 def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTree, opt) -> PyTree:
     """Shardings for an optimizer state built by ``opt.init(params)``.
 
-    SMMF factor vectors: r over "data"-aligned rows, c over "model", packed
-    sign matrix 2D-sharded — this is what makes the optimizer state (and its
-    checkpoint) O(sqrt(N)) *per chip* too. Dense fallback leaves (Adam m/v,
-    SM3 accumulators, ...) inherit the parameter's sharding where shapes
-    match, else replicate.
+    Bucket-stacked state is **sharded, not replicated** (the PR-1 layout
+    replicated every stack axis; docs/sharding.md documents the contract):
+
+    * SMMF factored tuples (r_m, c_m, sign, r_v, c_v): the leading ``K*B``
+      stack axis carries "data" (fsdp) whenever it is divisible
+      (:func:`repro.core.plan.bucket_stack_wants`); cols additionally carry
+      "model". When the stack is indivisible (e.g. single-leaf buckets like
+      the embedding) the working-matrix rules apply instead — rows over
+      "data", cols over "model". The packed sign matrix is always
+      2D-sharded. This keeps the optimizer state (and its checkpoint)
+      O(sqrt(N)) *per chip* too.
+    * Fused/stacked dense moments (``dense:flat:<dtype>`` rows, ``dense:N``
+      stacks) shard their flat element axis over "data".
+    * Bucket-stacked full-size rank>=2 moments (Adafactor/CAME/SM3 m) take
+      the parameter's sharding shifted one axis right, with the stack axis
+      picking up "data" when the param spec left it free.
+
+    Every spec here must agree with the in-update constraint kinds emitted
+    by the engine/optimizers ("smmf_matrix", "smmf_rows", "smmf_cols",
+    "smmf_sign", "dense_flat" in :func:`activation_rules`) — both sides
+    derive from :func:`repro.core.plan.bucket_partition_wants`, so a jitted
+    train step neither reshards state at entry nor breaks buffer donation.
     """
+    from repro.core.plan import bucket_partition_wants, bucket_stack_wants
+
     state_shape = jax.eval_shape(opt.init, params_shape)
     pspecs = param_shardings(mesh, cfg, params_shape)
+    data_size = _axsize(mesh, "data")
     pspec_by_shape: dict[tuple, NamedSharding] = {}
     for leaf, sh in zip(jax.tree.leaves(params_shape), jax.tree.leaves(pspecs)):
         pspec_by_shape.setdefault(tuple(leaf.shape), sh)
@@ -164,32 +184,61 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     def _one(path, leaf):
         shape = tuple(leaf.shape)
         if len(shape) == 2 and leaf.dtype == np.uint8:  # packed sign matrix
-            return NamedSharding(mesh, fit_spec(mesh, shape, ("data", "model")))
+            want = bucket_partition_wants("sign", shape, data_size)
+            return NamedSharding(mesh, fit_spec(mesh, shape, want))
         if shape in pspec_by_shape:  # full-size momentum: shard like the param
             return pspec_by_shape[shape]
         if len(shape) >= 3 and shape[1:] in pspec_by_shape:
             # bucket-stacked full-size rank>=2 moment (leaf-plan engine): the
-            # param's sharding shifted one axis right, stack axis replicated.
+            # param's sharding shifted one axis right; the stack axis picks
+            # up "data" when divisible and the param spec doesn't use it.
             # 2-D engine leaves stay on the factor-tuple heuristics below —
             # (K, n) factor vectors must not inherit a 1-D param's spec.
-            base = pspec_by_shape[shape[1:]].spec
-            return NamedSharding(mesh, P(None, *tuple(base)))
+            base = tuple(pspec_by_shape[shape[1:]].spec)
+            flat_base = [a for w in base if w is not None
+                         for a in (w if isinstance(w, tuple) else (w,))]
+            stack = ("data" if bucket_stack_wants(shape[0], data_size)
+                     and "data" not in flat_base else None)
+            return NamedSharding(mesh, P(stack, *base))
         parts = path.split("/")
         if (len(shape) == 2 and len(parts) >= 2
                 and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", parts[-2])):
             # SMMF factored-bucket tuple (r_m, c_m, sign, r_v, c_v) — the key
             # "fac:BxNxM" identifies it (adafactor/CAME/SM3 buckets never put
-            # 2-D leaves under a 3-int fac key): rows follow the matrix row
-            # sharding ("data"), cols the column sharding ("model")
-            want = "model" if parts[-1] in ("1", "4") else "data"
-            return NamedSharding(mesh, fit_spec(mesh, shape, (None, want)))
-        # everything else (stacked dense moments, row/col stats, SM3 accs):
-        # replicate — small vectors, same treatment as pre-engine layouts
+            # 2-D leaves under a 3-int fac key). Tuple slots 1 and 4 are the
+            # column factors, 0 and 3 the row factors.
+            kind = "cols" if parts[-1] in ("1", "4") else "rows"
+            want = bucket_partition_wants(kind, shape, data_size)
+            return NamedSharding(mesh, fit_spec(mesh, shape, want))
+        if (len(shape) == 2 and len(parts) >= 2
+                and re.match(r"dense:", parts[-2])):
+            # fused flat (1, total) rows or stacked (K, numel) dense moments:
+            # elementwise math, shard the element axis over "data"
+            want = bucket_partition_wants("dense", shape, data_size)
+            return NamedSharding(mesh, fit_spec(mesh, shape, want))
+        # everything else (row/col stats, SM3 accs, step scalars): replicate
+        # — small vectors, same treatment as pre-engine layouts
         return NamedSharding(mesh, P())
 
     from repro.utils.tree import tree_map_with_path
 
     return tree_map_with_path(_one, state_shape)
+
+
+def sharded_state_bytes(shardings: PyTree, state_shape: PyTree) -> int:
+    """Per-device bytes of a sharded pytree: sum of each leaf's *shard*
+    size under its NamedSharding (``shard_shape`` is pure spec math, so this
+    works with AbstractMesh placeholders — no arrays are allocated).
+
+    This is the accounting behind ``benchmarks/opt_memory_sharded.py`` and
+    the tier-1 sharded-bucket memory test: replicated leaves contribute
+    their full size on every device, stack-sharded buckets 1/axis of it.
+    """
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(state_shape), jax.tree.leaves(shardings)):
+        shard = sh.shard_shape(tuple(leaf.shape))
+        total += int(np.prod(shard)) * np.dtype(leaf.dtype).itemsize
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -272,15 +321,29 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
             if _pf().no_sp_residual:
                 return _ns(shape, (dp, None, "model"))
             return None
-        if kind == "smmf_matrix" and ndim == 3:  # (blocks, n_hat, m_hat)
+        if kind in ("smmf_matrix", "smmf_rows", "smmf_cols", "smmf_sign",
+                    "dense_flat"):
+            # bucket-stacked optimizer state: specs derive from the same
+            # per-bucket wants as opt_state_shardings, so the in-update
+            # constraints and the state layout always agree (no per-step
+            # resharding, donation-friendly)
+            from repro.core.plan import bucket_partition_wants
             from repro.models.perf import flags as _pf
 
             if _pf().smmf_no_constraint:
                 return None
-            # keep the square-matricized momentum 2D-sharded through
-            # decompress -> EMA -> compress (the transient full-size tensors
-            # never materialize unsharded on any chip)
-            return _ns(shape, (None, "data", "model"))
+            dsize = _axsize(mesh, "data")
+            if kind == "smmf_matrix" and ndim == 3:  # (K*B, n_hat, m_hat)
+                # keep the square-matricized momentum sharded through
+                # decompress -> EMA -> compress (the transient full-size
+                # tensors never materialize unsharded on any chip); the
+                # stack axis carries "data" whenever divisible
+                return _ns(shape, bucket_partition_wants("matrix", shape, dsize))
+            if ndim == 2:
+                sub = {"smmf_rows": "rows", "smmf_cols": "cols",
+                       "smmf_sign": "sign", "dense_flat": "dense"}[kind]
+                return _ns(shape, bucket_partition_wants(sub, shape, dsize))
+            return None
         return None
 
     return rule

@@ -132,6 +132,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf"
     compiled = lowered.compile()
     t2 = time.time()
 
+    if shape.kind == "train":
+        from repro.launch.steps import donation_report
+
+        rec["donation"] = donation_report(lowered)
+
     mem = compiled.memory_analysis()
     mem_rec = {}
     for k in ("temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
@@ -140,6 +145,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf"
         if v is not None:
             mem_rec[k] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # some jax versions: one dict per program
+        cost = cost[0] if cost else {}
     cost_rec = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
 
     # loop-trip-aware per-device analysis (cost_analysis counts while bodies
@@ -179,7 +186,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf"
     return rec
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """CLI definition (separate from main so tests/docs can introspect it —
+    every flag here must be documented in docs/cli.md; a parity test
+    enforces that)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="arch id (default: all)")
     ap.add_argument("--shape", default=None, help="shape name (default: all)")
@@ -191,7 +201,13 @@ def main() -> None:
     ap.add_argument("--blocks", type=int, default=0, help="SMMF blockwise factorization (0 = opt default)")
     ap.add_argument("--no-bucket", action="store_true", help="per-leaf baseline (no geometry bucketing)")
     ap.add_argument("--all", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    """Lower + compile every requested (arch x shape x mesh) cell and record
+    memory/FLOP/collective/donation analysis under results/dryrun/."""
+    args = build_parser().parse_args()
 
     archs = [args.arch] if args.arch else ARCH_IDS
     shapes = [args.shape] if args.shape else list(SHAPES)

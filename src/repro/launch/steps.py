@@ -52,7 +52,17 @@ def optimizer_launch_stats(opt: GradientTransformation, params: PyTree) -> dict 
 
 
 def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1):
-    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    The returned step is **donation-safe**: the non-finite-loss guard runs
+    *inside* the jitted function (a per-leaf select between the new and old
+    state), so callers may jit it with ``donate_argnums=(0, 1)`` — the
+    caller never needs the pre-call params/opt_state buffers again, even on
+    a skipped (NaN/inf) step. With ``grad_accum > 1`` the batch's leading
+    dim is split into that many sequential microbatches (gradients averaged
+    in f32); the accumulation buffer lives inside the jit so gradient
+    donation composes with accumulation.
+    """
     loss_fn = loss_fn_for(cfg)
 
     def train_step(params, opt_state, batch):
@@ -72,16 +82,27 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
                 lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]), batch
             )
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            m0 = {"ce": jnp.zeros(()), "aux": jnp.zeros(()), "loss": jnp.zeros(())}
+            # metrics structure differs per family (e.g. "aux" only for MoE):
+            # derive the accumulator from the loss fn's abstract output
+            m_sds = jax.eval_shape(lambda p, b: compute(p, b)[1], params,
+                                   jax.tree.map(lambda x: x[0], mbs))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_sds)
             (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), mbs)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             metrics = jax.tree.map(lambda x: x / grad_accum, metrics)
         else:
             (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params, batch)
 
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, metrics
+        updates, new_opt_state = opt.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        # in-jit divergence guard (paper Sec. 6 loss spikes): on a
+        # non-finite loss keep the previous params/optimizer state. Done
+        # here (not in the host loop) so the old buffers can be donated.
+        ok = jnp.isfinite(metrics["loss"])
+        new_params = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_params, params)
+        new_opt_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                     new_opt_state, opt_state)
+        return new_params, new_opt_state, metrics
 
     return train_step
 
@@ -116,6 +137,71 @@ def make_decode_step(cfg: ModelConfig):
         return jnp.argmax(logits[:, -1], axis=-1), cache
 
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# buffer-donation introspection (jax.stages)
+# ---------------------------------------------------------------------------
+
+def donation_report(lowered) -> dict:
+    """Summarize buffer donation for a ``jax.stages.Lowered`` step.
+
+    Reads the lowering's ``args_info`` (the jax.stages record of which
+    argument buffers were marked donatable via ``donate_argnums``) and
+    returns::
+
+        {"donated_args": int, "total_args": int,
+         "donated_bytes": int, "undonated_bytes": int}
+
+    Used by the train launcher and tests to assert the optimizer-state and
+    parameter buffers actually flow through the jitted update in place.
+    """
+    import numpy as _np
+
+    donated_args = total_args = donated_bytes = undonated_bytes = 0
+    for info in jax.tree.leaves(lowered.args_info):
+        aval = getattr(info, "aval", None) or info._aval  # ArgInfo aval
+        size = int(_np.prod(aval.shape)) * _np.dtype(aval.dtype).itemsize
+        total_args += 1
+        if info.donated:
+            donated_args += 1
+            donated_bytes += size
+        else:
+            undonated_bytes += size
+    return {"donated_args": donated_args, "total_args": total_args,
+            "donated_bytes": donated_bytes, "undonated_bytes": undonated_bytes}
+
+
+def assert_donation(lowered, compiled, min_alias_fraction: float = 0.5) -> dict:
+    """Assert a compiled train step donates and aliases its big buffers.
+
+    Two layers (both required):
+
+    * **static** — ``lowered.args_info`` must mark at least one argument
+      donated (the params/opt-state donate_argnums actually applied);
+    * **executable** — the compiled module's ``alias_size_in_bytes`` (XLA's
+      input-output alias table, i.e. buffers updated in place with no copy)
+      must cover at least ``min_alias_fraction`` of the donated bytes.
+      Donated-but-unaliased buffers mean XLA inserted unexpected copies —
+      exactly the allocation regression this guard exists to catch.
+
+    Returns the merged report dict (donation_report + ``alias_bytes``).
+    Raises RuntimeError on violation.
+    """
+    rep = donation_report(lowered)
+    if rep["donated_args"] == 0:
+        raise RuntimeError("no argument is marked donated — jit the step with "
+                           "donate_argnums=(0, 1) (params, opt_state)")
+    mem = compiled.memory_analysis()
+    alias = int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    rep["alias_bytes"] = alias
+    if alias < min_alias_fraction * rep["donated_bytes"]:
+        raise RuntimeError(
+            f"buffer donation degraded: {alias} aliased bytes vs "
+            f"{rep['donated_bytes']} donated "
+            f"(min fraction {min_alias_fraction}) — the update step is "
+            f"re-allocating state buffers instead of updating in place")
+    return rep
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,11 @@ import jax
 
 from repro.configs import get_config, smoke_config
 from repro.data import SyntheticLMStream
-from repro.launch.steps import make_train_step, optimizer_launch_stats
+from repro.launch.steps import (
+    assert_donation,
+    make_train_step,
+    optimizer_launch_stats,
+)
 from repro.models import init_encdec, init_lm
 from repro.optim import adafactor, adam, came, sm3
 from repro.core.smmf import smmf
@@ -52,7 +56,10 @@ def build_optimizer(name: str, lr: float, family: str, *,
     }[name]()
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """CLI definition (separate from main so tests/docs can introspect it —
+    every flag here must be documented in docs/cli.md; a parity test
+    enforces that)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
@@ -67,13 +74,29 @@ def main() -> None:
                     help="route factored buckets through the fused Pallas kernel")
     ap.add_argument("--no-bucket", action="store_true",
                     help="per-leaf baseline (disable geometry bucketing)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="split the batch into N sequential microbatches "
+                         "(gradient accumulation inside the jitted step)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable params/opt-state buffer donation (debug)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main() -> None:
+    """Entry point: build model + optimizer, compile the (donating) train
+    step, verify the kernel and donation paths, run the fault-tolerant
+    loop."""
+    ap = build_parser()
     args = ap.parse_args()
     if args.use_kernel and args.opt not in ("smmf", "smmf_local"):
         ap.error(f"--use-kernel is only supported with --opt smmf|smmf_local "
                  f"(got --opt {args.opt})")
+    if args.grad_accum < 1 or args.batch % args.grad_accum:
+        ap.error(f"--grad-accum must be >= 1 and divide --batch "
+                 f"(got {args.grad_accum} vs batch {args.batch})")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, opt={args.opt}")
@@ -111,9 +134,22 @@ def main() -> None:
         kernel_launches0 = _kops.KERNEL_LAUNCHES
 
     stream = SyntheticLMStream(cfg, args.batch, args.seq, seed=args.seed)
-    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    donate = () if args.no_donate else (0, 1)
+    step_fn = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum),
+                      donate_argnums=donate)
+    # AOT-compile against the real shapes so the donation contract can be
+    # checked (jax.stages args_info + the executable's alias table) before
+    # any step runs — the step must update params/opt state in place, not
+    # re-allocate every moment buffer
+    lowered = step_fn.lower(params, opt_state, stream.batch(0))
+    compiled = lowered.compile()
+    if not args.no_donate:
+        rep = assert_donation(lowered, compiled)
+        print(f"[train] donation verified: {rep['donated_args']}/{rep['total_args']} "
+              f"args donated, {rep['alias_bytes']/1e6:.2f}MB aliased in place "
+              f"of {rep['donated_bytes']/1e6:.2f}MB donated")
     loop = TrainLoop(
-        step_fn, params, opt_state, stream,
+        compiled, params, opt_state, stream,
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir, log_every=10),
     )

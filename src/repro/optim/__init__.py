@@ -1,3 +1,7 @@
+"""Optimizer package: the optax-style base protocol, the bucketed leaf-plan
+engine, and the SMMF-paper baseline family (adam/adamw, adafactor, came,
+sm3, sgd). The SMMF optimizer itself lives in ``repro.core.smmf``."""
+
 from repro.optim.adafactor import adafactor
 from repro.optim.adam import adam, adamw
 from repro.optim.base import (

@@ -16,6 +16,9 @@ import jax
 
 
 def multimap(fn, ref_tree, *trees, nout: int):
+    """Map ``fn(ref_leaf, *state_leaves) -> nout-tuple`` over ``ref_tree``'s
+    structure, returning ``nout`` trees (state trees may hold subtrees per
+    ref leaf — they are flattened up to the ref treedef)."""
     flat_ref, treedef = jax.tree.flatten(ref_tree)
     flats = [treedef.flatten_up_to(t) for t in trees]
     results = [fn(r, *(f[i] for f in flats)) for i, r in enumerate(flat_ref)]

@@ -50,10 +50,14 @@ def adafactor(
     weight_decay: float = 0.0,
     bucket: bool = True,
 ) -> GradientTransformation:
+    """Adafactor on the leaf-plan engine (see module docstring). Dense
+    rank<=1 leaves keep per-geometry buckets — the per-leaf RMS update clip
+    reduces over each leaf, so they cannot legally be flat-fused."""
     lr_fn = as_schedule(lr)
     plan_fn = lasttwo_planner()
 
     def plan(params) -> LeafPlanEngine:
+        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
         return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):

@@ -25,6 +25,8 @@ def adam(
     bias_correction: bool = True,
     decoupled_weight_decay: bool = False,
 ) -> GradientTransformation:
+    """Adam with full f32 moments (the paper's 2N-floats memory baseline);
+    ``decoupled_weight_decay=True`` gives AdamW."""
     lr_fn = as_schedule(lr)
 
     def init(params):
@@ -60,4 +62,5 @@ def adam(
 
 
 def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> GradientTransformation:
+    """AdamW: Adam with decoupled weight decay (Loshchilov & Hutter 2019)."""
     return adam(lr, b1, b2, eps, weight_decay=weight_decay, decoupled_weight_decay=True)

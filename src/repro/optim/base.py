@@ -67,6 +67,7 @@ class ClipState(NamedTuple):
 
 
 def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    """Scale the whole gradient tree so its global L2 norm is <= max_norm."""
     def init(params):
         del params
         return ClipState()
@@ -82,6 +83,8 @@ def clip_by_global_norm(max_norm: float) -> GradientTransformation:
 
 
 def as_schedule(lr) -> Schedule:
+    """Lift a constant learning rate to a step->lr schedule (callables pass
+    through unchanged)."""
     if callable(lr):
         return lr
     return lambda step: jnp.asarray(lr, jnp.float32)
@@ -93,6 +96,7 @@ def optimizer_state_bytes(state: PyTree) -> int:
 
 
 def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1) -> Schedule:
+    """Linear warmup to peak_lr then cosine decay to min_ratio * peak_lr."""
     def sched(step):
         step = jnp.asarray(step, jnp.float32)
         warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)

@@ -47,10 +47,14 @@ def came(
     weight_decay: float = 0.0,
     bucket: bool = True,
 ) -> GradientTransformation:
+    """CAME on the leaf-plan engine (see module docstring). Dense rank<=1
+    leaves keep per-geometry buckets — the per-leaf RMS clip reduces over
+    each leaf, so they cannot legally be flat-fused."""
     lr_fn = as_schedule(lr)
     plan_fn = lasttwo_planner()
 
     def plan(params) -> LeafPlanEngine:
+        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
         return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):

@@ -11,16 +11,34 @@ a working geometry, then run elementwise-plus-reduction math per leaf. The
 * at ``update`` it **stacks** each bucket's gradients along a new leading
   axis, so the optimizer runs one vectorized (or fused Pallas) launch per
   bucket instead of one per leaf, and scatters the stacked result back to
-  the original leaves.
+  the original leaves;
+* with ``fuse_dense=True`` (SMMF default) every dense-fallback leaf of a
+  dtype is **concatenated** into a single flat ``(1, total)`` row — dense
+  math is elementwise, so fallback-heavy trees pay one launch per dtype.
 
-Because stacking only adds a leading batch axis, the bucketed math is
-element-for-element identical to the per-leaf path (``bucket=False``
-recovers it exactly — one single-leaf bucket per parameter).
+Because stacking only adds a leading batch axis (and fused concatenation
+only reorders elementwise work), the bucketed math is element-for-element
+identical to the per-leaf path (``bucket=False`` recovers it exactly — one
+single-leaf bucket per parameter).
 
 State layout convention: each optimizer stores ``dict[bucket.key ->
 tuple(arrays)]`` with the leading axis of every array indexing the bucket's
-leaves. Bucket keys are deterministic functions of the parameter shapes and
-engine config, so checkpoints are reproducible.
+leaves (length ``bucket.stack``; 1 for fused dense). Bucket keys are
+deterministic functions of the parameter shapes and engine config, so
+checkpoints are reproducible.
+
+Distribution invariants (see ``docs/sharding.md``):
+
+* Bucket-stacked state is **not replicated** on a mesh: the stack axis
+  carries the "data"/fsdp axis whenever it is divisible
+  (:func:`repro.core.plan.bucket_partition_wants`), and the engine's gather
+  emits ``with_sharding_constraint`` on fused dense rows so the placement
+  agrees with ``repro.distributed.rules.opt_state_shardings``.
+* The whole optimizer state is **donation-safe**: ``update`` consumes every
+  state array exactly once and returns fresh arrays of identical
+  shape/dtype/sharding, so callers may jit the train step with
+  ``donate_argnums`` covering params and optimizer state and XLA will alias
+  the buffers in place (asserted by ``repro.launch.steps.assert_donation``).
 """
 
 from __future__ import annotations
@@ -31,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import Bucket, LeafPlan, build_buckets
+from repro.distributed.ctx import constrain
 
 PyTree = Any
 
@@ -43,51 +62,88 @@ class LeafPlanEngine:
     """Static per-params plan: built at trace time, drives bucketed updates.
 
     ``plan_fn(index, shape) -> LeafPlan`` encodes the optimizer's
-    factorization policy (see ``repro.core.plan`` planners).
+    factorization policy (see ``repro.core.plan`` planners). ``bucket=False``
+    is the per-leaf baseline; ``fuse_dense=True`` concatenates all
+    dense-fallback leaves of a dtype into one flat launch (only legal when
+    the optimizer's dense math is purely elementwise — SMMF's plain-Adam
+    fallback is, Adafactor/CAME's per-leaf RMS clip is not).
     """
 
     def __init__(self, params: PyTree, plan_fn: Callable[[int, tuple[int, ...]], LeafPlan],
-                 *, bucket: bool = True):
+                 *, bucket: bool = True, fuse_dense: bool = False):
+        import dataclasses
+
         flat, treedef = jax.tree.flatten(params)
         self.treedef = treedef
         self.plans: tuple[LeafPlan, ...] = tuple(
-            plan_fn(i, tuple(p.shape)) for i, p in enumerate(flat)
+            dataclasses.replace(
+                plan_fn(i, tuple(p.shape)),
+                dtype=str(jnp.dtype(getattr(p, "dtype", jnp.float32))),
+            )
+            for i, p in enumerate(flat)
         )
-        self.buckets: tuple[Bucket, ...] = build_buckets(self.plans, bucket)
+        self.buckets: tuple[Bucket, ...] = build_buckets(
+            self.plans, bucket, fuse_dense=fuse_dense
+        )
 
     # -- pytree plumbing ---------------------------------------------------
 
     def leaves(self, tree: PyTree) -> list:
+        """Flatten ``tree`` in the engine's canonical leaf order."""
         return self.treedef.flatten_up_to(tree)
 
     def unflatten(self, flat: Sequence) -> PyTree:
+        """Rebuild a pytree from the engine's canonical leaf order."""
         return jax.tree.unflatten(self.treedef, list(flat))
 
     def gather(self, flat: Sequence, bucket: Bucket) -> jnp.ndarray:
-        """Stack a bucket's leaves to (K, *geometry) float32."""
+        """Stack a bucket's leaves to (K, *geometry) float32.
+
+        Fused dense buckets concatenate instead: the result is a single
+        ``(1, total_numel)`` row, sharding-constrained ("dense_flat") so the
+        transient gradient row lands where the fused moments live.
+        """
+        if bucket.fused:
+            parts = [flat[i].reshape(-1).astype(jnp.float32) for i in bucket.indices]
+            row = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            return constrain(row[None], "dense_flat")
         parts = [flat[i].reshape(bucket.geometry).astype(jnp.float32) for i in bucket.indices]
         if len(parts) == 1:
             return parts[0][None]
         return jnp.stack(parts)
 
     def scatter(self, bucket: Bucket, stacked: jnp.ndarray, out_flat: list) -> None:
-        """Split a (K, ...) stacked result back into per-leaf shapes."""
+        """Split a (K, ...) stacked (or (1, total) fused) result back into
+        per-leaf shapes at their flat-param indices."""
+        if bucket.fused:
+            row = stacked.reshape(-1)
+            for off, p in zip(bucket.offsets, bucket.plans):
+                out_flat[p.index] = row[off:off + p.numel].reshape(p.shape)
+            return
         for k, p in enumerate(bucket.plans):
             out_flat[p.index] = stacked[k].reshape(p.shape)
 
     # -- introspection -----------------------------------------------------
 
     def stats(self) -> dict:
-        """Static launch/footprint accounting (used by the CLI smoke assert
-        and benchmarks/step_time.py): one update launch per bucket vs one
-        per leaf in the unbucketed baseline."""
+        """Static launch/footprint accounting.
+
+        Used by the CLI smoke assert and ``benchmarks/step_time.py``: one
+        update launch per bucket vs one per leaf in the unbucketed baseline.
+        A fused dense bucket counts as **one** launch regardless of how many
+        leaves it concatenates (``dense_buckets`` is the post-fusion launch
+        count; ``fused_dense_leaves`` is how many leaves it swallowed), so
+        the ``launches`` column stays truthful after dense fusion.
+        """
         fac = [b for b in self.buckets if b.factorized]
+        dense = [b for b in self.buckets if not b.factorized]
         return {
             "leaves": len(self.plans),
             "buckets": len(self.buckets),
             "update_launches": len(self.buckets),
             "factored_buckets": len(fac),
-            "dense_buckets": len(self.buckets) - len(fac),
+            "dense_buckets": len(dense),
+            "fused_dense_leaves": sum(b.size for b in dense if b.fused),
             "kernel_buckets": sum(1 for b in fac if b.kernel_ok),
         }
 

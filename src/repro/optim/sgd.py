@@ -16,6 +16,7 @@ class SGDState(NamedTuple):
 
 
 def sgd(lr=1e-2, momentum: float = 0.0, weight_decay: float = 0.0) -> GradientTransformation:
+    """Plain SGD; ``momentum > 0`` adds a heavy-ball momentum buffer."""
     lr_fn = as_schedule(lr)
 
     def init(params):

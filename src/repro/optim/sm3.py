@@ -32,10 +32,14 @@ class SM3State(NamedTuple):
 
 def sm3(lr=1e-3, beta1: float | None = 0.9, eps: float = 1e-30,
         bucket: bool = True) -> GradientTransformation:
+    """SM3-II on the leaf-plan engine (see module docstring); every leaf is
+    'factorized' into per-axis cover accumulators, so there are no dense
+    fallback buckets to fuse."""
     lr_fn = as_schedule(lr)
     plan_fn = axiscover_planner()
 
     def plan(params) -> LeafPlanEngine:
+        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
         return LeafPlanEngine(params, plan_fn, bucket=bucket)
 
     def init(params):

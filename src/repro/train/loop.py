@@ -12,6 +12,15 @@ Production behaviours implemented (and simulated/tested on CPU):
 * **NaN/divergence guard**: non-finite loss skips the update (params and
   optimizer state are kept from the previous step) and is counted —
   the SMMF paper's loss-spike discussion (Sec. 6) motivates this guard.
+
+Donation contract: the loop always adopts whatever (params, opt_state) the
+step function returns and never touches the pre-call buffers again, so
+``step_fn`` may be jitted with ``donate_argnums=(0, 1)`` (or be an AOT
+``Compiled`` with donated inputs) — the old buffers are dead the moment the
+call returns. The NaN guard therefore lives *inside* the step
+(``repro.launch.steps.make_train_step`` selects old-vs-new state in-jit);
+a step_fn without an in-step guard still gets its skips counted here, but
+must itself return the untouched state on a bad step.
 """
 
 from __future__ import annotations
@@ -102,12 +111,14 @@ class TrainLoop:
             loss = float(jax.device_get(metrics["loss"]))
             dt = time.time() - t0
 
+            # donation contract: the pre-call buffers may have been donated,
+            # so ALWAYS adopt the returned state — the step's in-jit NaN
+            # guard already selected old-vs-new (see module docstring)
+            self.params, self.opt_state = new_params, new_opt
             if not np.isfinite(loss):
-                # divergence guard: drop this update (Sec. 6 loss spikes)
+                # divergence guard tripped in-step (Sec. 6 loss spikes)
                 self.skipped_nan_steps += 1
                 print(f"[trainloop] step {step}: non-finite loss, update skipped", flush=True)
-            else:
-                self.params, self.opt_state = new_params, new_opt
 
             if ewma is not None and dt > self.cfg.straggler_factor * ewma:
                 self.straggler_steps += 1

@@ -1,0 +1,88 @@
+"""Subprocess child for the sharded-vs-replicated update parity test.
+
+Must run in its own process: it forces 4 host devices via XLA_FLAGS, which
+is read at first jax import. Prints "PARITY OK" on success (the parent
+test asserts on it); any mismatch raises and the parent sees the traceback.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+).strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.smmf import smmf  # noqa: E402
+from repro.distributed import rules  # noqa: E402
+from repro.distributed.ctx import sharding_ctx  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.base import apply_updates  # noqa: E402
+
+# four same-geometry 2-D leaves -> one bucket with stack K*B = 4, divisible
+# by the 4-way data axis (stack-sharded path); two 1-D leaves -> K*B = 2
+# bucket (fallback row/col path); a scalar -> fused dense path
+SHAPES = {
+    "wq": (32, 64), "wk": (32, 64), "wv": (32, 64), "wo": (32, 64),
+    "b1": (64,), "b2": (64,),
+    "s": (),
+}
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def main() -> None:
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
+    opt = smmf(1e-2, decay_rate=-0.8)
+    params = _tree(0)
+    state = opt.init(params)
+
+    psh = rules.param_shardings(mesh, None, params)
+    osh = rules.opt_state_shardings(mesh, None, params, opt)
+    rule = rules.activation_rules(mesh, cfg, "train")
+
+    params_s = jax.device_put(params, psh)
+    state_s = jax.device_put(state, osh)
+
+    def upd_with_constraints(g, s, p):
+        # the sharding context must be active while *tracing* (first call)
+        with sharding_ctx(rule):
+            return opt.update(g, s, p)
+
+    upd_s = jax.jit(upd_with_constraints, in_shardings=(psh, osh, psh),
+                    out_shardings=(psh, osh))
+    upd_r = jax.jit(opt.update)
+
+    # the big factored bucket's state must actually be distributed
+    fac = state_s.factors["fac:1x64x32"]
+    n_shards = len({str(s.index) for s in fac[0].addressable_shards})
+    assert n_shards == 4, f"stacked r_m not stack-sharded: {n_shards} shards"
+
+    for step in range(3):
+        grads = _tree(100 + step)
+        u_r, state = upd_r(grads, state, params)
+        u_s, state_s = upd_s(jax.device_put(grads, psh), state_s, params_s)
+        params = apply_updates(params, u_r)
+        params_s = apply_updates(params_s, u_s)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(params[k]), np.asarray(params_s[k]),
+                rtol=1e-6, atol=1e-7, err_msg=f"step {step} leaf {k}")
+        for i, (a, b) in enumerate(zip(jax.tree.leaves(state),
+                                       jax.tree.leaves(state_s))):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7,
+                err_msg=f"step {step} state leaf {i}")
+    print("PARITY OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""argparse ↔ docs/cli.md parity: no launcher flag may land undocumented.
+
+Each launcher exposes ``build_parser()``; this test diffs the parser's
+option strings against the ``--flag`` tokens in the matching section of
+docs/cli.md, in both directions (undocumented flag = failure, stale doc row
+= failure).
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.launch.dryrun import build_parser as dryrun_parser
+from repro.launch.train import build_parser as train_parser
+
+CLI_MD = Path(__file__).resolve().parents[1] / "docs" / "cli.md"
+
+SECTIONS = {
+    "repro.launch.train": train_parser,
+    "repro.launch.dryrun": dryrun_parser,
+}
+
+
+def _doc_sections() -> dict[str, str]:
+    """Split docs/cli.md into module-named '## ...' sections."""
+    text = CLI_MD.read_text()
+    out = {}
+    for name in SECTIONS:
+        m = re.search(rf"^## .*{re.escape(name)}.*?$(.*?)(?=^## |\Z)",
+                      text, re.M | re.S)
+        assert m, f"docs/cli.md has no section for {name}"
+        out[name] = m.group(1)
+    return out
+
+
+def _parser_flags(parser) -> set[str]:
+    """All --long option strings of a parser (minus argparse's --help)."""
+    flags = set()
+    for action in parser._actions:
+        flags.update(s for s in action.option_strings if s.startswith("--"))
+    flags.discard("--help")
+    return flags
+
+
+@pytest.mark.parametrize("name", sorted(SECTIONS))
+def test_cli_docs_parity(name):
+    section = _doc_sections()[name]
+    documented = set(re.findall(r"`(--[a-z][a-z0-9-]*)`", section))
+    actual = _parser_flags(SECTIONS[name]())
+    undocumented = actual - documented
+    stale = documented - actual
+    assert not undocumented, (
+        f"{name}: flags missing from docs/cli.md: {sorted(undocumented)}")
+    assert not stale, (
+        f"{name}: docs/cli.md documents non-existent flags: {sorted(stale)}")

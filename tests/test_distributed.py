@@ -9,7 +9,7 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed import rules
 from repro.launch import specs as S
-from repro.models.config import SHAPES
+from repro.models.config import SHAPES, ModelConfig
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))
 MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
@@ -129,6 +129,85 @@ def test_serving_engine_generates():
     for r in reqs:
         assert r.done and len(r.out) == 6
         assert all(0 <= t < 64 for t in r.out)
+
+
+# ---------------------------------------------------------------------------
+# sharded bucket stacks + donation (PR 2)
+# ---------------------------------------------------------------------------
+
+def test_sharded_bucket_bytes_shrink_linearly():
+    """Per-device optimizer-state bytes shrink ~linearly with the fsdp axis
+    (acceptance: <= 30% of replicated on a 4-way AbstractMesh for
+    smmf/transformer_base — the benchmarks/opt_memory_sharded.py metric)."""
+    from repro.core.smmf import smmf
+
+    cfg = get_config("transformer_base")
+    psds = S.params_specs(cfg)
+    opt = smmf(1e-3, decay_rate=-0.8)
+    state_sds = jax.eval_shape(opt.init, psds)
+
+    def per_dev(ways):
+        mesh = AbstractMesh((("data", ways),))
+        sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+        return rules.sharded_state_bytes(sh, state_sds)
+
+    base = per_dev(1)
+    from repro.utils.tree import tree_bytes
+
+    assert base == tree_bytes(state_sds)  # 1-way == replicated total
+    assert per_dev(2) <= 0.55 * base
+    assert per_dev(4) <= 0.30 * base     # PR-2 acceptance criterion
+    assert per_dev(8) <= 0.20 * base
+
+
+def test_sharded_vs_replicated_update_parity():
+    """On a real (forced-host) 4-device mesh, the stack-sharded update is
+    numerically identical to the replicated one and the bucket stack is
+    actually distributed. Runs as a subprocess: the forced device count is
+    read at first jax import."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    here = Path(__file__).resolve().parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{here.parent / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, str(here / "_sharded_update_child.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "PARITY OK" in out.stdout
+
+
+def test_donation_with_grad_accum():
+    """Donating params+opt state through the jitted step leaves no
+    aliased-buffer errors under gradient accumulation, the jax.stages
+    args_info marks them donated, and the executable aliases the bytes."""
+    from repro.core.smmf import smmf
+    from repro.data import SyntheticLMStream
+    from repro.launch.steps import assert_donation, make_train_step
+    from repro.models import init_lm
+
+    cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    opt = smmf(1e-3, decay_rate=-0.8)
+    opt_state = opt.init(params)
+    stream = SyntheticLMStream(cfg, 4, 16, seed=0)
+
+    step_fn = jax.jit(make_train_step(cfg, opt, grad_accum=2), donate_argnums=(0, 1))
+    lowered = step_fn.lower(params, opt_state, stream.batch(0))
+    compiled = lowered.compile()
+    rep = assert_donation(lowered, compiled)
+    assert rep["donated_args"] > 0 and rep["alias_bytes"] > 0
+
+    # consecutive steps re-donating the returned buffers: no
+    # "Array has been deleted" / aliasing errors, finite results
+    for step in range(3):
+        params, opt_state, metrics = compiled(params, opt_state, stream.batch(step))
+    assert np.isfinite(float(metrics["loss"]))
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(params))
 
 
 def test_mesh_construction_shapes():

@@ -202,3 +202,71 @@ def test_kernel_plan_covers_all_factored_buckets():
     params = _transformer_params()
     stats = smmf(1e-3, use_kernel=True, blocks=4).plan(params).stats()
     assert stats["kernel_buckets"] == stats["factored_buckets"] > 0
+
+
+# ---------------------------------------------------------------------------
+# fused dense fallback: one concatenated launch per dtype
+# ---------------------------------------------------------------------------
+
+# fallback-heavy tree (vector_reshape=False keeps 1-D leaves dense): four
+# dense leaves with three distinct element counts, plus factored matrices
+FB_SHAPES = {
+    "w1": (24, 32), "w2": (24, 32),
+    "b1": (48,), "b2": (48,), "b3": (80,),
+    "scalar": (),
+}
+
+
+def _fb_tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s).astype(np.float32))
+            for k, s in FB_SHAPES.items()}
+
+
+def _run_fb(opt, steps=5, seed0=300):
+    params = _fb_tree(0)
+    state = opt.init(params)
+    for s in range(steps):
+        u, state = opt.update(_fb_tree(seed0 + s), state, params)
+        params = apply_updates(params, u)
+    return params
+
+
+def test_fused_dense_counts_as_one_launch():
+    """stats() launch accounting: the fused dense-fallback launch counts as
+    1 (not one per distinct element count) so the benchmarks' launches
+    column stays truthful; fuse_dense=False recovers per-geometry buckets."""
+    params = _fb_tree(0)
+    fused = smmf(1e-3, vector_reshape=False).plan(params).stats()
+    assert fused["dense_buckets"] == 1
+    assert fused["fused_dense_leaves"] == 4
+    assert fused["update_launches"] == fused["factored_buckets"] + 1
+    unfused = smmf(1e-3, vector_reshape=False, fuse_dense=False).plan(params).stats()
+    assert unfused["dense_buckets"] == 3          # one per distinct numel
+    assert unfused["fused_dense_leaves"] == 0
+    # per-leaf baseline never fuses
+    nobucket = smmf(1e-3, vector_reshape=False, bucket=False).plan(params).stats()
+    assert nobucket["update_launches"] == len(FB_SHAPES)
+
+
+def test_fused_dense_groups_by_dtype():
+    """Mixed-dtype dense leaves dispatch one fused launch per dtype."""
+    params = {"a": jnp.zeros((6,), jnp.float32),
+              "b": jnp.zeros((10,), jnp.bfloat16),
+              "c": jnp.zeros((10,), jnp.float32)}
+    stats = smmf(1e-3, vector_reshape=False).plan(params).stats()
+    assert stats["dense_buckets"] == 2
+    assert stats["fused_dense_leaves"] == 3
+
+
+def test_fused_dense_matches_unfused_and_per_leaf():
+    """Fusing the dense fallback is a pure dispatch change: results are
+    identical to per-geometry buckets and the per-leaf baseline."""
+    a = _run_fb(smmf(1e-2, decay_rate=-0.8, vector_reshape=False))
+    b = _run_fb(smmf(1e-2, decay_rate=-0.8, vector_reshape=False, fuse_dense=False))
+    c = _run_fb(smmf(1e-2, decay_rate=-0.8, vector_reshape=False, bucket=False))
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=f"fused-vs-unfused {k}")
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(c[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=f"fused-vs-perleaf {k}")

@@ -172,10 +172,13 @@ def test_vector_reshape_off_uses_dense_adam_path():
     opt = smmf(lr=1e-2, vector_reshape=False)
     p = {"b": jnp.zeros((64,))}
     s = opt.init(p)
-    # fallback bucket: full-size m and v, stacked (K=1, numel)
-    assert set(s.factors) == {"dense:64"}
-    m, v = s.factors["dense:64"]
+    # fused fallback bucket: full-size m and v as one flat (1, total) row
+    assert set(s.factors) == {"dense:flat:float32"}
+    m, v = s.factors["dense:flat:float32"]
     assert m.shape == v.shape == (1, 64)
+    # fuse_dense=False restores the per-geometry dense:NUM layout
+    s1 = smmf(lr=1e-2, vector_reshape=False, fuse_dense=False).init(p)
+    assert set(s1.factors) == {"dense:64"}
     # factorized when vector_reshape=True: O(sqrt) factors instead
     s2 = smmf(lr=1e-2).init(p)
     assert set(s2.factors) == {"fac:1x8x8"}

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Docstring lint for the public engine/optimizer/distributed surface.
+
+Fails (exit 1) when a Python file under ``src/repro/{core,optim,distributed}``
+contains a *public* function, method, or class without a docstring, or a
+module without a module docstring. Public means the name has no leading
+underscore; nested (closure) functions — e.g. the planners' inner ``plan``
+or optimizer ``init``/``update`` closures — are exempt, as are dunder
+methods and NamedTuple/dataclass field-only bodies.
+
+Run from the repo root (CI docs job does):
+
+    python tools/check_docstrings.py [--root src/repro] [pkg ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+DEFAULT_PKGS = ("core", "optim", "distributed")
+
+
+def _is_fieldonly_class(node: ast.ClassDef) -> bool:
+    """True for bodies that are only field annotations / assignments
+    (NamedTuple-style records read fine without a docstring)."""
+    return all(isinstance(s, (ast.AnnAssign, ast.Assign, ast.Pass)) for s in node.body)
+
+
+def check_file(path: Path) -> list[str]:
+    """Return human-readable violations for one Python file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out = []
+    if ast.get_docstring(tree) is None:
+        out.append(f"{path}:1 module lacks a docstring")
+
+    def visit(node, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = child.name
+                if not name.startswith("_") and ast.get_docstring(child) is None:
+                    out.append(f"{path}:{child.lineno} public "
+                               f"{'method' if prefix else 'function'} "
+                               f"{prefix}{name} lacks a docstring")
+                # do NOT recurse: nested closures are implementation detail
+            elif isinstance(child, ast.ClassDef):
+                if not child.name.startswith("_"):
+                    if ast.get_docstring(child) is None and not _is_fieldonly_class(child):
+                        out.append(f"{path}:{child.lineno} public class "
+                                   f"{child.name} lacks a docstring")
+                    visit(child, f"{child.name}.")
+
+    visit(tree, "")
+    return out
+
+
+def main() -> int:
+    """Lint all requested packages; print violations and return exit code."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pkgs", nargs="*", default=list(DEFAULT_PKGS),
+                    help=f"packages under --root to lint (default: {DEFAULT_PKGS})")
+    ap.add_argument("--root", default="src/repro")
+    args = ap.parse_args()
+
+    violations: list[str] = []
+    for pkg in args.pkgs or DEFAULT_PKGS:
+        base = Path(args.root) / pkg
+        if not base.is_dir():
+            print(f"error: {base} is not a directory", file=sys.stderr)
+            return 2
+        for py in sorted(base.rglob("*.py")):
+            violations += check_file(py)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} docstring violation(s)", file=sys.stderr)
+        return 1
+    print("docstring check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Markdown link check for docs/ + README.md (CI docs job).
+
+Verifies every relative ``[text](target)`` link resolves to an existing
+file or directory (anchors are stripped; ``http(s)``/``mailto`` targets are
+skipped so the check stays deterministic offline). Exit 1 on any broken
+link.
+
+    python tools/check_links.py [files-or-dirs ...]   # default: docs README.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images is unnecessary; same resolution rule
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(md: Path) -> list[str]:
+    """Return broken-link messages for one markdown file."""
+    out = []
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        for target in _LINK_RE.findall(line):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            if not (md.parent / path).exists():
+                out.append(f"{md}:{i} broken link -> {target}")
+    return out
+
+
+def main() -> int:
+    """Check all markdown files under the given paths (default docs/ + README)."""
+    roots = [Path(p) for p in sys.argv[1:]] or [Path("docs"), Path("README.md")]
+    files: list[Path] = []
+    for r in roots:
+        if r.is_dir():
+            files += sorted(r.rglob("*.md"))
+        elif r.exists():
+            files.append(r)
+        else:
+            print(f"error: {r} does not exist", file=sys.stderr)
+            return 2
+    broken: list[str] = []
+    for f in files:
+        broken += check_file(f)
+    for b in broken:
+        print(b)
+    if broken:
+        print(f"\n{len(broken)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"link check: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
