@@ -12,12 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.smmf import smmf
 from repro.data import SyntheticImageStream, SyntheticLMStream
 from repro.launch.steps import make_train_step
 from repro.models import cnn_loss, init_cnn, init_lm
 from repro.models.config import ModelConfig
-from repro.optim import adafactor, adam, came, sm3
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.optim.base import apply_updates
 from repro.utils.tree import tree_bytes
 
@@ -25,11 +24,12 @@ from repro.utils.tree import tree_bytes
 def _opts(lr, family):
     gamma = -0.5 if family == "cnn" else -0.8
     return {
-        "adam": adam(lr),
-        "adafactor": adafactor(lr),
-        "sm3": sm3(lr),
-        "came": came(lr),
-        "smmf": smmf(lr, decay_rate=gamma),
+        "adam": build_optimizer(OptimizerSpec(family="adam", hyperparams={"lr": lr})),
+        "adafactor": build_optimizer(OptimizerSpec(family="adafactor", hyperparams={"lr": lr})),
+        "sm3": build_optimizer(OptimizerSpec(family="sm3", hyperparams={"lr": lr})),
+        "came": build_optimizer(OptimizerSpec(family="came", hyperparams={"lr": lr})),
+        "smmf": build_optimizer(OptimizerSpec(family="smmf",
+                                              hyperparams={"lr": lr, "decay_rate": gamma})),
     }
 
 

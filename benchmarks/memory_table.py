@@ -16,19 +16,30 @@ from __future__ import annotations
 import jax
 
 from repro.configs import ARCH_IDS, PAPER_IDS, get_config, smoke_config
-from repro.core.smmf import smmf
 from repro.launch import specs as S
 from repro.models import init_cnn
-from repro.optim import adafactor, adam, came, sm3
+from repro.optim import (
+    OptimizerSpec,
+    Partition,
+    build_optimizer,
+    state_bytes_by_group,
+)
 from repro.utils.tree import tree_bytes
 
 OPTS = {
-    "adam": lambda: adam(1e-3),
-    "adafactor": lambda: adafactor(1e-3),
-    "sm3": lambda: sm3(1e-3),
-    "came": lambda: came(1e-3),
-    "smmf": lambda: smmf(1e-3),
+    name: (lambda n=name: build_optimizer(OptimizerSpec(family=n,
+                                                        hyperparams={"lr": 1e-3})))
+    for name in ("adam", "adafactor", "sm3", "came", "smmf")
 }
+
+# mixed partition-aware spec tracked in the perf trajectory: SMMF on the
+# matrices, plain Adam on norms/biases/scales (the per-group column shows
+# where the state bytes live)
+MIXED_SPEC = OptimizerSpec(
+    family="smmf", hyperparams={"lr": 1e-3},
+    partitions=(Partition(name="norms", match=r"norm|scale$|bias$|lam$",
+                          family="adam"),),
+)
 
 
 def _measure(params_sds) -> dict[str, int]:
@@ -47,6 +58,33 @@ def rows():
     return out
 
 
+def group_rows():
+    """Per-group state bytes: the mixed smmf+adam spec on every arch, plus a
+    LoRA-style frozen-base row (base frozen, rank-8 adapters on SMMF) —
+    the frozen group's 0 bytes IS the LoRA memory win."""
+    out = []
+    for arch in PAPER_IDS + ARCH_IDS:
+        sds = S.params_specs(get_config(arch))
+        opt = build_optimizer(MIXED_SPEC)
+        out.append((f"{arch} (mixed)", state_bytes_by_group(opt, sds)))
+    # LoRA row: frozen base + adapters, one spec-built optimizer
+    from repro.models import init_lm
+    from repro.train.lora import lora_init
+
+    cfg = smoke_config("transformer_base")
+    base = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    adapters = jax.eval_shape(lambda: lora_init(jax.random.PRNGKey(1),
+                                                base, rank=8))
+    spec = OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3},
+        partitions=(Partition(name="frozen_base", match=r"^base(/|$)",
+                              freeze=True),),
+    )
+    tree = {"base": base, "lora": adapters}
+    out.append(("transformer_base lora", state_bytes_by_group(build_optimizer(spec), tree)))
+    return out
+
+
 def main() -> None:
     print(f"{'model':22s} {'params':>10s} | " + " ".join(f"{n:>12s}" for n in OPTS)
           + " |  smmf/adam  smmf/best-eff")
@@ -59,6 +97,13 @@ def main() -> None:
         )
     print("\n(ratios: lower is better; paper claims up to 0.04 = 96% reduction "
           "vs the memory-efficient family on high-rank/transformer models)")
+
+    print(f"\n{'spec (per-group state bytes)':28s}  groups")
+    for name, by_group in group_rows():
+        cells = "  ".join(f"{g}={b/2**20:.3f}M" for g, b in sorted(by_group.items()))
+        print(f"{name:28s}  {cells}")
+    print("\n(frozen groups hold exactly 0 bytes — the LoRA frozen-base win; "
+          "per-group numbers are what rules.opt_state_shardings shards)")
 
 
 if __name__ == "__main__":

@@ -30,18 +30,23 @@ import jax
 from jax.sharding import AbstractMesh
 
 from repro.configs import get_config
-from repro.core.smmf import smmf
 from repro.distributed import rules
 from repro.launch import specs as S
-from repro.optim import adafactor, came, sm3
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.utils.tree import tree_bytes
 
+
+def _mk(family, **hp):
+    """Spec-built optimizer (benchmarks construct via the OptimizerSpec API)."""
+    return build_optimizer(OptimizerSpec(family=family, hyperparams=hp))
+
+
 OPTS = {
-    "smmf": lambda gamma: smmf(1e-3, decay_rate=gamma),
-    "smmf_local": lambda gamma: smmf(1e-3, decay_rate=gamma, blocks=4),
-    "adafactor": lambda gamma: adafactor(1e-3),
-    "came": lambda gamma: came(1e-3),
-    "sm3": lambda gamma: sm3(1e-3),
+    "smmf": lambda gamma: _mk("smmf", lr=1e-3, decay_rate=gamma),
+    "smmf_local": lambda gamma: _mk("smmf", lr=1e-3, decay_rate=gamma, blocks=4),
+    "adafactor": lambda gamma: _mk("adafactor", lr=1e-3),
+    "came": lambda gamma: _mk("came", lr=1e-3),
+    "sm3": lambda gamma: _mk("sm3", lr=1e-3),
 }
 
 

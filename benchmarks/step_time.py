@@ -25,20 +25,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.smmf import smmf
 from repro.launch.steps import optimizer_launch_stats
-from repro.optim import adafactor, adam, came, sm3
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.optim.base import apply_updates
 
+def _mk(family, **hp):
+    """Spec-built optimizer (benchmarks construct via the OptimizerSpec API)."""
+    return build_optimizer(OptimizerSpec(family=family, hyperparams=hp))
+
+
 OPTS = {
-    "adam": lambda: adam(1e-3),
-    "adafactor": lambda: adafactor(1e-3),
-    "sm3": lambda: sm3(1e-3),
-    "came": lambda: came(1e-3),
-    "smmf": lambda: smmf(1e-3, decay_rate=-0.8),
-    "smmf(nobucket)": lambda: smmf(1e-3, decay_rate=-0.8, bucket=False),
-    "smmf(kernel)": lambda: smmf(1e-3, decay_rate=-0.8, use_kernel=True),
-    "smmf(kernel,b=4)": lambda: smmf(1e-3, decay_rate=-0.8, use_kernel=True, blocks=4),
+    "adam": lambda: _mk("adam", lr=1e-3),
+    "adafactor": lambda: _mk("adafactor", lr=1e-3),
+    "sm3": lambda: _mk("sm3", lr=1e-3),
+    "came": lambda: _mk("came", lr=1e-3),
+    "smmf": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8),
+    "smmf(nobucket)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, bucket=False),
+    "smmf(kernel)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, use_kernel=True),
+    "smmf(kernel,b=4)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, use_kernel=True, blocks=4),
 }
 
 
@@ -70,10 +74,10 @@ def _cnn_params(layers=6):
 # dense-fallback fusion scenarios (second table): vector_reshape=False keeps
 # 1-D leaves dense, isolating the fused flat launch from factorization
 DENSE_OPTS = {
-    "smmf(fused dense)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False),
-    "smmf(per-geom dense)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False,
-                                         fuse_dense=False),
-    "smmf(nobucket)": lambda: smmf(1e-3, decay_rate=-0.5, vector_reshape=False,
+    "smmf(fused dense)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.5, vector_reshape=False),
+    "smmf(per-geom dense)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.5,
+                                        vector_reshape=False, fuse_dense=False),
+    "smmf(nobucket)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.5, vector_reshape=False,
                                    bucket=False),
 }
 

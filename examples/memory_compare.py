@@ -12,11 +12,17 @@ import tempfile
 import jax
 
 from repro.checkpoint import save
-from repro.core.smmf import smmf
 from repro.models import init_lm
 from repro.models.config import ModelConfig
-from repro.optim import adafactor, adam
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.utils.tree import tree_bytes
+
+SPECS = {
+    "adam": OptimizerSpec(family="adam", hyperparams={"lr": 1e-3}),
+    "adafactor": OptimizerSpec(family="adafactor", hyperparams={"lr": 1e-3}),
+    "smmf": OptimizerSpec(family="smmf",
+                          hyperparams={"lr": 1e-3, "decay_rate": -0.8}),
+}
 
 
 def _dir_bytes(d):
@@ -31,9 +37,8 @@ def main():
 
     print(f"{'optimizer':12s} {'state MiB':>10s} {'ckpt MiB':>10s} {'vs adam':>8s}")
     base = None
-    for name, opt in [("adam", adam(1e-3)), ("adafactor", adafactor(1e-3)),
-                      ("smmf", smmf(1e-3, decay_rate=-0.8))]:
-        state = opt.init(params)
+    for name, spec in SPECS.items():
+        state = build_optimizer(spec).init(params)
         sbytes = tree_bytes(state)
         with tempfile.TemporaryDirectory() as td:
             save(td, 0, {"opt": state})

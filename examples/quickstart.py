@@ -6,13 +6,19 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core.smmf import smmf
 from repro.data import SyntheticLMStream
 from repro.launch.steps import make_train_step
 from repro.models import init_lm
 from repro.models.config import ModelConfig
-from repro.optim import adam
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.utils.tree import tree_bytes
+
+# one declarative spec per optimizer (see docs/optimizer_api.md)
+SPECS = {
+    "adam": OptimizerSpec(family="adam", hyperparams={"lr": 1e-3}),
+    "smmf": OptimizerSpec(family="smmf",
+                          hyperparams={"lr": 1e-3, "decay_rate": -0.8}),
+}
 
 
 def main():
@@ -24,7 +30,8 @@ def main():
     print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params "
           f"({tree_bytes(params)/2**20:.1f} MiB)")
 
-    for name, opt in [("adam", adam(1e-3)), ("smmf", smmf(1e-3, decay_rate=-0.8))]:
+    for name, spec in SPECS.items():
+        opt = build_optimizer(spec)
         p = jax.tree.map(jnp.array, params)  # fresh copy
         state = opt.init(p)
         step = jax.jit(make_train_step(cfg, opt))

@@ -12,13 +12,15 @@ import argparse
 
 import jax
 
-from repro.core.smmf import smmf
 from repro.data import SyntheticLMStream
 from repro.launch.steps import make_train_step
 from repro.models import init_lm
 from repro.models.config import ModelConfig
+from repro.optim import OptimizerSpec, build_optimizer
 from repro.train import TrainLoop, TrainLoopConfig
 from repro.utils.tree import tree_bytes
+
+SPEC = OptimizerSpec(family="smmf", hyperparams={"lr": 3e-4, "decay_rate": -0.8})
 
 SMALL = ModelConfig("lm-10m", "dense", n_layers=4, d_model=256, n_heads=8,
                     n_kv_heads=4, d_ff=1024, vocab=8192, dtype="float32")
@@ -37,7 +39,7 @@ def main():
 
     cfg = FULL if args.full else SMALL
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    opt = smmf(3e-4, decay_rate=-0.8)
+    opt = build_optimizer(SPEC, params)
     opt_state = opt.init(params)
     print(f"[{cfg.name}] {cfg.param_count()/1e6:.1f}M params, "
           f"opt state {tree_bytes(opt_state)/2**20:.2f} MiB "
@@ -47,7 +49,8 @@ def main():
     step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
     loop = TrainLoop(step_fn, params, opt_state, stream,
                      TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
-                                     ckpt_dir=args.ckpt_dir, log_every=20))
+                                     ckpt_dir=args.ckpt_dir, log_every=20,
+                                     spec_hash=SPEC.spec_hash()))
     out = loop.run()
     h = out["history"]
     print(f"done: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over {out['final_step']} steps "

@@ -17,6 +17,10 @@ _EXPORTS = {
     "sm3": "repro.optim",
     "GradientTransformation": "repro.optim.base",
     "apply_updates": "repro.optim.base",
+    "OptimizerSpec": "repro.optim.spec",
+    "Partition": "repro.optim.spec",
+    "build_optimizer": "repro.optim.spec",
+    "state_bytes_by_group": "repro.optim.spec",
 }
 
 __all__ = list(_EXPORTS) + ["__version__"]

@@ -51,8 +51,15 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     return flat
 
 
-def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = None) -> Path:
-    """Atomically write checkpoint for `step`. Returns the final directory."""
+def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = None,
+         spec_hash: str | None = None) -> Path:
+    """Atomically write checkpoint for `step`. Returns the final directory.
+
+    ``spec_hash`` (``OptimizerSpec.spec_hash()``) records which optimizer
+    spec produced the state's layout; :func:`restore` verifies it so a
+    resume under a different spec (different families/partitions → different
+    state keys) fails loudly instead of silently mis-restoring.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f"tmp.{step}.{os.getpid()}"
@@ -68,6 +75,8 @@ def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = No
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
         "extra": extra or {},
     }
+    if spec_hash is not None:
+        manifest["spec_hash"] = spec_hash
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     if final.exists():
         shutil.rmtree(final)
@@ -89,9 +98,16 @@ def latest_step(ckpt_dir: str | Path) -> int | None:
 
 
 def restore(ckpt_dir: str | Path, like: PyTree, step: int | None = None,
-            shardings: PyTree | None = None) -> tuple[PyTree, dict]:
+            shardings: PyTree | None = None,
+            spec_hash: str | None = None) -> tuple[PyTree, dict]:
     """Restore into the structure of `like` (shapes validated), re-sharding
-    onto `shardings` if given (elastic resume on a different mesh)."""
+    onto `shardings` if given (elastic resume on a different mesh).
+
+    When both the caller and the manifest carry a ``spec_hash``, they must
+    agree — a mismatch means the optimizer spec changed since the
+    checkpoint was written and the state layout cannot be trusted.
+    Checkpoints without a recorded hash restore freely (pre-spec format).
+    """
     ckpt_dir = Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
@@ -99,6 +115,12 @@ def restore(ckpt_dir: str | Path, like: PyTree, step: int | None = None,
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     d = ckpt_dir / f"step_{step:010d}"
     manifest = json.loads((d / "manifest.json").read_text())
+    saved_hash = manifest.get("spec_hash")
+    if spec_hash is not None and saved_hash is not None and spec_hash != saved_hash:
+        raise ValueError(
+            f"optimizer spec hash mismatch: checkpoint step {step} was written "
+            f"under spec {saved_hash} but the current spec is {spec_hash}; "
+            "refusing to restore optimizer state with a different layout")
     data = np.load(d / "arrays.npz")
     flat_like = _flatten(like)
     missing = set(flat_like) - set(data.files)

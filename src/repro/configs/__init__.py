@@ -38,6 +38,25 @@ def smoke_config(arch_id: str) -> ModelConfig:
     return mod.SMOKE
 
 
+def recommended_decay_rate(model_family: str) -> float:
+    """The paper's recommended SMMF beta2 decay rate (Algo 8 gamma) per
+    model family: -0.5 for CNN-like models, -0.8 otherwise (Transformers).
+    Single source for the launchers and the arch default specs."""
+    return -0.5 if model_family == "cnn" else -0.8
+
+
+def default_optimizer_spec(arch_id: str, lr: float = 1e-3):
+    """The arch's default training ``OptimizerSpec``: SMMF with
+    :func:`recommended_decay_rate` for the arch's model family.
+    Round-tripped by ``tools/spec_lint.py`` in CI."""
+    from repro.optim.spec import OptimizerSpec
+
+    cfg = get_config(arch_id)
+    return OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": lr, "decay_rate": recommended_decay_rate(cfg.family)})
+
+
 def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> str:
     """'run' or a skip reason for one (arch, shape) cell."""
     if shape.name == "long_500k" and not cfg.subquadratic:
@@ -55,4 +74,6 @@ def all_cells() -> list[tuple[str, str, str]]:
     return out
 
 
-__all__ = ["ARCH_IDS", "PAPER_IDS", "get_config", "smoke_config", "all_cells", "cell_status", "SHAPES"]
+__all__ = ["ARCH_IDS", "PAPER_IDS", "get_config", "smoke_config", "all_cells",
+           "cell_status", "default_optimizer_spec", "recommended_decay_rate",
+           "SHAPES"]

@@ -54,7 +54,20 @@ class LeafPlan:
     ``(blocks, rows, cols)`` for square-matricized SMMF leaves, the native
     shape for last-two-axes (Adafactor/CAME) and axis-cover (SM3) leaves,
     and ``(numel,)`` for dense fallback leaves. Leaves sharing
-    ``(factorized, geometry)`` are bucketable into one stacked launch.
+    ``(group, factorized, geometry)`` are bucketable into one stacked
+    launch; buckets never span partition groups.
+
+    Group-aware fields (set by ``repro.optim.spec`` when lowering an
+    ``OptimizerSpec``; the default values reproduce the single-family
+    layout, whose bucket keys carry no group prefix):
+
+    * ``group`` — partition-group label ("" = the spec's default group);
+    * ``freeze`` — the leaf holds **no** optimizer state and always gets a
+      zero update (it is excluded from every bucket);
+    * ``solo`` — per-leaf baseline for this leaf (its bucket key is
+      suffixed ``@index`` so it is never grouped);
+    * ``fuse`` — a dense-fallback leaf that may be concatenated into its
+      group's flat ``dense:flat:<dtype>`` bucket.
     """
 
     index: int                      # position in the flattened params
@@ -65,6 +78,10 @@ class LeafPlan:
     kernel_ok: bool = False         # fused Pallas kernel eligible
     constraint: str | None = None   # ctx.constrain kind for the working matrix
     dtype: str = "float32"          # parameter dtype (fused-dense grouping)
+    group: str = ""                 # partition-group label ("" = default)
+    freeze: bool = False            # no state, zero update
+    solo: bool = False              # per-leaf baseline for this leaf
+    fuse: bool = False              # dense leaf eligible for flat fusion
 
     @property
     def numel(self) -> int:
@@ -72,10 +89,17 @@ class LeafPlan:
         return int(math.prod(self.shape)) if self.shape else 1
 
     @property
+    def group_prefix(self) -> str:
+        """State-key prefix of the leaf's partition group (empty for the
+        default group, so single-family state keys stay stable)."""
+        return f"{self.group}/" if self.group else ""
+
+    @property
     def bucket_key(self) -> str:
-        """Deterministic state-dict key prefix: ``fac:GEOM`` / ``dense:GEOM``."""
+        """Deterministic state-dict key prefix:
+        ``[<group>/]fac:GEOM`` / ``[<group>/]dense:GEOM``."""
         kind = "fac" if self.factorized else "dense"
-        return f"{kind}:" + "x".join(map(str, self.geometry))
+        return f"{self.group_prefix}{kind}:" + "x".join(map(str, self.geometry))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,32 +154,42 @@ class Bucket:
 def build_buckets(
     plans: Sequence[LeafPlan], bucket: bool = True, fuse_dense: bool = False,
 ) -> tuple[Bucket, ...]:
-    """Group plans by (factorized, geometry), preserving first-seen order.
+    """Group plans by (group, factorized, geometry), preserving first-seen
+    order. Buckets never span partition groups (each plan's ``group`` label
+    is baked into its bucket key).
 
-    ``bucket=False`` gives the per-leaf baseline: one single-leaf bucket per
-    parameter (key suffixed with the leaf index so state names stay unique).
-    ``fuse_dense=True`` additionally merges *all* dense-fallback groups of a
-    dtype into one concatenated flat bucket (``dense:flat:<dtype>``,
-    geometry ``(total_numel,)``) so dense leaves cost one launch per dtype.
-    Only valid for optimizers whose dense math is purely elementwise (no
-    per-leaf reductions); ignored in per-leaf mode.
+    ``bucket=False`` (or a plan's ``solo`` flag) gives the per-leaf
+    baseline: one single-leaf bucket per parameter (key suffixed with the
+    leaf index so state names stay unique). ``fuse_dense=True`` (or a dense
+    plan's ``fuse`` flag) merges dense-fallback leaves of a (group, dtype)
+    into one concatenated flat bucket (``[<group>/]dense:flat:<dtype>``,
+    geometry ``(total_numel,)``) so dense leaves cost one launch per group
+    and dtype. Only valid for optimizers whose dense math is purely
+    elementwise or segment-aware (a registry capability —
+    ``repro.optim.families``); ignored in per-leaf mode. ``freeze`` plans
+    hold no state and join no bucket.
     """
     groups: dict[str, list[LeafPlan]] = {}
     for p in plans:
-        key = p.bucket_key if bucket else f"{p.bucket_key}@{p.index}"
+        if p.freeze:
+            continue
+        key = p.bucket_key if bucket and not p.solo else f"{p.bucket_key}@{p.index}"
         groups.setdefault(key, []).append(p)
     out: list[Bucket] = []
-    dense_by_dtype: dict[str, list[LeafPlan]] = {}
+    dense_flat: dict[tuple[str, str], list[LeafPlan]] = {}
     for key, ps in groups.items():
-        if fuse_dense and bucket and not ps[0].factorized:
+        p0 = ps[0]
+        fusable = bucket and not p0.solo and not p0.factorized \
+            and (fuse_dense or p0.fuse)
+        if fusable:
             for p in ps:
-                dense_by_dtype.setdefault(p.dtype, []).append(p)
+                dense_flat.setdefault((p.group_prefix, p.dtype), []).append(p)
             continue
-        out.append(Bucket(key=key, factorized=ps[0].factorized,
-                          geometry=ps[0].geometry, plans=tuple(ps)))
-    for dt, ps in dense_by_dtype.items():
+        out.append(Bucket(key=key, factorized=p0.factorized,
+                          geometry=p0.geometry, plans=tuple(ps)))
+    for (prefix, dt), ps in dense_flat.items():
         total = sum(p.numel for p in ps)
-        out.append(Bucket(key=f"dense:flat:{dt}", factorized=False,
+        out.append(Bucket(key=f"{prefix}dense:flat:{dt}", factorized=False,
                           geometry=(total,), plans=tuple(ps), fused=True))
     return tuple(out)
 

@@ -33,80 +33,46 @@ Two factorization scopes:
   **zero cross-shard collectives**). State grows to K*(n_hat/K + m_hat)
   which is still O(sqrt(N)) per block.
 
-Execution is driven by the **leaf-plan engine** (repro.optim.engine): at
-``init`` every parameter gets a static LeafPlan (factorized vs fallback,
-(blocks, n, m) geometry, kernel eligibility) and same-geometry leaves are
-bucketed into stacked arrays, so ``update`` runs one vectorized launch per
-bucket instead of one per leaf. State is stored per bucket:
+As of the OptimizerSpec redesign the actual math lives in the **family
+registry** (``repro.optim.families``, entry ``"smmf"``) and the execution
+plumbing in the spec engine (``repro.optim.spec.build_optimizer``):
+bucketed same-geometry launches, a fused per-dtype dense fallback, the
+batched Pallas kernel (``use_kernel=True``), mesh-sharded bucket stacks and
+donation safety are all engine-level behaviors shared by every family —
+see ``repro.optim.engine`` and ``docs/optimizer_api.md``.
 
-  factors["fac:BxNxM"]        = (r_m (K*B, n), c_m (K*B, m),
-                                 sign (K*B*n, pw), r_v (K*B, n), c_v (K*B, m))
-  factors["dense:flat:DTYPE"] = (m (1, TOTAL), v (1, TOTAL))  # fused fallback
-
-with K the number of leaves sharing the geometry. The dense plain-Adam
-fallback is **fused**: all fallback leaves of one dtype are concatenated
-into a single flat row, so fallback-heavy (CNN-like) trees dispatch one
-dense launch per dtype instead of one per distinct element count
-(``fuse_dense=False`` restores per-geometry ``dense:NUM`` buckets of shape
-(K, NUM)). ``bucket=False`` recovers the per-leaf baseline (one single-leaf
-bucket per parameter, dense fusion off).
-
-On a mesh, the stacked state is sharded rather than replicated: the leading
-K*B stack axis carries the "data"/fsdp axis whenever divisible, and the
-update emits matching sharding constraints ("smmf_matrix", "smmf_rows",
-"smmf_cols", "smmf_sign", "dense_flat") on every stacked moment so per-chip
-optimizer bytes shrink ~linearly with the fsdp axis (see docs/sharding.md
-and repro.distributed.rules.opt_state_shardings).
-
-When ``use_kernel=True`` the fused Pallas TPU kernel
-(repro.kernels.smmf_update) executes decompress + EMA + sign-extract +
-row/col partial sums + update in one pass over HBM — one launch per bucket,
-composing with ``blocks=K`` (the kernel's leading batch axis carries
-buckets x blocks). Requires ``beta1`` (the momentum-free variant takes the
-unfused path).
+The :func:`smmf` / :func:`smmf_local` constructors below are kept as
+**deprecation shims**: they build the equivalent single-group
+``OptimizerSpec`` and delegate, so their output is bitwise-identical to
+``build_optimizer(OptimizerSpec(family="smmf", ...))``.
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import warnings
 
-import jax.numpy as jnp
+from repro.optim.base import EngineState as SMMFState  # back-compat re-export
+from repro.optim.base import GradientTransformation
 
-from repro.core.plan import smmf_planner
-from repro.core.signpack import pack_signs, packed_width, unpack_signs
-from repro.distributed.ctx import constrain
-from repro.optim.base import GradientTransformation, as_schedule
-from repro.optim.engine import DEFAULT_KERNEL_BLOCK, LeafPlanEngine
+# default Pallas tile; kept in sync with repro.optim.engine /
+# kernels/smmf_update (duplicated literal: importing the engine here would
+# cycle through repro.core's package init)
+DEFAULT_KERNEL_BLOCK = (256, 512)
 
-PyTree = Any
-
-
-class SMMFState(NamedTuple):
-    step: jnp.ndarray
-    factors: PyTree  # dict: bucket key -> stacked factor tuple (see module doc)
+__all__ = ["SMMFState", "smmf", "smmf_local"]
 
 
-def _compress(mat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Batched Algo 4: mat (B, n, m) non-negative -> r (B, n), c (B, m).
-
-    Normalizes the *smaller* vector per matrix (paper Algo 4) so the outer
-    product keeps the matrix scale with a single division.
-    """
-    _, n, m = mat.shape
-    r = jnp.sum(mat, axis=2)
-    c = jnp.sum(mat, axis=1)
-    if n <= m:
-        tot = jnp.sum(r, axis=1, keepdims=True)
-        r = jnp.where(tot > 0, r / tot, r)
-    else:
-        tot = jnp.sum(c, axis=1, keepdims=True)
-        c = jnp.where(tot > 0, c / tot, c)
-    return r, c
-
-
-def _decompress(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """Batched Algo 3: r (B, n), c (B, m) -> (B, n, m)."""
-    return r[:, :, None] * c[:, None, :]
+def _spec_hp(lr, beta1, eps, weight_decay, decay_rate, growth_rate,
+             vector_reshape, weight_decay_mode, blocks, use_kernel, bucket,
+             fuse_dense, kernel_block, interpret) -> dict:
+    return dict(
+        lr=lr, beta1=beta1, eps=eps, weight_decay=weight_decay,
+        decay_rate=decay_rate, growth_rate=growth_rate,
+        vector_reshape=vector_reshape, weight_decay_mode=weight_decay_mode,
+        blocks=blocks, use_kernel=use_kernel, bucket=bucket,
+        fuse_dense=fuse_dense, kernel_block=tuple(kernel_block),
+        interpret=interpret,
+    )
 
 
 def smmf(
@@ -125,162 +91,28 @@ def smmf(
     kernel_block: tuple[int, int] = DEFAULT_KERNEL_BLOCK,
     interpret: bool | None = None,
 ) -> GradientTransformation:
-    """Build the SMMF gradient transformation.
+    """Deprecated constructor shim: build SMMF via ``OptimizerSpec``.
 
     Args mirror the paper's reference implementation. ``decay_rate`` is the
-    gamma of Algo 8 (-0.5 CNN / -0.8 Transformer recommended), ``growth_rate``
-    the lambda. ``blocks`` > 1 selects the beyond-paper local variant.
+    gamma of Algo 8 (-0.5 CNN / -0.8 Transformer recommended),
+    ``growth_rate`` the lambda, ``blocks`` > 1 the beyond-paper local
+    variant; ``bucket``/``fuse_dense``/``use_kernel``/``kernel_block``/
+    ``interpret`` are the engine knobs (see ``docs/optimizer_api.md``).
+    Prefer::
 
-    Engine knobs: ``bucket`` stacks same-geometry leaves into one launch
-    (False = per-leaf baseline); ``fuse_dense`` concatenates all dense
-    fallback leaves of a dtype into one flat launch (legal because the
-    fallback is plain elementwise Adam; see module docstring);
-    ``use_kernel`` routes factored buckets through the fused Pallas kernel
-    with tile ``kernel_block``; ``interpret=None`` auto-selects interpreter
-    mode off-TPU.
+        build_optimizer(OptimizerSpec(family="smmf", hyperparams={...}))
     """
-    if isinstance(lr, (int, float)) and lr < 0.0:
-        raise ValueError(f"lr must be >= 0, got {lr}")
-    if beta1 is not None and not 0.0 <= beta1 <= 1.0:
-        raise ValueError(f"beta1 must be in [0,1], got {beta1}")
-    if not -1.0 <= decay_rate <= 0.0:
-        raise ValueError(f"decay_rate must be in [-1,0], got {decay_rate}")
-    if not 0.0 <= growth_rate <= 1.0:
-        raise ValueError(f"growth_rate must be in [0,1], got {growth_rate}")
-    if weight_decay_mode not in ("adam", "adamw"):
-        raise ValueError(f"weight_decay_mode must be adam|adamw, got {weight_decay_mode}")
-    bn_k, bm_k = kernel_block
-    if bn_k <= 0 or bm_k <= 0 or bn_k % 8 or bm_k % 8:
-        # the packed-sign tile is bm/8 bytes wide; a non-multiple-of-8 tile
-        # mis-tiles the sign array deep inside the kernel
-        raise ValueError(f"kernel_block dims must be positive multiples of 8, got {kernel_block}")
-    lr_fn = as_schedule(lr)
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    plan_fn = smmf_planner(
-        blocks=blocks, vector_reshape=vector_reshape,
-        # the fused kernel always computes the momentum EMA; the
-        # momentum-free variant keeps the unfused path
-        use_kernel=use_kernel and beta1 is not None,
-    )
-
-    def plan(params) -> LeafPlanEngine:
-        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
-        return LeafPlanEngine(params, plan_fn, bucket=bucket,
-                              fuse_dense=fuse_dense and bucket)
-
-    def init(params):
-        engine = plan(params)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            if bk.factorized:
-                b, n, m = bk.geometry
-                factors[bk.key] = (
-                    jnp.zeros((k * b, n), jnp.float32),                  # r_m
-                    jnp.zeros((k * b, m), jnp.float32),                  # c_m
-                    jnp.zeros((k * b * n, packed_width(m)), jnp.uint8),  # sign
-                    jnp.zeros((k * b, n), jnp.float32),                  # r_v
-                    jnp.zeros((k * b, m), jnp.float32),                  # c_v
-                )
-            else:
-                (numel,) = bk.geometry  # total numel for fused buckets
-                factors[bk.key] = (
-                    jnp.zeros((bk.stack, numel), jnp.float32),  # m
-                    jnp.zeros((bk.stack, numel), jnp.float32),  # v
-                )
-        return SMMFState(jnp.zeros((), jnp.int32), factors)
-
-    def update(grads, state, params):
-        engine = plan(params)
-        step = state.step + 1
-        t = step.astype(jnp.float32)
-        lr_t = lr_fn(step)
-        beta1_t = (beta1 * jnp.power(growth_rate, t - 1.0)) if beta1 is not None else None
-        beta2_t = 1.0 - jnp.power(t, decay_rate)
-
-        flat_g = engine.leaves(grads)
-        flat_p = engine.leaves(params)
-        if weight_decay and weight_decay_mode == "adam":
-            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-                      for g, p in zip(flat_g, flat_p)]  # Algo 6
-
-        out_flat: list = [None] * len(flat_g)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            fac = state.factors[bk.key]
-            if bk.factorized:
-                b, n, m = bk.geometry
-                kb = k * b
-                gm = engine.gather(flat_g, bk).reshape(kb, n, m)
-                gm = constrain(gm, "smmf_matrix")
-                r_m, c_m, sign, r_v, c_v = fac
-
-                if bk.kernel_ok and beta1 is not None:
-                    from repro.kernels.smmf_update import ops as _kops
-
-                    pw = packed_width(m)
-                    u, r_m2, c_m2, sign2, r_v2, c_v2 = _kops.smmf_update_batched(
-                        gm, r_m, c_m, sign.reshape(kb, n, pw), r_v, c_v,
-                        beta1_t=beta1_t, beta2_t=beta2_t, eps=eps,
-                        block=kernel_block, interpret=interpret,
-                    )
-                    sign2 = sign2.reshape(kb * n, pw)
-                else:
-                    # Decompression (Algo 3)
-                    v_hat = _decompress(r_v, c_v)
-                    if beta1 is not None:
-                        signs = unpack_signs(sign, m).reshape(kb, n, m)
-                        m_hat = signs * _decompress(r_m, c_m)
-                        # EMA update with the intact current gradient
-                        m_t = beta1_t * m_hat + (1.0 - beta1_t) * gm
-                    else:
-                        m_t = None
-                    v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
-                    # Compression (Algo 4)
-                    if beta1 is not None:
-                        sign2 = pack_signs((m_t >= 0).reshape(kb * n, m))
-                        r_m2, c_m2 = _compress(jnp.abs(m_t))
-                    else:
-                        sign2, r_m2, c_m2 = sign, r_m, c_m
-                    r_v2, c_v2 = _compress(v_t)
-                    num = m_t if beta1 is not None else gm
-                    u = num / (jnp.sqrt(v_t) + eps)
-
-                # keep the re-compressed stacked state placed where
-                # opt_state_shardings puts it (stack axis over "data" when
-                # divisible) so donation aliases buffers without resharding
-                r_m2 = constrain(r_m2, "smmf_rows")
-                r_v2 = constrain(r_v2, "smmf_rows")
-                c_m2 = constrain(c_m2, "smmf_cols")
-                c_v2 = constrain(c_v2, "smmf_cols")
-                sign2 = constrain(sign2, "smmf_sign")
-                factors[bk.key] = (r_m2, c_m2, sign2, r_v2, c_v2)
-                engine.scatter(bk, (-lr_t * u).reshape(k, b * n * m), out_flat)
-            else:
-                gm = engine.gather(flat_g, bk)  # (K, numel) / fused (1, total)
-                m_, v_ = fac
-                if beta1 is not None:
-                    m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
-                else:
-                    m2 = m_
-                v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
-                num = m2 if beta1 is not None else gm
-                u = num / (jnp.sqrt(v2) + eps)
-                if bk.fused:
-                    m2 = constrain(m2, "dense_flat")
-                    v2 = constrain(v2, "dense_flat")
-                factors[bk.key] = (m2, v2)
-                engine.scatter(bk, -lr_t * u, out_flat)
-
-        if weight_decay and weight_decay_mode == "adamw":
-            out_flat = [o - lr_t * weight_decay * p.astype(jnp.float32)
-                        for o, p in zip(out_flat, flat_p)]  # Algo 7
-        return engine.unflatten(out_flat), SMMFState(step, factors)
-
-    return GradientTransformation(init, update, plan=plan)
+    warnings.warn(
+        "smmf(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='smmf') + build_optimizer", DeprecationWarning, stacklevel=2)
+    hp = _spec_hp(lr, beta1, eps, weight_decay, decay_rate, growth_rate,
+                  vector_reshape, weight_decay_mode, blocks, use_kernel,
+                  bucket, fuse_dense, kernel_block, interpret)
+    return build_optimizer(OptimizerSpec(family="smmf", hyperparams=hp))
 
 
 def smmf_local(lr=1e-3, blocks: int = 16, **kw) -> GradientTransformation:
-    """Beyond-paper local/blockwise SMMF (see module docstring)."""
+    """Deprecated shim: beyond-paper local/blockwise SMMF (module docstring)."""
     return smmf(lr=lr, blocks=blocks, **kw)

@@ -39,7 +39,7 @@ def int8_compress(inner: GradientTransformation) -> GradientTransformation:
         (ef,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
         return State(ef, inner.init(params))
 
-    def update(grads, state, params):
+    def update(grads, state, params, **extras):
         def q(g, e):
             g = g.astype(jnp.float32) + e
             scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
@@ -48,7 +48,7 @@ def int8_compress(inner: GradientTransformation) -> GradientTransformation:
             return deq, g - deq
 
         deq, ef = multimap(q, grads, state.ef, nout=2)
-        updates, inner_state = inner.update(deq, state.inner, params)
+        updates, inner_state = inner.update(deq, state.inner, params, **extras)
         return updates, State(ef, inner_state)
 
     return GradientTransformation(init, update)

@@ -171,6 +171,15 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     "smmf_sign", "dense_flat" in :func:`activation_rules`) — both sides
     derive from :func:`repro.core.plan.bucket_partition_wants`, so a jitted
     train step neither reshards state at entry nor breaks buffer donation.
+
+    **Group-aware** (``repro.optim.spec``): mixed-family specs prefix
+    bucket keys with the partition-group label (``adam0/dense:flat:f32``).
+    The prefix contains '/', the same separator this walk joins paths with,
+    so ``parts[-2]`` below is always the *bare* bucket key — the per-kind
+    rules apply unchanged per group, and frozen groups simply contribute no
+    state leaves. Group labels are validated (``repro.optim.spec``) to
+    exclude '/', '|' and ':', which keeps this invariant and the
+    checkpoint path encoding unambiguous.
     """
     from repro.core.plan import bucket_partition_wants, bucket_stack_wants
 

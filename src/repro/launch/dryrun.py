@@ -27,10 +27,10 @@ from pathlib import Path
 import jax
 
 from repro.configs import ARCH_IDS, cell_status, get_config
-from repro.core.smmf import smmf
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import lower_cell
 from repro.models.config import SHAPES
+from repro.optim.spec import OptimizerSpec, build_optimizer
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
@@ -91,10 +91,32 @@ def parse_collectives(hlo_text: str) -> dict:
     return out
 
 
+def cell_optimizer_spec(cfg, opt_name: str, *, use_kernel: bool = False,
+                        blocks: int | None = None, bucket: bool = True,
+                        rules: list[str] | None = None) -> OptimizerSpec:
+    """The dry-run cell's OptimizerSpec for one arch + ``--opt`` name
+    (``smmf_local`` = smmf with blocks default 16 here), with any
+    ``--optim-rule`` partitions appended."""
+    from repro.configs import recommended_decay_rate
+
+    gamma = recommended_decay_rate(cfg.family)
+    hp: dict = {"lr": 1e-3}
+    name = opt_name
+    if opt_name in ("smmf", "smmf_local"):
+        hp.update(decay_rate=gamma,
+                  blocks=blocks or (16 if opt_name == "smmf_local" else 1),
+                  use_kernel=use_kernel, bucket=bucket, fuse_dense=bucket)
+        name = "smmf"
+    spec = OptimizerSpec(family=name, hyperparams=hp)
+    for rule in rules or []:
+        spec = spec.with_rule(rule)
+    return spec
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf",
              variant: str = "", flags_spec: str = "", verbose: bool = True,
              use_kernel: bool = False, blocks: int | None = None,
-             bucket: bool = True) -> dict:
+             bucket: bool = True, optim_rules: list[str] | None = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     status = cell_status(cfg, shape)
@@ -107,20 +129,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf"
 
     opt = None
     if shape.kind == "train":
-        gamma = -0.5 if cfg.family == "cnn" else -0.8
-        ekw = dict(use_kernel=use_kernel, bucket=bucket)
-        if opt_name == "smmf":
-            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=blocks or 1, **ekw)
-        elif opt_name == "smmf_local":
-            opt = smmf(lr=1e-3, decay_rate=gamma, blocks=blocks or 16, **ekw)
-        elif opt_name == "adam":
-            from repro.optim import adam
-            opt = adam(1e-3)
-        elif opt_name == "adafactor":
-            from repro.optim import adafactor
-            opt = adafactor(1e-3)
-        else:
-            raise ValueError(opt_name)
+        spec = cell_optimizer_spec(cfg, opt_name, use_kernel=use_kernel,
+                                   blocks=blocks, bucket=bucket, rules=optim_rules)
+        rec["spec_hash"] = spec.spec_hash()
+        opt = build_optimizer(spec)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     from repro.models.perf import parse_flags, perf_flags
@@ -195,11 +207,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--shape", default=None, help="shape name (default: all)")
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
     ap.add_argument("--opt", default="smmf")
+    ap.add_argument("--optim-rule", action="append", default=[],
+                    metavar="PATTERN=FAMILY[,K=V...]",
+                    help="append an OptimizerSpec partition rule to the train "
+                         "cell's optimizer (same syntax as the train launcher)")
     ap.add_argument("--variant", default="", help="tag suffix for perf experiments")
     ap.add_argument("--flags", default="", help="PerfFlags, e.g. bf16_accum_attention,ssd_chunk_override=128")
     ap.add_argument("--use-kernel", action="store_true", help="fused Pallas SMMF update")
     ap.add_argument("--blocks", type=int, default=0, help="SMMF blockwise factorization (0 = opt default)")
     ap.add_argument("--no-bucket", action="store_true", help="per-leaf baseline (no geometry bucketing)")
+    ap.add_argument("--no-scatter-constraints", action="store_true",
+                    help="escape hatch for the known XLA SPMD partitioner "
+                         "CHECK crash on stacked-scan scatter reshapes "
+                         "(transformer_base train_4k): drop the in-update "
+                         "smmf_*/dense_flat sharding constraints (the "
+                         "smmf_no_constraint perf flag) so the cell compiles "
+                         "while the XLA fix is pending")
     ap.add_argument("--all", action="store_true")
     return ap
 
@@ -213,14 +236,19 @@ def main() -> None:
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
 
+    flags_spec = args.flags
+    if args.no_scatter_constraints:
+        flags_spec = f"{flags_spec},smmf_no_constraint" if flags_spec else "smmf_no_constraint"
+
     failures = []
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
                 try:
-                    rec = run_cell(arch, shape, mp, args.opt, args.variant, args.flags,
+                    rec = run_cell(arch, shape, mp, args.opt, args.variant, flags_spec,
                                    use_kernel=args.use_kernel, blocks=args.blocks or None,
-                                   bucket=not args.no_bucket)
+                                   bucket=not args.no_bucket,
+                                   optim_rules=args.optim_rule)
                     if rec["status"] != "run":
                         print(f"[{arch}.{shape}] {rec['status']}", flush=True)
                 except Exception as e:  # noqa: BLE001 - report and continue

@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m --smoke \
         --steps 50 --opt smmf
 
+Optimizer construction is spec-driven (``repro.optim.spec``): ``--opt``
+names the default family, ``--optim spec.json`` loads a full declarative
+``OptimizerSpec``, and ``--optim-rule 'PATTERN=FAMILY[,K=V...]'`` appends
+partition rules for mixed-family trees (e.g. ``'norm|bias=adam'`` runs
+plain Adam on norms/biases while SMMF handles the matrices; ``=freeze``
+gives a group zero state and zero updates). The spec's hash is stored in
+every checkpoint and verified on resume.
+
 On the CPU container this runs reduced (smoke) configs end-to-end; on a real
 pod the same entry point takes --mesh production and the full config. The
 XLA latency-hiding-scheduler flags used on TPU pods are set here (no-ops on
@@ -13,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import os
+from pathlib import Path
 
 # TPU pods: overlap collectives with compute (no-op on CPU)
 os.environ.setdefault(
@@ -31,29 +40,46 @@ from repro.launch.steps import (
     optimizer_launch_stats,
 )
 from repro.models import init_encdec, init_lm
-from repro.optim import adafactor, adam, came, sm3
-from repro.core.smmf import smmf
+from repro.optim.spec import OptimizerSpec, build_optimizer, state_bytes_by_group
 from repro.train import TrainLoop, TrainLoopConfig
 
+FAMILY_CHOICES = ("smmf", "smmf_local", "adam", "adafactor", "came", "sm3", "sgd")
 
-def build_optimizer(name: str, lr: float, family: str, *,
-                    blocks: int | None = None, use_kernel: bool = False,
-                    bucket: bool = True):
-    """Build the named optimizer with the leaf-plan engine knobs threaded.
 
-    ``blocks=None`` keeps each optimizer's default block count (1 for smmf,
-    4 for smmf_local). Non-engine optimizers ignore the SMMF-only knobs.
+def spec_from_args(args, family: str) -> OptimizerSpec:
+    """Compose the run's OptimizerSpec from the CLI surface.
+
+    ``--optim FILE`` loads a full JSON spec (the engine knob flags then only
+    apply to specs they are compatible with — mixing them with a file is an
+    error to avoid silently overriding the file). Otherwise the spec is
+    built from ``--opt``/``--lr``/knob flags exactly like the legacy
+    constructors did (``smmf_local`` = smmf with blocks default 4).
+    ``--optim-rule`` partitions append to either base spec in order.
     """
-    gamma = -0.5 if family == "cnn" else -0.8
-    ekw = dict(use_kernel=use_kernel, bucket=bucket)
-    return {
-        "smmf": lambda: smmf(lr, decay_rate=gamma, blocks=blocks or 1, **ekw),
-        "smmf_local": lambda: smmf(lr, decay_rate=gamma, blocks=blocks or 4, **ekw),
-        "adam": lambda: adam(lr),
-        "adafactor": lambda: adafactor(lr, bucket=bucket),
-        "came": lambda: came(lr, bucket=bucket),
-        "sm3": lambda: sm3(lr, bucket=bucket),
-    }[name]()
+    if args.optim:
+        if args.blocks or args.use_kernel or args.no_bucket:
+            raise SystemExit("--optim FILE cannot be combined with "
+                             "--blocks/--use-kernel/--no-bucket; put the "
+                             "knobs in the spec's hyperparams")
+        spec = OptimizerSpec.from_json(Path(args.optim).read_text())
+    else:
+        from repro.configs import recommended_decay_rate
+
+        gamma = recommended_decay_rate(family)
+        name = args.opt
+        hp: dict = {"lr": args.lr}
+        if name in ("smmf", "smmf_local"):
+            hp.update(decay_rate=gamma,
+                      blocks=args.blocks or (4 if name == "smmf_local" else 1),
+                      use_kernel=args.use_kernel, bucket=not args.no_bucket,
+                      fuse_dense=not args.no_bucket)
+            name = "smmf"
+        elif name in ("adafactor", "came", "sm3"):
+            hp.update(bucket=not args.no_bucket)
+        spec = OptimizerSpec(family=name, hyperparams=hp)
+    for rule in args.optim_rule:
+        spec = spec.with_rule(rule)
+    return spec
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -67,7 +93,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--opt", default="smmf")
+    ap.add_argument("--opt", default="smmf", choices=FAMILY_CHOICES,
+                    help="default optimizer family")
+    ap.add_argument("--optim", default=None, metavar="SPEC.json",
+                    help="load a full OptimizerSpec from a JSON file "
+                         "(overrides --opt and the engine knob flags)")
+    ap.add_argument("--optim-rule", action="append", default=[],
+                    metavar="PATTERN=FAMILY[,K=V...]",
+                    help="append a partition rule: leaves whose path matches "
+                         "PATTERN use FAMILY (or 'freeze') with optional "
+                         "hyperparam overrides; repeatable, first match wins")
     ap.add_argument("--blocks", type=int, default=0,
                     help="SMMF blockwise factorization (0 = optimizer default)")
     ap.add_argument("--use-kernel", action="store_true",
@@ -86,9 +121,9 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main() -> None:
-    """Entry point: build model + optimizer, compile the (donating) train
-    step, verify the kernel and donation paths, run the fault-tolerant
-    loop."""
+    """Entry point: compose the OptimizerSpec, build model + optimizer,
+    compile the (donating) train step, verify the kernel and donation
+    paths, run the fault-tolerant loop."""
     ap = build_parser()
     args = ap.parse_args()
     if args.use_kernel and args.opt not in ("smmf", "smmf_local"):
@@ -99,26 +134,35 @@ def main() -> None:
                  f"(got {args.grad_accum} vs batch {args.batch})")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, opt={args.opt}")
+    spec = spec_from_args(args, cfg.family)
+    spec_hash = spec.spec_hash()
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"opt={spec.family}"
+          + (f"+{len(spec.partitions)} partitions" if spec.partitions else "")
+          + f" spec={spec_hash}")
 
     key = jax.random.PRNGKey(args.seed)
     init = init_encdec if cfg.family == "encdec" else init_lm
     params = init(key, cfg)
-    opt = build_optimizer(args.opt, args.lr, cfg.family, blocks=args.blocks or None,
-                          use_kernel=args.use_kernel, bucket=not args.no_bucket)
+    opt = build_optimizer(spec, params)
     opt_state = opt.init(params)
 
     from repro.utils.tree import tree_bytes
 
     print(f"[train] param bytes {tree_bytes(params)/1e6:.2f}MB, "
           f"optimizer state bytes {tree_bytes(opt_state)/1e6:.3f}MB")
+    if spec.partitions:
+        by_group = state_bytes_by_group(opt, params)
+        print("[train] state bytes by group: "
+              + ", ".join(f"{g}={b/1e6:.3f}MB" for g, b in sorted(by_group.items())))
 
     stats = optimizer_launch_stats(opt, params)
     if stats is not None:
         print(f"[train] update engine: {stats['leaves']} leaves -> "
               f"{stats['update_launches']} launches/step "
               f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
-              f"{stats['kernel_buckets']} kernel)")
+              f"{stats['kernel_buckets']} kernel, {stats['groups']} groups, "
+              f"{stats['frozen_leaves']} frozen)")
     if args.use_kernel:
         # static half of the no-silent-fallback assertion: every factored
         # bucket must be planned onto the fused kernel path
@@ -151,7 +195,8 @@ def main() -> None:
     loop = TrainLoop(
         compiled, params, opt_state, stream,
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
-                        ckpt_dir=args.ckpt_dir, log_every=10),
+                        ckpt_dir=args.ckpt_dir, log_every=10,
+                        spec_hash=spec_hash),
     )
     out = loop.run()
     if args.use_kernel:

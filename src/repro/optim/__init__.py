@@ -1,10 +1,13 @@
 """Optimizer package: the optax-style base protocol, the bucketed leaf-plan
-engine, and the SMMF-paper baseline family (adam/adamw, adafactor, came,
-sm3, sgd). The SMMF optimizer itself lives in ``repro.core.smmf``."""
+engine, the family registry, and the declarative ``OptimizerSpec``
+construction API (``build_optimizer``). The per-family constructors
+(adam/adamw, adafactor, came, sm3, sgd here; smmf in ``repro.core.smmf``)
+are deprecation shims over specs."""
 
 from repro.optim.adafactor import adafactor
 from repro.optim.adam import adam, adamw
 from repro.optim.base import (
+    EngineState,
     GradientTransformation,
     apply_updates,
     chain,
@@ -13,13 +16,31 @@ from repro.optim.base import (
 )
 from repro.optim.came import came
 from repro.optim.engine import LeafPlanEngine, engine_stats
+from repro.optim.families import Family, family_names, get_family, register
 from repro.optim.sgd import sgd
 from repro.optim.sm3 import sm3
+from repro.optim.spec import (
+    OptimizerSpec,
+    Partition,
+    build_optimizer,
+    parse_rule,
+    state_bytes_by_group,
+)
 
 __all__ = [
     "LeafPlanEngine",
     "engine_stats",
+    "EngineState",
     "GradientTransformation",
+    "OptimizerSpec",
+    "Partition",
+    "build_optimizer",
+    "parse_rule",
+    "state_bytes_by_group",
+    "Family",
+    "family_names",
+    "get_family",
+    "register",
     "apply_updates",
     "chain",
     "clip_by_global_norm",

@@ -1,43 +1,26 @@
 """Adafactor baseline (Shazeer & Stern 2018), faithful to the paper's setup.
 
 Factors the second moment of every rank>=2 tensor over its *last two* axes
-(slicing leading axes, as the SMMF paper describes for CNNs / stacked experts:
-memory O(prod_{r<d-1} n_r * (n_{d-1}+n_d))). Rank<=1 tensors keep a full
-second moment. First moment is optional (the SMMF paper runs Adafactor with
-beta1=0.9, so we default it on to match their comparisons).
+(slicing leading axes, as the SMMF paper describes for CNNs / stacked
+experts: memory O(prod_{r<d-1} n_r * (n_{d-1}+n_d))). Rank<=1 tensors keep
+a full second moment. First moment is optional (the SMMF paper runs
+Adafactor with beta1=0.9, so we default it on to match their comparisons).
 
-Runs on the leaf-plan engine (repro.optim.engine): same-shape rank>=2 leaves
-are stacked into one (K, ...) bucket and updated with a single vectorized
-launch; rank<=1 leaves bucket by element count. The RMS update clip stays
-*per leaf* (reduced over all but the stack axis). State per bucket:
-
-  factors["fac:SHAPE"]  = (m (K, *shape)?, vr (K, *shape[:-1]),
-                           vc (K, *shape[:-2] + shape[-1:]))
-  factors["dense:NUM"]  = (m (K, NUM)?, vfull (K, NUM))
-
-(the m slot is present iff beta1 is not None).
+The math lives in the family registry (``repro.optim.families``, entry
+``"adafactor"``) and runs on the bucketed leaf-plan engine. The per-leaf
+RMS update clip is **segment-aware**, so the dense rank<=1 fallback may be
+flat-fused into one launch per (group, dtype) — a registry capability
+(``fuse_dense_ok``) that used to be smmf-only; it defaults off here to keep
+the per-geometry ``dense:NUM`` state layout, enable with
+``hyperparams={"fuse_dense": True}``. :func:`adafactor` below is a
+deprecation shim building the equivalent single-group ``OptimizerSpec``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
 
-import jax.numpy as jnp
-
-from repro.core.plan import lasttwo_planner
-from repro.optim.base import GradientTransformation, as_schedule
-from repro.optim.engine import LeafPlanEngine
-
-
-class AdafactorState(NamedTuple):
-    step: jnp.ndarray
-    factors: dict  # bucket key -> stacked moment tuple (see module doc)
-
-
-def _rms(x):
-    """Per-leaf RMS: reduced over all but the leading stack axis."""
-    axes = tuple(range(1, x.ndim))
-    return jnp.sqrt(jnp.mean(jnp.square(x), axis=axes, keepdims=True) + 1e-30)
+from repro.optim.base import GradientTransformation
 
 
 def adafactor(
@@ -50,76 +33,15 @@ def adafactor(
     weight_decay: float = 0.0,
     bucket: bool = True,
 ) -> GradientTransformation:
-    """Adafactor on the leaf-plan engine (see module docstring). Dense
-    rank<=1 leaves keep per-geometry buckets — the per-leaf RMS update clip
-    reduces over each leaf, so they cannot legally be flat-fused."""
-    lr_fn = as_schedule(lr)
-    plan_fn = lasttwo_planner()
+    """Deprecated shim: Adafactor on the leaf-plan engine. Prefer
+    ``build_optimizer(OptimizerSpec(family="adafactor", ...))``."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    def plan(params) -> LeafPlanEngine:
-        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
-        return LeafPlanEngine(params, plan_fn, bucket=bucket)
-
-    def init(params):
-        engine = plan(params)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            if bk.factorized:
-                shape = bk.geometry
-                vr = jnp.zeros((k,) + shape[:-1], jnp.float32)
-                vc = jnp.zeros((k,) + shape[:-2] + shape[-1:], jnp.float32)
-                second = (vr, vc)
-            else:
-                second = (jnp.zeros((k,) + bk.geometry, jnp.float32),)
-            if beta1 is not None:
-                m = jnp.zeros((k,) + bk.geometry, jnp.float32)
-                factors[bk.key] = (m,) + second
-            else:
-                factors[bk.key] = second
-        return AdafactorState(jnp.zeros((), jnp.int32), factors)
-
-    def update(grads, state, params):
-        engine = plan(params)
-        step = state.step + 1
-        t = step.astype(jnp.float32)
-        beta2t = 1.0 - jnp.power(t, decay_rate)
-        lr_t = lr_fn(step)
-
-        flat_g = engine.leaves(grads)
-        if weight_decay:
-            flat_p = engine.leaves(params)
-            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-                      for g, p in zip(flat_g, flat_p)]
-
-        out_flat: list = [None] * len(flat_g)
-        factors = {}
-        for bk in engine.buckets:
-            fac = state.factors[bk.key]
-            m = fac[0] if beta1 is not None else None
-            g = engine.gather(flat_g, bk)  # (K, *geometry)
-            g2 = g * g + eps1
-            if bk.factorized:
-                vr, vc = fac[-2:]
-                vr2 = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
-                vc2 = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
-                denom = jnp.mean(vr2, axis=-1, keepdims=True)
-                vhat = vr2[..., :, None] * vc2[..., None, :] / (denom[..., None] + eps1)
-                second = (vr2, vc2)
-            else:
-                vfull2 = beta2t * fac[-1] + (1 - beta2t) * g2
-                vhat = vfull2
-                second = (vfull2,)
-            u = g / jnp.sqrt(vhat + eps1)
-            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)  # update clipping, d=1.0
-            if beta1 is not None:
-                m2 = beta1 * m + (1 - beta1) * u
-                u = m2
-                factors[bk.key] = (m2,) + second
-            else:
-                factors[bk.key] = second
-            engine.scatter(bk, -lr_t * u, out_flat)
-
-        return engine.unflatten(out_flat), AdafactorState(step, factors)
-
-    return GradientTransformation(init, update, plan=plan)
+    warnings.warn(
+        "adafactor(...) is deprecated; build via repro.optim.spec."
+        "OptimizerSpec (family='adafactor') + build_optimizer",
+        DeprecationWarning, stacklevel=2)
+    hp = dict(lr=lr, beta1=beta1, decay_rate=decay_rate, eps1=eps1, eps2=eps2,
+              clip_threshold=clip_threshold, weight_decay=weight_decay,
+              bucket=bucket)
+    return build_optimizer(OptimizerSpec(family="adafactor", hyperparams=hp))

@@ -1,19 +1,18 @@
-"""Adam / AdamW baselines (Kingma & Ba 2014; Loshchilov & Hutter 2019)."""
+"""Adam / AdamW baselines (Kingma & Ba 2014; Loshchilov & Hutter 2019).
+
+The math now lives in the family registry (``repro.optim.families``, entry
+``"adam"``) and runs on the bucketed leaf-plan engine: every leaf is a
+dense ``(numel,)`` plan, same-size leaves stack, and — the math being
+purely elementwise — the whole dense set flat-fuses into one launch per
+(group, dtype). The constructors below are deprecation shims building the
+equivalent single-group ``OptimizerSpec``.
+"""
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
 
-import jax.numpy as jnp
-
-from repro.optim._multimap import multimap
-from repro.optim.base import GradientTransformation, as_schedule
-
-
-class AdamState(NamedTuple):
-    step: jnp.ndarray
-    m: dict
-    v: dict
+from repro.optim.base import GradientTransformation
 
 
 def adam(
@@ -25,42 +24,28 @@ def adam(
     bias_correction: bool = True,
     decoupled_weight_decay: bool = False,
 ) -> GradientTransformation:
-    """Adam with full f32 moments (the paper's 2N-floats memory baseline);
-    ``decoupled_weight_decay=True`` gives AdamW."""
-    lr_fn = as_schedule(lr)
+    """Deprecated shim: Adam with full f32 moments (the paper's 2N-floats
+    memory baseline); ``decoupled_weight_decay=True`` gives AdamW. Prefer
+    ``build_optimizer(OptimizerSpec(family="adam", ...))``."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    def init(params):
-        (m,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
-        (v,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
-        return AdamState(jnp.zeros((), jnp.int32), m, v)
-
-    def update(grads, state, params):
-        step = state.step + 1
-        t = step.astype(jnp.float32)
-        lr_t = lr_fn(step)
-
-        def upd(g, m, v, p):
-            g = g.astype(jnp.float32)
-            if weight_decay and not decoupled_weight_decay:
-                g = g + weight_decay * p.astype(jnp.float32)  # Adam-style decay (paper Algo 6)
-            m2 = b1 * m + (1 - b1) * g
-            v2 = b2 * v + (1 - b2) * g * g
-            if bias_correction:
-                mhat = m2 / (1 - b1**t)
-                vhat = v2 / (1 - b2**t)
-            else:
-                mhat, vhat = m2, v2
-            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
-            if weight_decay and decoupled_weight_decay:
-                u = u - lr_t * weight_decay * p.astype(jnp.float32)  # AdamW (paper Algo 7)
-            return u, m2, v2
-
-        updates, m, v = multimap(upd, grads, state.m, state.v, params, nout=3)
-        return updates, AdamState(step, m, v)
-
-    return GradientTransformation(init, update)
+    warnings.warn(
+        "adam(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='adam') + build_optimizer", DeprecationWarning, stacklevel=2)
+    hp = dict(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+              bias_correction=bias_correction,
+              weight_decay_mode="adamw" if decoupled_weight_decay else "adam")
+    return build_optimizer(OptimizerSpec(family="adam", hyperparams=hp))
 
 
 def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> GradientTransformation:
-    """AdamW: Adam with decoupled weight decay (Loshchilov & Hutter 2019)."""
-    return adam(lr, b1, b2, eps, weight_decay=weight_decay, decoupled_weight_decay=True)
+    """Deprecated shim: AdamW = Adam with decoupled weight decay."""
+    warnings.warn(
+        "adamw(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='adam', weight_decay_mode='adamw') + build_optimizer",
+        DeprecationWarning, stacklevel=2)
+    from repro.optim.spec import OptimizerSpec, build_optimizer
+
+    hp = dict(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+              weight_decay_mode="adamw")
+    return build_optimizer(OptimizerSpec(family="adam", hyperparams=hp))

@@ -1,13 +1,22 @@
 """Minimal from-scratch optax-style optimizer API.
 
 optax is not available in this environment, so the framework defines its own
-``GradientTransformation`` protocol:
+``GradientTransformation`` protocol (the widened **extra-args form**):
 
   init(params) -> state
-  update(grads, state, params) -> (updates, new_state)
+  update(grads, state, params, *, step=None, **extras) -> (updates, new_state)
 
 ``updates`` are *deltas* to be added to params (they already include the
-negative learning rate), matching optax semantics.
+negative learning rate), matching optax semantics. ``step`` optionally
+overrides the optimizer's own (single, shared) step counter so callers with
+an external step source — checkpoint-resume, eval-time replays — drive
+every group's schedule from one place; extra keyword args flow through
+``chain`` untouched for forward compatibility. Plain three-arg calls
+``update(grads, state, params)`` remain valid everywhere.
+
+Optimizers are built declaratively from an ``OptimizerSpec``
+(``repro.optim.spec``); the per-family constructors (``smmf(...)``,
+``adam(...)``, ...) are deprecation shims over it.
 """
 
 from __future__ import annotations
@@ -27,10 +36,23 @@ Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> scalar
 @dataclasses.dataclass(frozen=True)
 class GradientTransformation:
     init: Callable[[PyTree], PyTree]
-    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    update: Callable[..., tuple[PyTree, PyTree]]
     # engine-based optimizers expose their static leaf-plan for a given
     # params pytree (launch/bucket introspection); None for plain transforms
     plan: Callable[[PyTree], Any] | None = None
+    # the OptimizerSpec this transformation was built from (spec-hash for
+    # checkpoints, per-group accounting); None for plain transforms
+    spec: Any = None
+
+
+class EngineState(NamedTuple):
+    """State of a spec-built (engine-backed) optimizer: ONE shared step
+    counter for every partition group + a flat dict of per-bucket state
+    subtrees keyed ``[<group>/]fac:GEOM`` / ``[<group>/]dense:...`` (layout
+    and donation/sharding contracts in ``repro.optim.engine``)."""
+
+    step: jnp.ndarray
+    factors: dict
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
@@ -47,15 +69,16 @@ class ChainState(NamedTuple):
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
-    """Compose transformations left-to-right (like optax.chain)."""
+    """Compose transformations left-to-right (like optax.chain). Extra
+    keyword args (``step=...`` and friends) are forwarded to every stage."""
 
     def init(params):
         return ChainState(tuple(t.init(params) for t in transforms))
 
-    def update(grads, state, params):
+    def update(grads, state, params, **extras):
         new_states = []
         for t, s in zip(transforms, state.inner):
-            grads, s = t.update(grads, s, params)
+            grads, s = t.update(grads, s, params, **extras)
             new_states.append(s)
         return grads, ChainState(tuple(new_states))
 
@@ -72,8 +95,8 @@ def clip_by_global_norm(max_norm: float) -> GradientTransformation:
         del params
         return ClipState()
 
-    def update(grads, state, params=None):
-        del params
+    def update(grads, state, params=None, **extras):
+        del params, extras
         leaves = jax.tree.leaves(grads)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
         scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))

@@ -1,39 +1,25 @@
 """CAME baseline (Luo et al. 2023): confidence-guided Adafactor variant.
 
 Keeps Adafactor's factored second moment, a full first moment, and a
-*factored confidence* term U_t = EMA_{beta3} of (m_t - u_t)^2, used to rescale
-the momentum-based update. Rank>=2 tensors factored over last two axes;
-rank<=1 kept full. Memory ~ Adafactor + full first moment (matches paper's
-tables where CAME >= Adafactor).
+*factored confidence* term U_t = EMA_{beta3} of (m_t - u_t)^2, used to
+rescale the momentum-based update. Rank>=2 tensors factored over last two
+axes; rank<=1 kept full. Memory ~ Adafactor + full first moment (matches
+the paper's tables where CAME >= Adafactor).
 
-Runs on the leaf-plan engine (repro.optim.engine): same-shape leaves are
-stacked into one (K, ...) bucket per geometry and updated with a single
-vectorized launch (RMS clip stays per leaf). State per bucket:
-
-  factors["fac:SHAPE"]  = (m, vr, vc, ur, uc)   all (K, ...)-stacked
-  factors["dense:NUM"]  = (m, vfull, ufull)
+The math lives in the family registry (``repro.optim.families``, entry
+``"came"``) and runs on the bucketed leaf-plan engine; like Adafactor its
+per-leaf RMS clip is segment-aware, so the dense fallback may flat-fuse
+(``fuse_dense_ok`` capability, default off). Confidence-style variants
+compose as further registry entries instead of new constructors.
+:func:`came` below is a deprecation shim building the equivalent
+single-group ``OptimizerSpec``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
 
-import jax.numpy as jnp
-
-from repro.core.plan import lasttwo_planner
-from repro.optim.base import GradientTransformation, as_schedule
-from repro.optim.engine import LeafPlanEngine
-
-
-class CAMEState(NamedTuple):
-    step: jnp.ndarray
-    factors: dict  # bucket key -> stacked moment tuple (see module doc)
-
-
-def _rms(x):
-    """Per-leaf RMS: reduced over all but the leading stack axis."""
-    axes = tuple(range(1, x.ndim))
-    return jnp.sqrt(jnp.mean(jnp.square(x), axis=axes, keepdims=True) + 1e-30)
+from repro.optim.base import GradientTransformation
 
 
 def came(
@@ -47,83 +33,14 @@ def came(
     weight_decay: float = 0.0,
     bucket: bool = True,
 ) -> GradientTransformation:
-    """CAME on the leaf-plan engine (see module docstring). Dense rank<=1
-    leaves keep per-geometry buckets — the per-leaf RMS clip reduces over
-    each leaf, so they cannot legally be flat-fused."""
-    lr_fn = as_schedule(lr)
-    plan_fn = lasttwo_planner()
+    """Deprecated shim: CAME on the leaf-plan engine. Prefer
+    ``build_optimizer(OptimizerSpec(family="came", ...))``."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    def plan(params) -> LeafPlanEngine:
-        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
-        return LeafPlanEngine(params, plan_fn, bucket=bucket)
-
-    def init(params):
-        engine = plan(params)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            m = jnp.zeros((k,) + bk.geometry, jnp.float32)
-            if bk.factorized:
-                shape = bk.geometry
-                row = (k,) + shape[:-1]
-                col = (k,) + shape[:-2] + shape[-1:]
-                factors[bk.key] = (
-                    m,
-                    jnp.zeros(row, jnp.float32), jnp.zeros(col, jnp.float32),  # vr, vc
-                    jnp.zeros(row, jnp.float32), jnp.zeros(col, jnp.float32),  # ur, uc
-                )
-            else:
-                full = (k,) + bk.geometry
-                factors[bk.key] = (
-                    m, jnp.zeros(full, jnp.float32), jnp.zeros(full, jnp.float32)
-                )
-        return CAMEState(jnp.zeros((), jnp.int32), factors)
-
-    def update(grads, state, params):
-        engine = plan(params)
-        step = state.step + 1
-        lr_t = lr_fn(step)
-
-        def recon(r, c):
-            denom = jnp.mean(r, axis=-1, keepdims=True)
-            return r[..., :, None] * c[..., None, :] / (denom[..., None] + eps1)
-
-        flat_g = engine.leaves(grads)
-        if weight_decay:
-            flat_p = engine.leaves(params)
-            flat_g = [g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-                      for g, p in zip(flat_g, flat_p)]
-
-        out_flat: list = [None] * len(flat_g)
-        factors = {}
-        for bk in engine.buckets:
-            g = engine.gather(flat_g, bk)  # (K, *geometry)
-            g2 = g * g + eps1
-            if bk.factorized:
-                m, vr, vc, ur, uc = state.factors[bk.key]
-                vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
-                vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
-                vhat = recon(vr2, vc2)
-            else:
-                m, vfull, ufull = state.factors[bk.key]
-                vfull2 = beta2 * vfull + (1 - beta2) * g2
-                vhat = vfull2
-            u = g / jnp.sqrt(vhat + eps1)
-            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
-            m2 = beta1 * m + (1 - beta1) * u
-            # confidence: instability of momentum vs update
-            inst = (u - m2) ** 2 + eps2
-            if bk.factorized:
-                ur2 = beta3 * ur + (1 - beta3) * jnp.mean(inst, axis=-1)
-                uc2 = beta3 * uc + (1 - beta3) * jnp.mean(inst, axis=-2)
-                uhat = recon(ur2, uc2)
-                factors[bk.key] = (m2, vr2, vc2, ur2, uc2)
-            else:
-                ufull2 = beta3 * ufull + (1 - beta3) * inst
-                uhat = ufull2
-                factors[bk.key] = (m2, vfull2, ufull2)
-            engine.scatter(bk, -lr_t * m2 / jnp.sqrt(uhat + eps2), out_flat)
-
-        return engine.unflatten(out_flat), CAMEState(step, factors)
-
-    return GradientTransformation(init, update, plan=plan)
+    warnings.warn(
+        "came(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='came') + build_optimizer", DeprecationWarning, stacklevel=2)
+    hp = dict(lr=lr, beta1=beta1, beta2=beta2, beta3=beta3, eps1=eps1,
+              eps2=eps2, clip_threshold=clip_threshold,
+              weight_decay=weight_decay, bucket=bucket)
+    return build_optimizer(OptimizerSpec(family="came", hyperparams=hp))

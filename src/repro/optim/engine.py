@@ -64,9 +64,15 @@ class LeafPlanEngine:
     ``plan_fn(index, shape) -> LeafPlan`` encodes the optimizer's
     factorization policy (see ``repro.core.plan`` planners). ``bucket=False``
     is the per-leaf baseline; ``fuse_dense=True`` concatenates all
-    dense-fallback leaves of a dtype into one flat launch (only legal when
-    the optimizer's dense math is purely elementwise — SMMF's plain-Adam
-    fallback is, Adafactor/CAME's per-leaf RMS clip is not).
+    dense-fallback leaves of a dtype into one flat launch — a registry
+    capability (``repro.optim.families.Family.fuse_dense_ok``): legal for
+    purely elementwise dense math (SMMF's plain-Adam fallback, adam, sgd)
+    and for Adafactor/CAME via their segment-aware RMS clip.
+
+    Plans may be **group-aware** (``repro.optim.spec``): each LeafPlan's
+    ``group``/``freeze``/``solo``/``fuse`` fields drive per-partition
+    bucketing — buckets never span groups, frozen leaves hold no state and
+    join no bucket.
     """
 
     def __init__(self, params: PyTree, plan_fn: Callable[[int, tuple[int, ...]], LeafPlan],
@@ -134,6 +140,10 @@ class LeafPlanEngine:
         leaves it concatenates (``dense_buckets`` is the post-fusion launch
         count; ``fused_dense_leaves`` is how many leaves it swallowed), so
         the ``launches`` column stays truthful after dense fusion.
+
+        Group-aware plans (``repro.optim.spec``) additionally report the
+        number of distinct partition groups and the frozen (stateless,
+        zero-update, bucket-less) leaf count.
         """
         fac = [b for b in self.buckets if b.factorized]
         dense = [b for b in self.buckets if not b.factorized]
@@ -145,6 +155,8 @@ class LeafPlanEngine:
             "dense_buckets": len(dense),
             "fused_dense_leaves": sum(b.size for b in dense if b.fused),
             "kernel_buckets": sum(1 for b in fac if b.kernel_ok),
+            "groups": len({p.group for p in self.plans}),
+            "frozen_leaves": sum(1 for p in self.plans if p.freeze),
         }
 
 

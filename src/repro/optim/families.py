@@ -1,0 +1,583 @@
+"""Optimizer-family registry: planner + bucket-math entries for the engine.
+
+Every optimizer family (smmf, adafactor, came, sm3, adam, sgd) is one
+:class:`Family` record instead of a hand-rolled ``init``/``update`` pair:
+
+* ``make_plan_fn(hp)`` — the family's factorization policy as a
+  ``(index, shape) -> LeafPlan`` planner (``repro.core.plan`` planners);
+* ``init_bucket(bucket, hp)`` — zero state for one engine bucket;
+* ``update_bucket(ctx, bucket, g, fac)`` — the bucket's math: gathered
+  gradient stack in, ``(descent_direction, new_state)`` out. The caller
+  (``repro.optim.spec.build_optimizer``) scales by ``-lr_t`` and scatters.
+
+Capability flags replace special-casing: ``fuse_dense_ok`` says the dense
+fallback may legally be concatenated into one flat row per (group, dtype) —
+true for the purely elementwise families (smmf's plain-Adam fallback, adam,
+sgd) and now also for adafactor/came whose per-leaf RMS update clip is
+computed **segment-aware** on fused rows (:func:`_per_leaf_rms`), so the
+clip still reduces over each original leaf.
+
+Weight decay is handled generically by the spec engine (grad-coupled
+"adam" mode before the bucket math, decoupled "adamw" mode after), so the
+family math here never sees it.
+
+The registry is the extension point for new families (e.g. further CAME
+confidence variants): ``register(Family(...))`` makes the family available
+to every ``OptimizerSpec``, the CLI, and mixed-family partition rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import (
+    Bucket,
+    LeafPlan,
+    axiscover_planner,
+    lasttwo_planner,
+    smmf_planner,
+)
+from repro.core.signpack import pack_signs, packed_width, unpack_signs
+from repro.distributed.ctx import constrain
+
+PyTree = Any
+PlanFn = Callable[[int, tuple[int, ...]], LeafPlan]
+
+# Default Pallas tile; kept in sync with kernels/smmf_update/kernel.py but
+# duplicated so the registry stays importable without the kernel package.
+DEFAULT_KERNEL_BLOCK = (256, 512)
+
+# hp keys that configure the engine/planner rather than the math; shared by
+# every family (plan-level keys like blocks/use_kernel live in the family's
+# own defaults)
+ENGINE_KEYS = ("bucket", "fuse_dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateCtx:
+    """Per-update scalars handed to ``Family.update_bucket``.
+
+    ``step`` is the *shared* step counter of the spec-built optimizer (one
+    source for every group — replaces the six per-state counters of the
+    legacy constructors); ``t`` is the same value as f32; ``hp`` the
+    resolved hyperparams of the bucket's partition group.
+    """
+
+    step: jnp.ndarray   # int32 scalar, already incremented
+    t: jnp.ndarray      # step as float32
+    hp: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    """One optimizer family as a registry entry (see module docstring).
+
+    ``defaults`` doubles as the schema: a hyperparam key is legal for this
+    family iff it appears here (``repro.optim.spec`` validates merged
+    hyperparams against it). ``wd_mode_key`` names the hyperparam that
+    selects grad-coupled vs decoupled weight decay ("adam"/"adamw");
+    ``None`` pins the family to grad-coupled decay.
+    """
+
+    name: str
+    defaults: dict
+    make_plan_fn: Callable[[dict], PlanFn]
+    init_bucket: Callable[[Bucket, dict], Any]
+    update_bucket: Callable[[UpdateCtx, Bucket, jnp.ndarray, Any], tuple[jnp.ndarray, Any]]
+    fuse_dense_ok: bool = False          # dense fallback may be flat-fused
+    wd_mode_key: str | None = None
+    validate: Callable[[dict], None] | None = None
+
+    def wd_mode(self, hp: dict) -> str:
+        """Weight-decay style for resolved hyperparams: "adam" (grad-coupled,
+        paper Algo 6) or "adamw" (decoupled, Algo 7)."""
+        if self.wd_mode_key is None:
+            return "adam"
+        return hp.get(self.wd_mode_key, "adam")
+
+
+_REGISTRY: dict[str, Family] = {}
+
+
+def register(family: Family) -> Family:
+    """Add ``family`` to the registry (name must be unused). Returns it, so
+    third-party variants can do ``came2 = register(dataclasses.replace(...))``."""
+    if family.name in _REGISTRY:
+        raise ValueError(f"optimizer family {family.name!r} already registered")
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> Family:
+    """Look up a registered family by name (ValueError with the known names
+    on miss — the CLI surfaces this directly)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer family {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def family_names() -> list[str]:
+    """Registered family names, sorted (CLI help / docs)."""
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def _per_leaf_rms(u: jnp.ndarray, bk: Bucket) -> jnp.ndarray:
+    """Per-leaf RMS of an update stack (the Adafactor/CAME update clip).
+
+    Regular buckets reduce over all but the leading stack axis. Fused flat
+    rows reduce **per contained leaf segment** instead (static segment ids
+    from the bucket's leaf offsets), so the clip normalizes each original
+    leaf exactly as the unfused path does — this segment-awareness is what
+    makes ``fuse_dense`` legal for families with a per-leaf reduction.
+    """
+    if bk.fused and bk.size > 1:
+        seg = np.repeat(np.arange(bk.size, dtype=np.int32),
+                        [p.numel for p in bk.plans])
+        flat = u.reshape(-1)
+        sums = jax.ops.segment_sum(flat * flat, seg, num_segments=bk.size,
+                                   indices_are_sorted=True)
+        counts = jnp.asarray([float(p.numel) for p in bk.plans], jnp.float32)
+        rms = jnp.sqrt(sums / counts + 1e-30)
+        return rms[seg].reshape(u.shape)
+    axes = tuple(range(1, u.ndim))
+    return jnp.sqrt(jnp.mean(jnp.square(u), axis=axes, keepdims=True) + 1e-30)
+
+
+def _dense_planner() -> PlanFn:
+    """Planner for fully-dense families (adam, sgd): every leaf is a
+    ``(numel,)`` fallback, so same-size leaves stack and — elementwise math —
+    the whole dense set may flat-fuse into one row per dtype."""
+
+    def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
+        numel = int(math.prod(shape)) if shape else 1
+        return LeafPlan(index, shape, False, (numel,))
+
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# SMMF (paper Algorithms 1-8) — square-matricized rank-1 factors + signs
+# ---------------------------------------------------------------------------
+
+def _compress(mat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched Algo 4: mat (B, n, m) non-negative -> r (B, n), c (B, m).
+
+    Normalizes the *smaller* vector per matrix (paper Algo 4) so the outer
+    product keeps the matrix scale with a single division.
+    """
+    _, n, m = mat.shape
+    r = jnp.sum(mat, axis=2)
+    c = jnp.sum(mat, axis=1)
+    if n <= m:
+        tot = jnp.sum(r, axis=1, keepdims=True)
+        r = jnp.where(tot > 0, r / tot, r)
+    else:
+        tot = jnp.sum(c, axis=1, keepdims=True)
+        c = jnp.where(tot > 0, c / tot, c)
+    return r, c
+
+
+def _decompress(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Batched Algo 3: r (B, n), c (B, m) -> (B, n, m)."""
+    return r[:, :, None] * c[:, None, :]
+
+
+def _smmf_validate(hp: dict) -> None:
+    lr = hp["lr"]
+    if isinstance(lr, (int, float)) and lr < 0.0:
+        raise ValueError(f"lr must be >= 0, got {lr}")
+    beta1 = hp["beta1"]
+    if beta1 is not None and not 0.0 <= beta1 <= 1.0:
+        raise ValueError(f"beta1 must be in [0,1], got {beta1}")
+    if not -1.0 <= hp["decay_rate"] <= 0.0:
+        raise ValueError(f"decay_rate must be in [-1,0], got {hp['decay_rate']}")
+    if not 0.0 <= hp["growth_rate"] <= 1.0:
+        raise ValueError(f"growth_rate must be in [0,1], got {hp['growth_rate']}")
+    if hp["weight_decay_mode"] not in ("adam", "adamw"):
+        raise ValueError(
+            f"weight_decay_mode must be adam|adamw, got {hp['weight_decay_mode']}")
+    bn_k, bm_k = hp["kernel_block"]
+    if bn_k <= 0 or bm_k <= 0 or bn_k % 8 or bm_k % 8:
+        # the packed-sign tile is bm/8 bytes wide; a non-multiple-of-8 tile
+        # mis-tiles the sign array deep inside the kernel
+        raise ValueError(
+            f"kernel_block dims must be positive multiples of 8, got {hp['kernel_block']}")
+
+
+def _smmf_plan_fn(hp: dict) -> PlanFn:
+    return smmf_planner(
+        blocks=hp["blocks"], vector_reshape=hp["vector_reshape"],
+        # the fused kernel always computes the momentum EMA; the
+        # momentum-free variant keeps the unfused path
+        use_kernel=hp["use_kernel"] and hp["beta1"] is not None,
+    )
+
+
+def _smmf_init(bk: Bucket, hp: dict):
+    k = bk.size
+    if bk.factorized:
+        b, n, m = bk.geometry
+        return (
+            _zeros((k * b, n)),                                  # r_m
+            _zeros((k * b, m)),                                  # c_m
+            _zeros((k * b * n, packed_width(m)), jnp.uint8),     # sign
+            _zeros((k * b, n)),                                  # r_v
+            _zeros((k * b, m)),                                  # c_v
+        )
+    (numel,) = bk.geometry  # total numel for fused buckets
+    return (_zeros((bk.stack, numel)), _zeros((bk.stack, numel)))  # m, v
+
+
+def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
+    hp = ctx.hp
+    beta1, eps, t = hp["beta1"], hp["eps"], ctx.t
+    beta1_t = (beta1 * jnp.power(hp["growth_rate"], t - 1.0)) if beta1 is not None else None
+    beta2_t = 1.0 - jnp.power(t, hp["decay_rate"])
+
+    if bk.factorized:
+        k = bk.size
+        b, n, m = bk.geometry
+        kb = k * b
+        gm = constrain(gm.reshape(kb, n, m), "smmf_matrix")
+        r_m, c_m, sign, r_v, c_v = fac
+
+        if bk.kernel_ok and beta1 is not None:
+            from repro.kernels.smmf_update import ops as _kops
+
+            pw = packed_width(m)
+            u, r_m2, c_m2, sign2, r_v2, c_v2 = _kops.smmf_update_batched(
+                gm, r_m, c_m, sign.reshape(kb, n, pw), r_v, c_v,
+                beta1_t=beta1_t, beta2_t=beta2_t, eps=eps,
+                block=hp["kernel_block"], interpret=hp["interpret"],
+            )
+            sign2 = sign2.reshape(kb * n, pw)
+        else:
+            # Decompression (Algo 3)
+            v_hat = _decompress(r_v, c_v)
+            if beta1 is not None:
+                signs = unpack_signs(sign, m).reshape(kb, n, m)
+                m_hat = signs * _decompress(r_m, c_m)
+                # EMA update with the intact current gradient
+                m_t = beta1_t * m_hat + (1.0 - beta1_t) * gm
+            else:
+                m_t = None
+            v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
+            # Compression (Algo 4)
+            if beta1 is not None:
+                sign2 = pack_signs((m_t >= 0).reshape(kb * n, m))
+                r_m2, c_m2 = _compress(jnp.abs(m_t))
+            else:
+                sign2, r_m2, c_m2 = sign, r_m, c_m
+            r_v2, c_v2 = _compress(v_t)
+            num = m_t if beta1 is not None else gm
+            u = num / (jnp.sqrt(v_t) + eps)
+
+        # keep the re-compressed stacked state placed where
+        # opt_state_shardings puts it (stack axis over "data" when
+        # divisible) so donation aliases buffers without resharding
+        r_m2 = constrain(r_m2, "smmf_rows")
+        r_v2 = constrain(r_v2, "smmf_rows")
+        c_m2 = constrain(c_m2, "smmf_cols")
+        c_v2 = constrain(c_v2, "smmf_cols")
+        sign2 = constrain(sign2, "smmf_sign")
+        return u.reshape(k, b * n * m), (r_m2, c_m2, sign2, r_v2, c_v2)
+
+    m_, v_ = fac  # dense fallback: plain Adam on the paper's beta schedules
+    if beta1 is not None:
+        m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
+    else:
+        m2 = m_
+    v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
+    num = m2 if beta1 is not None else gm
+    u = num / (jnp.sqrt(v2) + eps)
+    if bk.fused:
+        m2 = constrain(m2, "dense_flat")
+        v2 = constrain(v2, "dense_flat")
+    return u, (m2, v2)
+
+
+register(Family(
+    name="smmf",
+    defaults=dict(
+        lr=1e-3, beta1=0.9, eps=1e-8, weight_decay=0.0, decay_rate=-0.5,
+        growth_rate=0.999, vector_reshape=True, weight_decay_mode="adamw",
+        blocks=1, use_kernel=False, kernel_block=DEFAULT_KERNEL_BLOCK,
+        interpret=None, bucket=True, fuse_dense=True,
+    ),
+    make_plan_fn=_smmf_plan_fn,
+    init_bucket=_smmf_init,
+    update_bucket=_smmf_update,
+    fuse_dense_ok=True,
+    wd_mode_key="weight_decay_mode",
+    validate=_smmf_validate,
+))
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — last-two-axes factored second moment
+# ---------------------------------------------------------------------------
+
+def _adafactor_init(bk: Bucket, hp: dict):
+    k = bk.stack
+    if bk.factorized:
+        shape = bk.geometry
+        vr = _zeros((k,) + shape[:-1])
+        vc = _zeros((k,) + shape[:-2] + shape[-1:])
+        second = (vr, vc)
+        full = (k,) + shape
+    else:
+        full = (k,) + bk.geometry
+        second = (_zeros(full),)
+    if hp["beta1"] is not None:
+        return (_zeros(full),) + second
+    return second
+
+
+def _adafactor_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    hp = ctx.hp
+    beta1, eps1 = hp["beta1"], hp["eps1"]
+    beta2t = 1.0 - jnp.power(ctx.t, hp["decay_rate"])
+    m = fac[0] if beta1 is not None else None
+    g2 = g * g + eps1
+    if bk.factorized:
+        vr, vc = fac[-2:]
+        vr2 = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
+        vc2 = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
+        denom = jnp.mean(vr2, axis=-1, keepdims=True)
+        vhat = vr2[..., :, None] * vc2[..., None, :] / (denom[..., None] + eps1)
+        second = (vr2, vc2)
+    else:
+        vfull2 = beta2t * fac[-1] + (1 - beta2t) * g2
+        vhat = vfull2
+        if bk.fused:
+            vfull2 = constrain(vfull2, "dense_flat")
+        second = (vfull2,)
+    u = g / jnp.sqrt(vhat + eps1)
+    u = u / jnp.maximum(1.0, _per_leaf_rms(u, bk) / hp["clip_threshold"])  # update clipping, d=1.0
+    if beta1 is not None:
+        m2 = beta1 * m + (1 - beta1) * u
+        m2_state = constrain(m2, "dense_flat") if bk.fused else m2
+        return m2, (m2_state,) + second
+    return u, second
+
+
+register(Family(
+    name="adafactor",
+    defaults=dict(
+        lr=1e-3, beta1=0.9, decay_rate=-0.8, eps1=1e-30, eps2=1e-3,
+        clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
+    ),
+    make_plan_fn=lambda hp: lasttwo_planner(),
+    init_bucket=_adafactor_init,
+    update_bucket=_adafactor_update,
+    # segment-aware RMS clip makes flat fusion legal; defaults['fuse_dense']
+    # is off so the unfused layout (and its state keys) stays the baseline
+    fuse_dense_ok=True,
+))
+
+
+# ---------------------------------------------------------------------------
+# CAME (Luo et al. 2023) — Adafactor + factored confidence rescaling
+# ---------------------------------------------------------------------------
+
+def _came_init(bk: Bucket, hp: dict):
+    k = bk.stack
+    if bk.factorized:
+        shape = bk.geometry
+        m = _zeros((k,) + shape)
+        row = (k,) + shape[:-1]
+        col = (k,) + shape[:-2] + shape[-1:]
+        return (m, _zeros(row), _zeros(col), _zeros(row), _zeros(col))  # m, vr, vc, ur, uc
+    full = (k,) + bk.geometry
+    return (_zeros(full), _zeros(full), _zeros(full))  # m, vfull, ufull
+
+
+def _came_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    hp = ctx.hp
+    beta1, beta2, beta3 = hp["beta1"], hp["beta2"], hp["beta3"]
+    eps1, eps2 = hp["eps1"], hp["eps2"]
+
+    def recon(r, c):
+        denom = jnp.mean(r, axis=-1, keepdims=True)
+        return r[..., :, None] * c[..., None, :] / (denom[..., None] + eps1)
+
+    g2 = g * g + eps1
+    if bk.factorized:
+        m, vr, vc, ur, uc = fac
+        vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+        vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+        vhat = recon(vr2, vc2)
+    else:
+        m, vfull, ufull = fac
+        vfull2 = beta2 * vfull + (1 - beta2) * g2
+        vhat = vfull2
+    u = g / jnp.sqrt(vhat + eps1)
+    u = u / jnp.maximum(1.0, _per_leaf_rms(u, bk) / hp["clip_threshold"])
+    m2 = beta1 * m + (1 - beta1) * u
+    # confidence: instability of momentum vs update
+    inst = (u - m2) ** 2 + eps2
+    if bk.factorized:
+        ur2 = beta3 * ur + (1 - beta3) * jnp.mean(inst, axis=-1)
+        uc2 = beta3 * uc + (1 - beta3) * jnp.mean(inst, axis=-2)
+        uhat = recon(ur2, uc2)
+        new_fac = (m2, vr2, vc2, ur2, uc2)
+    else:
+        ufull2 = beta3 * ufull + (1 - beta3) * inst
+        uhat = ufull2
+        if bk.fused:
+            m2c = constrain(m2, "dense_flat")
+            new_fac = (m2c, constrain(vfull2, "dense_flat"),
+                       constrain(ufull2, "dense_flat"))
+        else:
+            new_fac = (m2, vfull2, ufull2)
+    return m2 / jnp.sqrt(uhat + eps2), new_fac
+
+
+register(Family(
+    name="came",
+    defaults=dict(
+        lr=1e-3, beta1=0.9, beta2=0.999, beta3=0.9999, eps1=1e-30, eps2=1e-16,
+        clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
+    ),
+    make_plan_fn=lambda hp: lasttwo_planner(),
+    init_bucket=_came_init,
+    update_bucket=_came_update,
+    fuse_dense_ok=True,          # segment-aware RMS clip (see adafactor)
+))
+
+
+# ---------------------------------------------------------------------------
+# SM3 (Anil et al. 2019) — per-axis cover-set accumulators
+# ---------------------------------------------------------------------------
+
+def _sm3_init(bk: Bucket, hp: dict):
+    k = bk.size
+    acc = tuple(_zeros((k, n)) for n in bk.geometry)
+    if hp["beta1"] is not None:
+        return (_zeros((k,) + bk.geometry), acc)
+    return (acc,)
+
+
+def _sm3_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    hp = ctx.hp
+    beta1, eps = hp["beta1"], hp["eps"]
+    k, geom = bk.size, bk.geometry
+    acc = fac[-1]
+    # min-combine the per-axis cover accumulators (SM3-II)
+    nu = None
+    for ax, a in enumerate(acc):
+        bshape = [k] + [1] * len(geom)
+        bshape[ax + 1] = geom[ax]
+        ab = a.reshape(bshape)
+        nu = ab if nu is None else jnp.minimum(nu, ab)
+    nu = nu + g * g
+    new_acc = tuple(
+        jnp.max(nu, axis=tuple(i + 1 for i in range(len(geom)) if i != ax))
+        for ax in range(len(geom))
+    )
+    u = g / (jnp.sqrt(nu) + eps)
+    if beta1 is not None:
+        m2 = beta1 * fac[0] + (1 - beta1) * u
+        return m2, (m2, new_acc)
+    return u, (new_acc,)
+
+
+register(Family(
+    name="sm3",
+    defaults=dict(lr=1e-3, beta1=0.9, eps=1e-30, weight_decay=0.0, bucket=True,
+                  fuse_dense=False),
+    make_plan_fn=lambda hp: axiscover_planner(),
+    init_bucket=_sm3_init,
+    update_bucket=_sm3_update,
+    fuse_dense_ok=False,  # every leaf is axis-covered; no dense fallback
+))
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW (Kingma & Ba 2014; Loshchilov & Hutter 2019) — dense engine
+# ---------------------------------------------------------------------------
+
+def _adam_init(bk: Bucket, hp: dict):
+    full = (bk.stack,) + bk.geometry
+    return (_zeros(full), _zeros(full))  # m, v
+
+
+def _adam_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    hp = ctx.hp
+    b1, b2, t = hp["b1"], hp["b2"], ctx.t
+    m, v = fac
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    if hp["bias_correction"]:
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+    else:
+        mhat, vhat = m2, v2
+    u = mhat / (jnp.sqrt(vhat) + hp["eps"])
+    if bk.fused:
+        m2 = constrain(m2, "dense_flat")
+        v2 = constrain(v2, "dense_flat")
+    return u, (m2, v2)
+
+
+register(Family(
+    name="adam",
+    defaults=dict(
+        lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+        bias_correction=True, weight_decay_mode="adam", bucket=True,
+        fuse_dense=True,
+    ),
+    make_plan_fn=lambda hp: _dense_planner(),
+    init_bucket=_adam_init,
+    update_bucket=_adam_update,
+    fuse_dense_ok=True,
+    wd_mode_key="weight_decay_mode",
+))
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+def _sgd_init(bk: Bucket, hp: dict):
+    if hp["momentum"]:
+        return (_zeros((bk.stack,) + bk.geometry),)
+    return ()
+
+
+def _sgd_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    momentum = ctx.hp["momentum"]
+    if momentum:
+        m2 = momentum * fac[0] + g  # heavy-ball, no dampening
+        if bk.fused:
+            m2 = constrain(m2, "dense_flat")
+        return m2, (m2,)
+    return g, ()
+
+
+register(Family(
+    name="sgd",
+    defaults=dict(lr=1e-2, momentum=0.0, weight_decay=0.0, bucket=True,
+                  fuse_dense=True),
+    make_plan_fn=lambda hp: _dense_planner(),
+    init_bucket=_sgd_init,
+    update_bucket=_sgd_update,
+    fuse_dense_ok=True,
+))

@@ -1,45 +1,26 @@
-"""SGD (+momentum) baseline."""
+"""SGD (+momentum) baseline.
+
+The math lives in the family registry (``repro.optim.families``, entry
+``"sgd"``) and runs on the bucketed leaf-plan engine (dense plans,
+flat-fused per dtype — momentum-free SGD holds zero state). :func:`sgd`
+below is a deprecation shim building the equivalent single-group
+``OptimizerSpec``.
+"""
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
 
-import jax.numpy as jnp
-
-from repro.optim._multimap import multimap
-from repro.optim.base import GradientTransformation, as_schedule
-
-
-class SGDState(NamedTuple):
-    step: jnp.ndarray
-    m: dict
+from repro.optim.base import GradientTransformation
 
 
 def sgd(lr=1e-2, momentum: float = 0.0, weight_decay: float = 0.0) -> GradientTransformation:
-    """Plain SGD; ``momentum > 0`` adds a heavy-ball momentum buffer."""
-    lr_fn = as_schedule(lr)
+    """Deprecated shim: plain SGD; ``momentum > 0`` adds a heavy-ball
+    buffer. Prefer ``build_optimizer(OptimizerSpec(family="sgd", ...))``."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    def init(params):
-        if momentum:
-            (m,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
-        else:
-            (m,) = multimap(lambda p: (jnp.zeros((0,), jnp.float32),), params, nout=1)
-        return SGDState(jnp.zeros((), jnp.int32), m)
-
-    def update(grads, state, params):
-        step = state.step + 1
-        lr_t = lr_fn(step)
-
-        def upd(g, m, p):
-            g = g.astype(jnp.float32)
-            if weight_decay:
-                g = g + weight_decay * p.astype(jnp.float32)
-            if momentum:
-                m2 = momentum * m + g
-                return -lr_t * m2, m2
-            return -lr_t * g, m
-
-        updates, m = multimap(upd, grads, state.m, params, nout=2)
-        return updates, SGDState(step, m)
-
-    return GradientTransformation(init, update)
+    warnings.warn(
+        "sgd(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='sgd') + build_optimizer", DeprecationWarning, stacklevel=2)
+    hp = dict(lr=lr, momentum=momentum, weight_decay=weight_decay)
+    return build_optimizer(OptimizerSpec(family="sgd", hyperparams=hp))

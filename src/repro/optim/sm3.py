@@ -1,94 +1,32 @@
 """SM3 baseline (Anil, Gupta, Koren & Singer 2019).
 
 SM3-II with per-axis cover sets: for a rank-d tensor, keeps one accumulator
-vector per axis (memory O(sum_r n_r)). Optional momentum (the SMMF paper runs
-SM3 with beta1; momentum then dominates SM3's memory — matching the paper's
-tables where SM3 ~= Adafactor on Transformers).
+vector per axis (memory O(sum_r n_r)). Optional momentum (the SMMF paper
+runs SM3 with beta1; momentum then dominates SM3's memory — matching the
+paper's tables where SM3 ~= Adafactor on Transformers).
 
-Runs on the leaf-plan engine (repro.optim.engine): same-shape leaves stack
-into one (K, ...) bucket updated by a single vectorized launch. State per
-bucket (scalars lift to shape (1,)):
-
-  factors["fac:SHAPE"] = (m (K, *shape)?, (acc_ax0 (K, n_0), acc_ax1 ...))
-
-(the m slot is present iff beta1 is not None).
+The math lives in the family registry (``repro.optim.families``, entry
+``"sm3"``) and runs on the bucketed leaf-plan engine: every leaf is
+'factorized' into per-axis cover accumulators, so there are no dense
+fallback buckets to fuse. :func:`sm3` below is a deprecation shim building
+the equivalent single-group ``OptimizerSpec``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
 
-import jax.numpy as jnp
-
-from repro.core.plan import axiscover_planner
-from repro.optim.base import GradientTransformation, as_schedule
-from repro.optim.engine import LeafPlanEngine
-
-
-class SM3State(NamedTuple):
-    step: jnp.ndarray
-    factors: dict  # bucket key -> (momentum?, per-axis accumulator tuple)
+from repro.optim.base import GradientTransformation
 
 
 def sm3(lr=1e-3, beta1: float | None = 0.9, eps: float = 1e-30,
         bucket: bool = True) -> GradientTransformation:
-    """SM3-II on the leaf-plan engine (see module docstring); every leaf is
-    'factorized' into per-axis cover accumulators, so there are no dense
-    fallback buckets to fuse."""
-    lr_fn = as_schedule(lr)
-    plan_fn = axiscover_planner()
+    """Deprecated shim: SM3-II on the leaf-plan engine. Prefer
+    ``build_optimizer(OptimizerSpec(family="sm3", ...))``."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
 
-    def plan(params) -> LeafPlanEngine:
-        """Static leaf-plan engine for ``params`` (see LeafPlanEngine)."""
-        return LeafPlanEngine(params, plan_fn, bucket=bucket)
-
-    def init(params):
-        engine = plan(params)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            acc = tuple(jnp.zeros((k, n), jnp.float32) for n in bk.geometry)
-            if beta1 is not None:
-                factors[bk.key] = (jnp.zeros((k,) + bk.geometry, jnp.float32), acc)
-            else:
-                factors[bk.key] = (acc,)
-        return SM3State(jnp.zeros((), jnp.int32), factors)
-
-    def update(grads, state, params):
-        engine = plan(params)
-        step = state.step + 1
-        lr_t = lr_fn(step)
-
-        flat_g = engine.leaves(grads)
-        out_flat: list = [None] * len(flat_g)
-        factors = {}
-        for bk in engine.buckets:
-            k = bk.size
-            geom = bk.geometry
-            fac = state.factors[bk.key]
-            acc = fac[-1]
-            g = engine.gather(flat_g, bk)  # (K, *geometry)
-            # min-combine the per-axis cover accumulators (SM3-II)
-            nu = None
-            for ax, a in enumerate(acc):
-                bshape = [k] + [1] * len(geom)
-                bshape[ax + 1] = geom[ax]
-                ab = a.reshape(bshape)
-                nu = ab if nu is None else jnp.minimum(nu, ab)
-            nu = nu + g * g
-            new_acc = tuple(
-                jnp.max(nu, axis=tuple(i + 1 for i in range(len(geom)) if i != ax))
-                for ax in range(len(geom))
-            )
-            u = g / (jnp.sqrt(nu) + eps)
-            if beta1 is not None:
-                m2 = beta1 * fac[0] + (1 - beta1) * u
-                u = m2
-                factors[bk.key] = (m2, new_acc)
-            else:
-                factors[bk.key] = (new_acc,)
-            engine.scatter(bk, -lr_t * u, out_flat)
-
-        return engine.unflatten(out_flat), SM3State(step, factors)
-
-    return GradientTransformation(init, update, plan=plan)
+    warnings.warn(
+        "sm3(...) is deprecated; build via repro.optim.spec.OptimizerSpec "
+        "(family='sm3') + build_optimizer", DeprecationWarning, stacklevel=2)
+    hp = dict(lr=lr, beta1=beta1, eps=eps, bucket=bucket)
+    return build_optimizer(OptimizerSpec(family="sm3", hyperparams=hp))

@@ -1,0 +1,519 @@
+"""OptimizerSpec: one declarative, partition-aware construction API.
+
+The whole optimizer family is built from a single serializable dataclass
+tree instead of six bespoke constructors::
+
+    spec = OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-3, "decay_rate": -0.8, "blocks": 4},
+        schedule={"kind": "warmup_cosine", "peak_lr": 1e-3,
+                  "warmup_steps": 100, "total_steps": 10_000},
+        partitions=(
+            Partition(name="norms", match=r"norm|scale$|bias$", family="adam",
+                      hyperparams={"lr": 3e-4}),
+            Partition(name="frozen_base", match=r"^base(/|$)", freeze=True),
+        ),
+    )
+    opt = build_optimizer(spec)           # one engine-backed transformation
+    state = opt.init(params)
+
+``partitions`` maps **label rules** to per-group overrides (like optax's
+``multi_transform``): a path-regex (serializable), a programmatic
+``predicate(path, leaf)``, or an explicit label pytree passed to
+``build_optimizer(spec, labels=...)``. Each group may swap the optimizer
+family, ``freeze`` its leaves (zero state, zero update), mask weight decay,
+or override any hyperparam / engine knob (``blocks``, ``use_kernel``,
+``fuse_dense``, ``bucket``). The first matching partition wins; unmatched
+leaves belong to the spec's default group.
+
+``build_optimizer`` lowers the spec onto the leaf-plan engine
+(``repro.optim.engine``) with **group-aware planning**: every leaf's
+:class:`~repro.core.plan.LeafPlan` carries its group label, buckets never
+span groups, and fused dense rows stay per (group, dtype) — so one bucketed
+update serves a mixed-family tree with the same launch accounting, sharding
+constraints, and donation safety as a single-family one.
+
+The update protocol is the widened extra-args form::
+
+    update(grads, state, params, *, step=None, **extras)
+
+with ONE shared step counter in :class:`EngineState` (instead of a private
+counter per family) — checkpoint-resume, donation, and every group's
+schedule read the same step source; passing ``step=`` explicitly overrides
+it (e.g. to re-line a restored state onto a trusted external counter).
+
+Specs round-trip through :meth:`OptimizerSpec.to_json` /
+:meth:`OptimizerSpec.from_json`; :meth:`OptimizerSpec.spec_hash` is stored
+in checkpoints and verified on restore (``repro.checkpoint.ckpt``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import families as F
+from repro.optim.base import (
+    EngineState,
+    GradientTransformation,
+    Schedule,
+    as_schedule,
+    warmup_cosine,
+)
+from repro.optim.engine import LeafPlanEngine
+from repro.utils.tree import tree_bytes
+
+PyTree = Any
+
+DEFAULT_GROUP = "default"
+_NAME_RE = re.compile(r"^[A-Za-z0-9_.\-]+$")
+
+
+# ---------------------------------------------------------------------------
+# schedules (serializable)
+# ---------------------------------------------------------------------------
+
+def resolve_schedule(sched, hp: dict) -> Schedule:
+    """Lower a serializable schedule spec to a ``step -> lr`` callable.
+
+    ``None`` falls back to the group's constant ``lr`` hyperparam; a number
+    is a constant; a dict selects a registered kind: ``{"kind": "constant",
+    "value": v}`` or ``{"kind": "warmup_cosine", "peak_lr": ..,
+    "warmup_steps": .., "total_steps": .., "min_ratio": 0.1}``. A callable
+    passes through (programmatic use only — not serializable).
+    """
+    if sched is None:
+        return as_schedule(hp.get("lr", 1e-3))
+    if callable(sched):
+        return sched
+    if isinstance(sched, (int, float)):
+        return as_schedule(float(sched))
+    kind = sched.get("kind")
+    if kind == "constant":
+        return as_schedule(float(sched["value"]))
+    if kind == "warmup_cosine":
+        return warmup_cosine(
+            float(sched["peak_lr"]), int(sched["warmup_steps"]),
+            int(sched["total_steps"]), min_ratio=float(sched.get("min_ratio", 0.1)),
+        )
+    raise ValueError(f"unknown schedule kind: {sched!r}")
+
+
+# ---------------------------------------------------------------------------
+# the spec dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """One label rule + per-group overrides of an :class:`OptimizerSpec`.
+
+    ``name`` labels the group and prefixes its state keys
+    (``<name>/fac:...``), so it must stay stable across restarts.
+    ``match`` is a path regex (``re.search`` over the '/'-joined leaf
+    path); ``predicate`` a programmatic ``(path, leaf) -> bool`` override
+    (not serializable). ``family=None`` inherits the spec's family;
+    ``freeze=True`` gives the group zero state and zero updates (the
+    LoRA-frozen-base case). ``hyperparams`` override the group family's
+    defaults (including engine knobs); ``schedule`` overrides the spec
+    schedule, and a partition that overrides ``lr`` without its own
+    schedule gets that constant lr (the spec-level schedule does not shadow
+    an explicit per-group lr). Weight-decay masking is expressed the same
+    way: a partition with ``hyperparams={"weight_decay": 0.0}`` exempts its
+    leaves.
+    """
+
+    name: str
+    match: str | None = None
+    predicate: Callable[[str, Any], bool] | None = None
+    family: str | None = None
+    freeze: bool = False
+    hyperparams: dict = dataclasses.field(default_factory=dict)
+    schedule: dict | float | None = None
+
+    def __post_init__(self):
+        if not _NAME_RE.match(self.name) or self.name == DEFAULT_GROUP:
+            raise ValueError(
+                f"partition name must match {_NAME_RE.pattern} and not be "
+                f"{DEFAULT_GROUP!r}, got {self.name!r}")
+
+    def matches(self, path: str, leaf) -> bool:
+        """True when this partition claims the leaf at ``path``. A partition
+        with neither ``match`` nor ``predicate`` claims nothing by rule — it
+        exists to be targeted via explicit ``labels=`` at build time."""
+        if self.predicate is not None:
+            return bool(self.predicate(path, leaf))
+        return self.match is not None and re.search(self.match, path) is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Declarative optimizer construction spec (see module docstring).
+
+    ``family`` + ``hyperparams`` configure the default group; ``schedule``
+    the default learning-rate schedule; ``partitions`` the label-rule
+    groups, tried in order (first match wins).
+    """
+
+    family: str = "smmf"
+    hyperparams: dict = dataclasses.field(default_factory=dict)
+    schedule: dict | float | None = None
+    partitions: tuple[Partition, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "partitions", tuple(self.partitions))
+        names = [p.name for p in self.partitions]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate partition names: {names}")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_json(self, indent: int | None = None) -> str:
+        """Serialize to JSON. Raises ValueError on non-serializable content
+        (callable schedules/predicates/hyperparams are programmatic-only)."""
+        def enc(o):
+            raise ValueError(f"OptimizerSpec is not serializable: {o!r} "
+                             "(callable predicates/schedules/hyperparams are "
+                             "programmatic-only)")
+
+        d = dataclasses.asdict(self)
+        for p in d["partitions"]:
+            if p.pop("predicate") is not None:
+                raise ValueError("partitions with predicates are not "
+                                 "serializable; use a match regex or labels")
+        return json.dumps(d, indent=indent, sort_keys=True, default=enc)
+
+    @staticmethod
+    def from_json(text: str) -> "OptimizerSpec":
+        """Inverse of :meth:`to_json` (``from_json(to_json(s)) == s``)."""
+        d = json.loads(text)
+
+        def detuple(v):
+            if isinstance(v, list):
+                return tuple(detuple(x) for x in v)
+            return v
+
+        def hp(d_):
+            return {k: detuple(v) for k, v in d_.items()}
+
+        parts = tuple(
+            Partition(name=p["name"], match=p.get("match"),
+                      family=p.get("family"), freeze=bool(p.get("freeze", False)),
+                      hyperparams=hp(p.get("hyperparams", {})),
+                      schedule=p.get("schedule"))
+            for p in d.get("partitions", ())
+        )
+        return OptimizerSpec(family=d["family"], hyperparams=hp(d.get("hyperparams", {})),
+                             schedule=d.get("schedule"), partitions=parts)
+
+    def spec_hash(self) -> str:
+        """Stable 16-hex digest of the **layout-relevant** spec — stored in
+        checkpoint manifests and verified on restore.
+
+        Execution-only knobs (``use_kernel``, ``kernel_block``,
+        ``interpret``), the learning rate and the schedule are excluded:
+        they never change the state layout, so a checkpoint written with
+        the fused TPU kernel resumes on CPU, and an lr re-tune on resume is
+        not refused. Everything that can change state keys/shapes or the
+        family math structure (families, partitions, ``bucket``,
+        ``fuse_dense``, ``blocks``, ``beta1``-presence, ...) is covered.
+        """
+        skip = ("use_kernel", "kernel_block", "interpret", "lr")
+        d = dataclasses.asdict(self)
+        d.pop("schedule", None)
+        d["hyperparams"] = {k: v for k, v in d["hyperparams"].items()
+                            if k not in skip}
+        for p in d["partitions"]:
+            p.pop("predicate", None)
+            p.pop("schedule", None)
+            p["hyperparams"] = {k: v for k, v in p["hyperparams"].items()
+                                if k not in skip}
+
+        def enc(o):
+            raise ValueError(f"OptimizerSpec hash needs serializable "
+                             f"layout-relevant content, got {o!r}")
+
+        text = json.dumps(d, sort_keys=True, default=enc)
+        return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+    def with_rule(self, rule: str) -> "OptimizerSpec":
+        """Append one CLI partition rule (see :func:`parse_rule`)."""
+        part = parse_rule(rule, index=len(self.partitions))
+        return dataclasses.replace(self, partitions=self.partitions + (part,))
+
+
+def parse_rule(rule: str, index: int = 0) -> Partition:
+    """Parse an inline CLI rule ``PATTERN=FAMILY[,KEY=VALUE...]``.
+
+    ``PATTERN`` is the path regex (must not contain '='); ``FAMILY`` a
+    registered family name or the keyword ``freeze``; trailing ``KEY=VALUE``
+    pairs become hyperparam overrides (values parsed as Python literals,
+    falling back to strings). The group is named ``<FAMILY><index>``, e.g.
+    ``--optim-rule 'norm|bias=adam,lr=3e-4'`` -> group ``adam0``.
+    """
+    pat, sep, rhs = rule.partition("=")
+    if not sep or not pat or not rhs:
+        raise ValueError(f"bad --optim-rule {rule!r}: want PATTERN=FAMILY[,K=V...]")
+    # split on commas at bracket depth 0 only, so literal values like
+    # kernel_block=(512,512) stay whole
+    parts, depth, cur = [], 0, []
+    for ch in rhs:
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        depth += ch in "([{"
+        depth -= ch in ")]}"
+        cur.append(ch)
+    parts.append("".join(cur))
+    fam = parts[0].strip()
+    hp: dict = {}
+    for kv in parts[1:]:
+        k, s, v = kv.partition("=")
+        if not s:
+            raise ValueError(f"bad override {kv!r} in --optim-rule {rule!r}")
+        import ast
+
+        try:
+            hp[k.strip()] = ast.literal_eval(v.strip())
+        except (ValueError, SyntaxError):
+            hp[k.strip()] = v.strip()
+    if fam == "freeze":
+        if hp:
+            raise ValueError(f"freeze rule {rule!r} takes no overrides")
+        return Partition(name=f"freeze{index}", match=pat, freeze=True)
+    F.get_family(fam)  # validate early: unknown family -> ValueError
+    return Partition(name=f"{fam}{index}", match=pat, family=fam, hyperparams=hp)
+
+
+# ---------------------------------------------------------------------------
+# lowering: spec -> groups -> engine-backed GradientTransformation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Group:
+    """A resolved partition: registry entry + merged hyperparams + schedule."""
+
+    name: str                    # "" for the default group (no key prefix)
+    label: str                   # user-facing name ("default" or partition name)
+    entry: F.Family | None       # None iff frozen
+    hp: dict
+    lr_fn: Schedule | None
+    freeze: bool = False
+
+
+def _merge_hp(entry: F.Family, *layers: dict, strict: tuple[dict, ...] = ()) -> dict:
+    """Merge hyperparam layers onto the family defaults. ``strict`` layers
+    must only contain keys the family knows; other layers (inherited from a
+    different base family) are filtered to known keys."""
+    known = set(entry.defaults)
+    for layer in strict:
+        unknown = set(layer) - known
+        if unknown:
+            raise ValueError(
+                f"unknown hyperparams for family {entry.name!r}: "
+                f"{sorted(unknown)} (known: {sorted(known)})")
+    out = dict(entry.defaults)
+    for layer in layers:
+        out.update({k: v for k, v in layer.items() if k in known})
+    for layer in strict:
+        out.update(layer)
+    return out
+
+
+def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
+    """[default group] + one group per partition, hyperparams validated."""
+    base = F.get_family(spec.family)
+    base_hp = _merge_hp(base, strict=(spec.hyperparams,))
+    if not base.fuse_dense_ok:
+        base_hp["fuse_dense"] = False
+    if base.validate:
+        base.validate(base_hp)
+    groups = [_Group("", DEFAULT_GROUP, base, base_hp,
+                     resolve_schedule(spec.schedule, base_hp))]
+    for p in spec.partitions:
+        if p.freeze:
+            groups.append(_Group(p.name, p.name, None, {}, None, freeze=True))
+            continue
+        entry = F.get_family(p.family) if p.family else base
+        # inherit the spec-level hyperparams that the group's family knows,
+        # then apply the partition's own overrides strictly
+        hp = _merge_hp(entry, spec.hyperparams, strict=(p.hyperparams,))
+        if not entry.fuse_dense_ok:
+            hp["fuse_dense"] = False
+        if entry.validate:
+            entry.validate(hp)
+        # schedule precedence: the partition's own schedule wins; a partition
+        # that overrides "lr" (without a schedule) means that lr — it must
+        # NOT be shadowed by the spec-level schedule; otherwise inherit
+        if p.schedule is not None:
+            sched = p.schedule
+        elif "lr" in p.hyperparams:
+            sched = None  # resolve_schedule falls back to the group's lr
+        else:
+            sched = spec.schedule
+        groups.append(_Group(p.name, p.name, entry, hp, resolve_schedule(sched, hp)))
+    return groups
+
+
+def _leaf_paths(params: PyTree) -> list[str]:
+    """'/'-joined leaf paths in ``jax.tree.flatten`` leaf order."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+            for path, _ in flat]
+
+
+def _assign_groups(spec: OptimizerSpec, groups: list[_Group], params: PyTree,
+                   labels: PyTree | None) -> list[int]:
+    """Group index per flat leaf: explicit ``labels`` win, else the first
+    matching partition, else the default group (index 0)."""
+    leaves, treedef = jax.tree.flatten(params)
+    if labels is not None:
+        by_label = {g.label: i for i, g in enumerate(groups)}
+        flat_labels = treedef.flatten_up_to(labels)
+        out = []
+        for lbl in flat_labels:
+            if lbl not in by_label:
+                raise ValueError(f"label {lbl!r} names no group "
+                                 f"(have: {sorted(by_label)})")
+            out.append(by_label[lbl])
+        return out
+    paths = _leaf_paths(params)
+    out = []
+    for path, leaf in zip(paths, leaves):
+        gi = 0
+        for i, part in enumerate(spec.partitions):
+            if part.matches(path, leaf):
+                gi = i + 1  # groups[0] is the default
+                break
+        out.append(gi)
+    return out
+
+
+def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
+                    labels: PyTree | None = None) -> GradientTransformation:
+    """Lower an :class:`OptimizerSpec` to one engine-backed transformation.
+
+    ``params`` is optional and only used to validate the spec's partition
+    coverage eagerly (construction is otherwise shape-agnostic — the engine
+    plans lazily per params tree, exactly like the legacy constructors).
+    ``labels`` is an explicit label pytree (same structure as params, leaf
+    values = group names) overriding the partition match rules.
+
+    The result's ``update`` follows the widened protocol
+    ``update(grads, state, params, *, step=None, **extras)`` and its
+    ``plan(params)`` exposes the group-aware leaf-plan engine for
+    launch/bucket introspection.
+    """
+    groups = _resolve_groups(spec)
+    by_name = {g.name: g for g in groups}
+
+    def _engine(params) -> LeafPlanEngine:
+        assign = _assign_groups(spec, groups, params, labels)
+
+        def plan_fn(i: int, shape: tuple[int, ...]):
+            g = groups[assign[i]]
+            if g.freeze:
+                import math as _math
+
+                numel = int(_math.prod(shape)) if shape else 1
+                from repro.core.plan import LeafPlan
+
+                return LeafPlan(i, shape, False, (numel,), group=g.name,
+                                freeze=True)
+            p = g.entry.make_plan_fn(g.hp)(i, shape)
+            return dataclasses.replace(
+                p, group=g.name,
+                solo=not g.hp.get("bucket", True),
+                fuse=(not p.factorized) and bool(g.hp.get("fuse_dense", False)),
+            )
+
+        return LeafPlanEngine(params, plan_fn)
+
+    def plan(params) -> LeafPlanEngine:
+        """Static group-aware leaf-plan engine for ``params``."""
+        return _engine(params)
+
+    if params is not None:
+        _engine(params)  # eager validation of rules against a real tree
+
+    def _group_of(bucket) -> _Group:
+        return by_name[bucket.plans[0].group]
+
+    def init(params):
+        engine = _engine(params)
+        factors = {}
+        for bk in engine.buckets:
+            g = _group_of(bk)
+            factors[bk.key] = g.entry.init_bucket(bk, g.hp)
+        return EngineState(jnp.zeros((), jnp.int32), factors)
+
+    def update(grads, state, params, *, step=None, **extras):
+        del extras  # forward-compat: callers may thread e.g. loss scales
+        engine = _engine(params)
+        new_step = state.step + 1 if step is None else jnp.asarray(step, jnp.int32)
+        t = new_step.astype(jnp.float32)
+
+        flat_g = list(engine.leaves(grads))
+        flat_p = engine.leaves(params)
+        # grad-coupled ("adam" mode, paper Algo 6) weight decay, per group
+        for p in engine.plans:
+            g = by_name[p.group]
+            if p.freeze or not g.hp.get("weight_decay"):
+                continue
+            if g.entry.wd_mode(g.hp) == "adam":
+                flat_g[p.index] = (flat_g[p.index].astype(jnp.float32)
+                                   + g.hp["weight_decay"]
+                                   * flat_p[p.index].astype(jnp.float32))
+
+        out_flat: list = [None] * len(flat_g)
+        for p in engine.plans:
+            if p.freeze:  # no state, zero update
+                out_flat[p.index] = jnp.zeros(p.shape, jnp.float32)
+
+        factors = {}
+        for bk in engine.buckets:
+            g = _group_of(bk)
+            ctx = F.UpdateCtx(step=new_step, t=t, hp=g.hp)
+            gm = engine.gather(flat_g, bk)
+            u, factors[bk.key] = g.entry.update_bucket(ctx, bk, gm, state.factors[bk.key])
+            engine.scatter(bk, -g.lr_fn(new_step) * u, out_flat)
+
+        # decoupled ("adamw" mode, paper Algo 7) weight decay, per group
+        for p in engine.plans:
+            g = by_name[p.group]
+            if p.freeze or not g.hp.get("weight_decay"):
+                continue
+            if g.entry.wd_mode(g.hp) == "adamw":
+                out_flat[p.index] = (out_flat[p.index]
+                                     - g.lr_fn(new_step) * g.hp["weight_decay"]
+                                     * flat_p[p.index].astype(jnp.float32))
+        return engine.unflatten(out_flat), EngineState(new_step, factors)
+
+    return GradientTransformation(init, update, plan=plan, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# per-group accounting
+# ---------------------------------------------------------------------------
+
+def state_bytes_by_group(opt: GradientTransformation, params: PyTree) -> dict[str, int]:
+    """Persistent optimizer-state bytes per partition group (frozen groups
+    report 0 — the LoRA frozen-base memory win). Shape-only: works on
+    abstract params, no allocation."""
+    if opt.spec is None or opt.plan is None:
+        raise ValueError("state_bytes_by_group needs a spec-built optimizer")
+    engine = opt.plan(params)
+    state = jax.eval_shape(opt.init, params)
+    by_key = {bk.key: bk for bk in engine.buckets}
+    labels = {p.group or DEFAULT_GROUP for p in engine.plans}
+    out = {lbl: 0 for lbl in labels}
+    for key, sub in state.factors.items():
+        grp = by_key[key].plans[0].group or DEFAULT_GROUP
+        out[grp] += tree_bytes(sub)
+    return out

@@ -48,6 +48,10 @@ class TrainLoopConfig:
     straggler_factor: float = 3.0
     crash_at_step: int | None = None  # fault-injection for tests
     keep_last: int = 3
+    # OptimizerSpec.spec_hash() of the optimizer that owns opt_state: stored
+    # in every checkpoint manifest and verified on resume, so a restart
+    # under an edited spec (different state layout) fails loudly
+    spec_hash: str | None = None
 
 
 class TrainLoop:
@@ -81,14 +85,16 @@ class TrainLoop:
         sh = None
         if self.shardings is not None:
             sh = {"params": self.shardings[0], "opt": self.shardings[1]}
-        state, manifest = restore(self.cfg.ckpt_dir, state, step=last, shardings=sh)
+        state, manifest = restore(self.cfg.ckpt_dir, state, step=last, shardings=sh,
+                                  spec_hash=self.cfg.spec_hash)
         self.params, self.opt_state = state["params"], state["opt"]
         self.start_step = manifest["step"]
         print(f"[trainloop] resumed from step {self.start_step}", flush=True)
 
     def _checkpoint(self, step: int):
         save(self.cfg.ckpt_dir, step, {"params": self.params, "opt": self.opt_state},
-             extra={"stragglers": self.straggler_steps, "nan_skips": self.skipped_nan_steps})
+             extra={"stragglers": self.straggler_steps, "nan_skips": self.skipped_nan_steps},
+             spec_hash=self.cfg.spec_hash)
         # retention
         steps = sorted(
             int(p.name.split("_")[1]) for p in Path(self.cfg.ckpt_dir).glob("step_*")

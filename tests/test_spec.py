@@ -1,0 +1,452 @@
+"""OptimizerSpec API: round-trips, mixed-family trees, freeze, shims.
+
+Covers the api_redesign acceptance criteria:
+
+* ``to_json``/``from_json`` identity and ``spec_hash`` stability;
+* bitwise parity of ``build_optimizer(smmf_spec)`` vs the legacy
+  ``smmf(...)`` constructor on transformer_base;
+* mixed-family specs (SMMF + Adam + frozen groups): group-prefixed state
+  keys, zero frozen state bytes, frozen leaves bitwise untouched, and the
+  Adam group matching a standalone Adam run leaf-for-leaf;
+* checkpoint save->restore under a mixed spec (stable keys, spec-hash
+  mismatch raises);
+* the widened ``update(grads, state, params, *, step=...)`` protocol;
+* deprecation shims delegating to specs;
+* the registry ``fuse_dense_ok`` capability (segment-aware RMS clip) for
+  adafactor/came.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import smoke_config
+from repro.models import init_lm
+from repro.optim import (
+    OptimizerSpec,
+    Partition,
+    adam,
+    adamw,
+    adafactor,
+    build_optimizer,
+    came,
+    chain,
+    clip_by_global_norm,
+    parse_rule,
+    sgd,
+    sm3,
+    state_bytes_by_group,
+)
+from repro.optim.base import apply_updates
+from repro.core.smmf import smmf
+
+SHAPES = {
+    "wq": (48, 96),
+    "wk": (48, 96),
+    "bias_q": (96,),
+    "bias_k": (96,),
+    "conv": (3, 3, 8, 16),
+    "scale": (64,),
+    "scalar": (),
+}
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def _run(opt, steps=4, seed0=70, params=None):
+    params = _tree(0) if params is None else params
+    state = opt.init(params)
+    for s in range(steps):
+        u, state = opt.update(_tree(seed0 + s), state, params)
+        params = apply_updates(params, u)
+    return params, state
+
+
+MIXED = OptimizerSpec(
+    family="smmf",
+    hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+    partitions=(
+        Partition(name="norms", match=r"bias|scale|scalar", family="adam",
+                  hyperparams={"lr": 3e-3}),
+        Partition(name="frozen", match=r"conv", freeze=True),
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_identity_and_hash():
+    spec = OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-3, "decay_rate": -0.8, "blocks": 4,
+                     "kernel_block": (256, 512)},
+        schedule={"kind": "warmup_cosine", "peak_lr": 1e-3,
+                  "warmup_steps": 10, "total_steps": 100},
+        partitions=MIXED.partitions,
+    )
+    back = OptimizerSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.spec_hash() == spec.spec_hash()
+    # the hash is sensitive to hyperparams (it guards checkpoint layouts)
+    other = OptimizerSpec.from_json(spec.to_json().replace("-0.8", "-0.5"))
+    assert other.spec_hash() != spec.spec_hash()
+    # and the JSON is plain data
+    assert json.loads(spec.to_json())["family"] == "smmf"
+
+
+def test_predicates_are_programmatic_only():
+    spec = OptimizerSpec(partitions=(
+        Partition(name="big", predicate=lambda path, leaf: leaf.ndim >= 2),))
+    with pytest.raises(ValueError, match="not.*serializable|predicate"):
+        spec.to_json()
+    # but they do drive grouping
+    opt = build_optimizer(spec)
+    stats = opt.plan(_tree(0)).stats()
+    assert stats["groups"] == 2
+
+
+def test_parse_rule():
+    p = parse_rule("norm|bias=adam,lr=3e-4,weight_decay=0.0", index=1)
+    assert p.name == "adam1" and p.family == "adam" and p.match == "norm|bias"
+    assert p.hyperparams == {"lr": 3e-4, "weight_decay": 0.0}
+    f = parse_rule("^base=freeze")
+    assert f.freeze and f.match == "^base"
+    with pytest.raises(ValueError):
+        parse_rule("no-family-given")
+    with pytest.raises(ValueError, match="unknown optimizer family"):
+        parse_rule("x=bogus")
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown hyperparams"):
+        build_optimizer(OptimizerSpec(family="adam", hyperparams={"decay_rate": -0.5}))
+    with pytest.raises(ValueError, match="decay_rate"):
+        build_optimizer(OptimizerSpec(family="smmf", hyperparams={"decay_rate": 0.5}))
+    with pytest.raises(ValueError, match="duplicate"):
+        OptimizerSpec(partitions=(Partition(name="a", match="x"),
+                                  Partition(name="a", match="y")))
+    with pytest.raises(ValueError, match="partition name"):
+        Partition(name="default", match="x")
+
+
+# ---------------------------------------------------------------------------
+# parity: spec-built == legacy constructor (acceptance: bitwise)
+# ---------------------------------------------------------------------------
+
+def test_spec_smmf_bitwise_parity_transformer_base():
+    cfg = smoke_config("transformer_base")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.warns(DeprecationWarning):
+        legacy = smmf(1e-3, decay_rate=-0.8)
+    spec_built = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8}))
+
+    grads = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32) * 0.01, params)
+    p1, s1 = params, legacy.init(params)
+    p2, s2 = params, spec_built.init(params)
+    for _ in range(2):
+        u1, s1 = legacy.update(grads, s1, p1)
+        u2, s2 = spec_built.update(grads, s2, p2)
+        p1, p2 = apply_updates(p1, u1), apply_updates(p2, u2)
+    # bitwise: params AND every state leaf (incl. packed signs)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert sorted(s1.factors) == sorted(s2.factors)
+    for k in s1.factors:
+        for a, b in zip(jax.tree.leaves(s1.factors[k]), jax.tree.leaves(s2.factors[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# mixed-family trees
+# ---------------------------------------------------------------------------
+
+def test_mixed_spec_groups_and_freeze():
+    opt = build_optimizer(MIXED)
+    params = _tree(0)
+    state = opt.init(params)
+    # buckets never span groups; keys carry the group prefix
+    assert sorted(state.factors) == ["fac:1x72x64", "norms/dense:flat:float32"]
+    stats = opt.plan(params).stats()
+    assert stats["groups"] == 3 and stats["frozen_leaves"] == 1
+    by_group = state_bytes_by_group(opt, params)
+    assert by_group["frozen"] == 0
+    assert by_group["default"] > 0 and by_group["norms"] > 0
+
+    p_end, state = _run(opt, params=params)
+    # frozen leaves bitwise untouched
+    np.testing.assert_array_equal(np.asarray(p_end["conv"]), np.asarray(params["conv"]))
+    # ONE shared step counter
+    assert int(state.step) == 4
+
+
+def test_mixed_adam_group_matches_standalone_adam():
+    """The adam partition's leaves evolve exactly like a standalone
+    spec-built adam run over just those leaves (shared step counter)."""
+    opt = build_optimizer(MIXED)
+    p_end, _ = _run(opt)
+    sub = {k: v for k, v in _tree(0).items() if k in ("bias_q", "bias_k", "scale", "scalar")}
+    adam_opt = build_optimizer(OptimizerSpec(family="adam", hyperparams={"lr": 3e-3}))
+    params, state = sub, adam_opt.init(sub)
+    for s in range(4):
+        g = {k: v for k, v in _tree(70 + s).items() if k in sub}
+        u, state = adam_opt.update(g, state, params)
+        params = apply_updates(params, u)
+    for k in sub:
+        np.testing.assert_array_equal(np.asarray(p_end[k]), np.asarray(params[k]), err_msg=k)
+
+
+def test_explicit_labels_override_rules():
+    labels = {k: "default" for k in SHAPES}
+    labels["wq"] = "frozen"
+    opt = build_optimizer(MIXED, labels=labels)
+    params = _tree(0)
+    p_end, state = _run(opt, params=params)
+    np.testing.assert_array_equal(np.asarray(p_end["wq"]), np.asarray(params["wq"]))
+    assert (np.abs(np.asarray(p_end["conv"]) - np.asarray(params["conv"])) > 0).any()
+    with pytest.raises(ValueError, match="names no group"):
+        build_optimizer(MIXED, params=params, labels={k: "bogus" for k in SHAPES})
+
+
+def test_weight_decay_mask_via_partition():
+    """A partition with weight_decay=0 exempts its leaves (the wd mask)."""
+    spec = OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-2, "decay_rate": -0.8, "weight_decay": 0.1},
+        partitions=(Partition(name="nodecay", match=r"bias",
+                              hyperparams={"weight_decay": 0.0}),),
+    )
+    masked, _ = _run(build_optimizer(spec))
+    nowd, _ = _run(build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8})))
+    wd, _ = _run(build_optimizer(OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-2, "decay_rate": -0.8, "weight_decay": 0.1})))
+    # masked == no-decay on bias leaves, == decayed elsewhere
+    np.testing.assert_array_equal(np.asarray(masked["bias_q"]), np.asarray(nowd["bias_q"]))
+    np.testing.assert_array_equal(np.asarray(masked["wq"]), np.asarray(wd["wq"]))
+    assert (np.asarray(masked["wq"]) != np.asarray(nowd["wq"])).any()
+
+
+# ---------------------------------------------------------------------------
+# the widened update protocol (explicit step)
+# ---------------------------------------------------------------------------
+
+def test_update_step_override_and_chain_forwarding():
+    opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8}))
+    params = _tree(0)
+    state = opt.init(params)
+    _, s1 = opt.update(_tree(1), state, params, step=7)
+    assert int(s1.step) == 7
+    # chain forwards step= through every stage
+    chained = chain(clip_by_global_norm(1.0), opt)
+    cs = chained.init(params)
+    _, cs = chained.update(_tree(1), cs, params, step=5)
+    assert int(cs.inner[1].step) == 5
+    # schedules read the shared counter: a warmup schedule at step=1 vs
+    # step=100 produces different lr -> different update magnitude
+    sched_opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+        schedule={"kind": "warmup_cosine", "peak_lr": 1e-2,
+                  "warmup_steps": 50, "total_steps": 200}))
+    st = sched_opt.init(params)
+    u_early, _ = sched_opt.update(_tree(1), st, params, step=1)
+    u_peak, _ = sched_opt.update(_tree(1), st, params, step=50)
+    n_early = float(jnp.linalg.norm(u_early["wq"]))
+    n_peak = float(jnp.linalg.norm(u_peak["wq"]))
+    assert n_early < 0.1 * n_peak
+
+
+def test_partition_lr_override_beats_spec_schedule():
+    """A partition overriding lr (no schedule of its own) gets that lr —
+    the spec-level schedule must not shadow it."""
+    spec = OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1.0, "decay_rate": -0.8},
+        schedule={"kind": "constant", "value": 0.0},  # default group: lr 0
+        partitions=(Partition(name="norms", match=r"bias", family="adam",
+                              hyperparams={"lr": 3e-3}),),
+    )
+    params = _tree(0)
+    p_end, _ = _run(build_optimizer(spec), params=params)
+    # default group saw the zero schedule -> untouched
+    np.testing.assert_array_equal(np.asarray(p_end["wq"]), np.asarray(params["wq"]))
+    # the adam partition's explicit lr took effect
+    assert (np.asarray(p_end["bias_q"]) != np.asarray(params["bias_q"])).any()
+
+
+def test_spec_hash_ignores_execution_only_knobs():
+    """use_kernel/kernel_block/interpret/lr/schedule never change the state
+    layout, so toggling them must not invalidate checkpoints."""
+    base = OptimizerSpec(family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8})
+    kernel = OptimizerSpec(family="smmf", hyperparams={
+        "lr": 3e-4, "decay_rate": -0.8, "use_kernel": True,
+        "kernel_block": (512, 512), "interpret": True})
+    sched = OptimizerSpec(family="smmf", hyperparams={"decay_rate": -0.8},
+                          schedule={"kind": "constant", "value": 1e-4})
+    assert base.spec_hash() == kernel.spec_hash() == sched.spec_hash()
+    # but layout-relevant knobs DO change it
+    assert base.spec_hash() != OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8,
+                                    "blocks": 4}).spec_hash()
+    assert base.spec_hash() != OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8,
+                                    "fuse_dense": False}).spec_hash()
+
+
+def test_parse_rule_with_tuple_literal():
+    p = parse_rule("attn=smmf,kernel_block=(512,512),blocks=4")
+    assert p.hyperparams == {"kernel_block": (512, 512), "blocks": 4}
+
+
+def test_labels_only_partition():
+    """A partition with neither match nor predicate is reachable only via
+    explicit labels — legal, and matches nothing by rule."""
+    spec = OptimizerSpec(family="smmf",
+                         hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+                         partitions=(Partition(name="icebox", freeze=True),))
+    params = _tree(0)
+    # no labels: the rule matches nothing, everything trains
+    p_end, _ = _run(build_optimizer(spec), params=params)
+    assert (np.asarray(p_end["conv"]) != np.asarray(params["conv"])).any()
+    # labels route leaves into the labels-only group
+    labels = {k: ("icebox" if k == "conv" else "default") for k in SHAPES}
+    p_end, _ = _run(build_optimizer(spec, labels=labels), params=params)
+    np.testing.assert_array_equal(np.asarray(p_end["conv"]), np.asarray(params["conv"]))
+
+
+def test_constant_zero_schedule_freezes_updates():
+    opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+        schedule={"kind": "constant", "value": 0.0}))
+    params = _tree(0)
+    p_end, _ = _run(opt, params=params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p_end[k]), np.asarray(params[k]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: mixed-family spec, stable keys, hash verification
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_mixed_spec_roundtrip_and_hash(tmp_path):
+    opt = build_optimizer(MIXED)
+    params = _tree(0)
+    _, state = _run(opt, steps=2, params=params)
+    h = MIXED.spec_hash()
+    save(tmp_path, 2, {"opt": state}, spec_hash=h)
+
+    # state keys are stable: the manifest records the group-prefixed keys
+    manifest = json.loads((tmp_path / "step_0000000002" / "manifest.json").read_text())
+    assert manifest["spec_hash"] == h
+    assert any("norms/dense:flat:float32" in k for k in manifest["leaves"])
+
+    got, _ = restore(tmp_path, {"opt": state}, spec_hash=h)
+    for a, b in zip(jax.tree.leaves(got["opt"]), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resuming under a different spec fails loudly
+    other = OptimizerSpec(family="smmf", hyperparams={"lr": 1e-2})
+    with pytest.raises(ValueError, match="spec hash mismatch"):
+        restore(tmp_path, {"opt": state}, spec_hash=other.spec_hash())
+    # pre-spec checkpoints (no recorded hash) restore freely
+    save(tmp_path, 3, {"opt": state})
+    restore(tmp_path, {"opt": state}, step=3, spec_hash=h)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ctor,family", [
+    (lambda: smmf(1e-3), "smmf"),
+    (lambda: adam(1e-3), "adam"),
+    (lambda: adamw(1e-3), "adam"),
+    (lambda: adafactor(1e-3), "adafactor"),
+    (lambda: came(1e-3), "came"),
+    (lambda: sm3(1e-3), "sm3"),
+    (lambda: sgd(1e-2, momentum=0.9), "sgd"),
+])
+def test_legacy_constructors_warn_and_delegate(ctor, family):
+    with pytest.warns(DeprecationWarning, match="deprecated.*OptimizerSpec"):
+        opt = ctor()
+    # delegation: the shim returns a spec-built transformation
+    assert opt.spec is not None and opt.spec.family == family
+    assert opt.plan is not None
+
+
+# ---------------------------------------------------------------------------
+# registry capability: fused dense fallback for adafactor/came
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["adafactor", "came"])
+def test_fused_dense_capability_adafactor_came(family):
+    """fuse_dense=True (segment-aware RMS clip) matches the unfused layout
+    and collapses the dense rank<=1 leaves into one launch."""
+    hp = {"lr": 1e-2}
+    fused_opt = build_optimizer(OptimizerSpec(
+        family=family, hyperparams=dict(hp, fuse_dense=True)))
+    plain_opt = build_optimizer(OptimizerSpec(family=family, hyperparams=hp))
+    fused_stats = fused_opt.plan(_tree(0)).stats()
+    assert fused_stats["fused_dense_leaves"] == 4   # bias_q, bias_k, scale, scalar
+    assert fused_stats["dense_buckets"] == 1
+    a, _ = _run(fused_opt)
+    b, _ = _run(plain_opt)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=f"{family} {k}")
+
+
+def test_mixed_spec_opt_state_shardings_group_aware():
+    """opt_state_shardings handles group-prefixed bucket keys: every leaf
+    gets a divisibility-legal spec and the adam group's fused dense row is
+    sharded over "data" exactly like the default group's."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.distributed import rules
+    from repro.launch import specs as S
+    from repro.utils.tree import tree_map_with_path
+
+    cfg = get_config("transformer_base")
+    psds = S.params_specs(cfg)
+    spec = OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8},
+        partitions=(Partition(name="norms", match=r"norm|scale$|bias$",
+                              family="adam"),
+                    Partition(name="icebox", match=r"pos_embed", freeze=True)),
+    )
+    opt = build_optimizer(spec)
+    mesh = AbstractMesh((("data", 4),))
+    sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+    state_sds = jax.eval_shape(opt.init, psds)
+
+    flat_paths: dict[str, tuple] = {}
+    tree_map_with_path(lambda p, leaf: flat_paths.setdefault(p, tuple(leaf.shape)),
+                       state_sds)
+    for (path, shape), s in zip(flat_paths.items(), jax.tree.leaves(sh)):
+        for dim, want in zip(shape, tuple(s.spec) + (None,) * 8):
+            if want is not None:
+                assert dim % rules._axsize(mesh, want) == 0, (path, shape, s.spec)
+    # the prefixed adam fused row got the dense (None, "data") treatment
+    dense_rows = {p: s for (p, _), s in zip(flat_paths.items(), jax.tree.leaves(sh))
+                  if "norms/dense:flat" in p}
+    assert dense_rows and all(s.spec == P(None, "data") for s in dense_rows.values())
+
+
+def test_fuse_dense_ignored_without_capability():
+    """sm3 has no dense fallback (fuse_dense_ok=False): asking for fusion is
+    a no-op instead of an illegal layout."""
+    opt = build_optimizer(OptimizerSpec(family="sm3",
+                                        hyperparams={"lr": 1e-2, "fuse_dense": True}))
+    stats = opt.plan(_tree(0)).stats()
+    assert stats["fused_dense_leaves"] == 0

@@ -1,0 +1,78 @@
+"""End-to-end spec coverage that must run in its own process.
+
+* the acceptance-criterion mixed spec (SMMF on >=2-D leaves, Adam on
+  norms/biases, a frozen group) training through ``repro.launch.train``
+  with buffer donation asserted;
+* the known XLA SPMD partitioner CHECK crash on
+  ``dryrun --arch transformer_base --shape train_4k`` (xfail-gated: starts
+  xpassing when an XLA bump fixes it) and its ``--no-scatter-constraints``
+  escape hatch.
+
+Subprocesses are required: the dry-run forces 512 host devices at first
+jax import, and the XLA CHECK failure aborts the whole process.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+HERE = Path(__file__).resolve().parent
+SRC = HERE.parent / "src"
+
+
+def _run(args, timeout):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}{os.pathsep}" + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, *args], capture_output=True,
+                          text=True, env=env, timeout=timeout)
+
+
+def test_mixed_spec_trains_e2e_with_donation(tmp_path):
+    """Mixed-family + frozen partitions through the real train launcher:
+    the step compiles, donates params+opt state, checkpoints with the spec
+    hash, and finishes."""
+    out = _run([
+        "-m", "repro.launch.train", "--arch", "transformer_base", "--smoke",
+        "--steps", "3", "--batch", "4", "--seq", "32", "--ckpt-every", "3",
+        "--ckpt-dir", str(tmp_path / "ckpt"),
+        "--optim-rule", "norm|scale$|bias$=adam,lr=3e-4",
+        "--optim-rule", "pos_embed=freeze",
+    ], timeout=900)
+    assert out.returncode == 0, f"train failed:\n{out.stdout}\n{out.stderr}"
+    assert "donation verified" in out.stdout
+    assert "3 groups" in out.stdout and "frozen" in out.stdout
+    assert "state bytes by group" in out.stdout
+    assert "[train] done" in out.stdout
+    # the checkpoint carries the spec hash (verified on any future resume)
+    import json
+
+    manifests = list((tmp_path / "ckpt").glob("step_*/manifest.json"))
+    assert manifests and json.loads(manifests[0].read_text()).get("spec_hash")
+
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="known XLA SPMD partitioner CHECK crash (spmd_partitioner_util.cc "
+           "device_groups mismatch) while partitioning the engine's scatter "
+           "reshapes for stacked-scan leaves; tracked in ROADMAP.md, needs an "
+           "XLA bump or param-spec-aware scatter constraints",
+)
+def test_transformer_base_train4k_dryrun_compiles():
+    """Regression guard for the known crash: flips to XPASS once fixed."""
+    out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
+                "--shape", "train_4k"], timeout=900)
+    assert out.returncode == 0, (
+        f"dryrun crashed (rc={out.returncode}):\n{out.stdout[-2000:]}\n"
+        f"{out.stderr[-2000:]}")
+
+
+def test_no_scatter_constraints_escape_hatch():
+    """--no-scatter-constraints makes the crashing cell compile today."""
+    out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
+                "--shape", "train_4k", "--no-scatter-constraints",
+                "--variant", "noconstraint_test"], timeout=900)
+    assert out.returncode == 0, f"escape hatch failed:\n{out.stdout}\n{out.stderr}"
+    assert "ALL CELLS OK" in out.stdout

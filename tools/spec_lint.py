@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""spec-lint: every shipped OptimizerSpec must JSON-round-trip losslessly.
+
+Checks, for every arch default spec (``repro.configs.default_optimizer_spec``
+over PAPER_IDS + ARCH_IDS), every spec declared by the dry-run launcher per
+(arch, --opt) pair, and every module-level spec constant in ``examples/*.py``
+(attributes named ``SPEC`` or dict ``SPECS``):
+
+* ``OptimizerSpec.from_json(spec.to_json()) == spec`` (identity);
+* ``spec_hash()`` is stable across the round-trip (checkpoint-resume
+  depends on this);
+* ``build_optimizer(spec)`` constructs (hyperparams validate against the
+  family registry).
+
+Run from the repo root (CI docs job does):
+
+    PYTHONPATH=src python tools/spec_lint.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _check(label: str, spec) -> list[str]:
+    """Round-trip + hash-stability + buildability violations for one spec."""
+    from repro.optim.spec import OptimizerSpec, build_optimizer
+
+    out = []
+    try:
+        text = spec.to_json()
+    except ValueError as e:
+        return [f"{label}: not serializable: {e}"]
+    back = OptimizerSpec.from_json(text)
+    if back != spec:
+        out.append(f"{label}: from_json(to_json(spec)) != spec")
+    if back.spec_hash() != spec.spec_hash():
+        out.append(f"{label}: spec_hash unstable across round-trip")
+    try:
+        build_optimizer(spec)
+    except Exception as e:  # noqa: BLE001 - lint surface, report everything
+        out.append(f"{label}: build_optimizer failed: {e!r}")
+    return out
+
+
+def _example_specs():
+    """(label, spec) for every SPEC/SPECS constant in examples/*.py."""
+    from repro.optim.spec import OptimizerSpec
+
+    for path in sorted((ROOT / "examples").glob("*.py")):
+        name = f"_speclint_{path.stem}"
+        mspec = importlib.util.spec_from_file_location(name, path)
+        mod = importlib.util.module_from_spec(mspec)
+        mspec.loader.exec_module(mod)
+        one = getattr(mod, "SPEC", None)
+        if isinstance(one, OptimizerSpec):
+            yield f"examples/{path.name}:SPEC", one
+        many = getattr(mod, "SPECS", None)
+        if isinstance(many, dict):
+            for k, v in many.items():
+                if isinstance(v, OptimizerSpec):
+                    yield f"examples/{path.name}:SPECS[{k}]", v
+
+
+def main() -> int:
+    """Lint all shipped specs; print violations and return the exit code."""
+    from repro.configs import ARCH_IDS, PAPER_IDS, default_optimizer_spec, get_config
+    from repro.launch.dryrun import cell_optimizer_spec
+
+    violations: list[str] = []
+    n = 0
+    for arch in PAPER_IDS + ARCH_IDS:
+        violations += _check(f"configs:{arch} default", default_optimizer_spec(arch))
+        n += 1
+        for opt_name in ("smmf", "smmf_local", "adam", "adafactor"):
+            spec = cell_optimizer_spec(get_config(arch), opt_name)
+            violations += _check(f"dryrun:{arch}:{opt_name}", spec)
+            n += 1
+    for label, spec in _example_specs():
+        violations += _check(label, spec)
+        n += 1
+    if violations:
+        print(f"spec-lint: {len(violations)} violation(s) over {n} specs:")
+        for v in violations:
+            print("  " + v)
+        return 1
+    print(f"spec-lint: OK ({n} specs round-tripped, hashed, and built)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
