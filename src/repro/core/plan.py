@@ -82,6 +82,7 @@ class LeafPlan:
     freeze: bool = False            # no state, zero update
     solo: bool = False              # per-leaf baseline for this leaf
     fuse: bool = False              # dense leaf eligible for flat fusion
+    state_axes: tuple[str, ...] | None = None  # per-group stack-axis override
 
     @property
     def numel(self) -> int:
@@ -150,6 +151,13 @@ class Bucket:
         """True iff every leaf in the bucket planned onto the fused kernel."""
         return self.factorized and all(p.kernel_ok for p in self.plans)
 
+    @property
+    def state_axes(self) -> tuple[str, ...] | None:
+        """The partition group's stack-axis override (buckets never span
+        groups, so every plan agrees; None = the default (pod, data)
+        preference chain of :func:`stack_axes`)."""
+        return self.plans[0].state_axes
+
 
 def build_buckets(
     plans: Sequence[LeafPlan], bucket: bool = True, fuse_dense: bool = False,
@@ -198,48 +206,105 @@ def build_buckets(
 # per-bucket partition wants (mesh placement of the stacked state)
 # ---------------------------------------------------------------------------
 
+# Default preference chain for the stacked leading axis: split over the pod
+# axis times the fsdp axis on multi-pod meshes, plain fsdp otherwise.
+DEFAULT_STACK_AXES = ("pod", "data")
+
+
 def bucket_stack_wants(leading: int, data_size: int) -> bool:
     """True when a bucket's stacked leading axis (``K*B`` for SMMF, ``K``
     for the other engine optimizers) should carry the "data"/fsdp mesh axis:
     the axis must exist (size > 1) and divide the stack.
 
-    This is the single divisibility policy behind both the optimizer-state
-    shardings (``repro.distributed.rules.opt_state_shardings``) and the
-    in-update ``with_sharding_constraint`` kinds ("smmf_matrix",
-    "smmf_rows", "smmf_cols") — keeping them agreed prevents per-step
-    resharding collectives.
+    Single-axis special case of :func:`stack_axes`, kept as the cheap gate
+    for callers that only care about the flat fsdp axis.
     """
     return data_size > 1 and leading % data_size == 0
 
 
-def bucket_partition_wants(kind: str, shape: tuple[int, ...], data_size: int) -> tuple:
+def stack_axes(
+    leading: int,
+    axis_sizes: dict[str, int],
+    prefer: tuple[str, ...] = DEFAULT_STACK_AXES,
+) -> tuple[str, ...] | None:
+    """Multi-axis assignment for a bucket's stacked leading axis.
+
+    Returns the ordered subset of ``prefer`` (axis order preserved) with the
+    **largest total way-count** such that every chosen axis exists in the
+    mesh with size > 1 and the product of the chosen sizes divides
+    ``leading`` — e.g. a 32-leaf stack on a ``(pod=2, data=16)`` mesh gets
+    ``("pod", "data")`` (32-way), a 16-leaf stack gets ``("data",)``, and a
+    6-leaf stack gets ``("pod",)``. ``None`` means no subset fits (the
+    caller falls back to the working-matrix rules).
+
+    ``prefer`` is the per-group ``state_sharding`` override hook: expert
+    groups pass e.g. ``("model",)`` so their stacks ride the expert-parallel
+    axis instead of fsdp. At most the first 8 preferred axes are considered
+    (subset enumeration); real meshes have 2-3.
+    """
+    present = [a for a in prefer[:8] if axis_sizes.get(a, 0) > 1]
+    best: tuple[str, ...] | None = None
+    best_ways = 1
+    for mask in range(1, 1 << len(present)):
+        combo = tuple(a for i, a in enumerate(present) if mask >> i & 1)
+        ways = math.prod(axis_sizes[a] for a in combo)
+        if ways > best_ways and leading % ways == 0:
+            best, best_ways = combo, ways
+    return best
+
+
+def _stack_want(st: tuple[str, ...] | None):
+    """Collapse a 1-axis assignment to the bare name so single-axis meshes
+    produce specs identical to the pre-multi-axis (PR 2/3) layout."""
+    if st is None:
+        return None
+    return st[0] if len(st) == 1 else st
+
+
+def bucket_partition_wants(
+    kind: str,
+    shape: tuple[int, ...],
+    axis_sizes: dict[str, int],
+    stack_over: tuple[str, ...] | None = None,
+) -> tuple:
     """Axis-name *wants* for one stacked SMMF state tensor of a bucket.
 
     ``kind`` is one of ``"matrix"`` (the (K·B, n, m) working matrix),
     ``"rows"`` (r_m / r_v, (K·B, n)), ``"cols"`` (c_m / c_v, (K·B, m)),
     ``"sign"`` (the (K·B·n, ceil(m/8)) packed-sign matrix) or ``"dense"``
-    (a (K, numel) / (1, total) dense-fallback moment). Preference order:
+    (a (K, numel) / (1, total) dense-fallback moment). ``axis_sizes`` maps
+    mesh axis name → size (missing = absent); ``stack_over`` replaces the
+    default ``("pod", "data")`` stack preference chain (the per-group
+    ``state_sharding`` override of ``repro.optim.spec.Partition``).
+    Preference order:
 
-    * stack axis → "data" when :func:`bucket_stack_wants` holds — every
-      per-device state slice then shrinks ~linearly with the fsdp axis and
-      the per-stack-entry factorization needs zero cross-shard collectives;
+    * stack axis → the best :func:`stack_axes` subset of the preference
+      chain — every per-device state slice then shrinks ~linearly with the
+      assigned way-count and the per-stack-entry factorization needs zero
+      cross-shard collectives;
     * otherwise fall back to the working-matrix rules (rows → "data",
       cols → "model"), which is the pre-sharded (PR 1) placement.
 
-    Divisibility of the *non-stack* dims is checked downstream by
+    An axis is never assigned twice: when the stack carries "model" (an
+    expert-group override) the column/sign minor dims drop their "model"
+    want. Divisibility of the *non-stack* dims is checked downstream by
     ``rules.fit_spec`` (indivisible axes degrade to replication).
     """
-    if kind == "sign":
-        return ("data", "model")
+    prefer = tuple(stack_over) if stack_over else DEFAULT_STACK_AXES
     if kind == "dense":
-        return (None, "data")
-    stacked = bucket_stack_wants(shape[0], data_size)
+        elem = stack_axes(shape[1], axis_sizes, prefer)
+        return (None, _stack_want(elem) or "data")
+    st = stack_axes(shape[0], axis_sizes, prefer)
+    minor_model = "model" if "model" not in (st or ()) else None
+    if kind == "sign":
+        return (_stack_want(st) or "data", minor_model)
     if kind == "matrix":
-        return ("data", None, "model") if stacked else (None, "data", "model")
+        return ((_stack_want(st), None, minor_model) if st
+                else (None, "data", "model"))
     if kind == "rows":
-        return ("data", None) if stacked else (None, "data")
+        return (_stack_want(st), None) if st else (None, "data")
     if kind == "cols":
-        return ("data", "model") if stacked else (None, "model")
+        return (_stack_want(st), minor_model) if st else (None, "model")
     raise ValueError(f"unknown bucket state kind: {kind!r}")
 
 

@@ -1,6 +1,12 @@
 """Distribution layer: mesh-aware sharding rules and activation constraints."""
 
-from repro.distributed.ctx import constrain, sharding_ctx
+from repro.distributed.ctx import (
+    constrain,
+    constrain_update,
+    sharding_ctx,
+    update_specs_ctx,
+)
 from repro.distributed.rules import param_shardings, activation_rules
 
-__all__ = ["constrain", "sharding_ctx", "param_shardings", "activation_rules"]
+__all__ = ["constrain", "constrain_update", "sharding_ctx",
+           "update_specs_ctx", "param_shardings", "activation_rules"]

@@ -3,28 +3,72 @@
 Models call ``constrain(x, kind)`` at well-known points ("residual", "ffn",
 "heads", "moe_dispatch", "moe_ffn", "logits"). Outside a mesh context this
 is the identity, so models are mesh-agnostic; the train/serve step factory
-installs a rule function (kind, ndim) -> PartitionSpec|None while tracing,
-baking ``with_sharding_constraint`` ops into the jaxpr.
+installs a rule function (kind, shape, meta) -> PartitionSpec|None while
+tracing, baking ``with_sharding_constraint`` ops into the jaxpr.
+
+``meta`` is an optional per-call annotation the caller may attach (the
+optimizer engine passes its bucket's per-group ``state_sharding`` override
+through it); rules that don't care ignore it.
+
+A second, index-keyed channel serves the optimizer engine's scatter path:
+``update_specs_ctx(leaf_shardings)`` installs one sharding per flattened
+parameter leaf, and ``constrain_update(x, index)`` pins leaf ``index``'s
+update tensor to its parameter's sharding. This is the param-spec-aware
+constraint that keeps XLA's SPMD partitioner from involuntarily
+rematerializing (and, for stacked-scan leaves, CHECK-crashing on) the
+engine's scatter reshapes — the bucket-stack layout and the parameter
+layout meet at exactly that reshape, so the partitioner needs the explicit
+target sharding there.
 """
 
 from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Callable
+import functools
+import inspect
+from typing import Callable, Sequence
 
 import jax
 
 _RULE: contextvars.ContextVar[Callable | None] = contextvars.ContextVar("shard_rule", default=None)
+_UPDATE_SPECS: contextvars.ContextVar[Sequence | None] = contextvars.ContextVar(
+    "update_specs", default=None)
 
 
-def constrain(x, kind: str):
+@functools.lru_cache(maxsize=64)
+def _takes_meta(rule: Callable) -> bool:
+    """True when ``rule`` accepts a third (meta) argument. Resolved once per
+    rule via its signature, so an in-rule TypeError is never masked by a
+    catch-and-retry and the rule body never runs twice."""
+    try:
+        params = inspect.signature(rule).parameters.values()
+    except (TypeError, ValueError):
+        return False
+    positional = [p for p in params if p.kind in (
+        p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return len(positional) >= 3 or any(
+        p.kind == p.VAR_POSITIONAL for p in params)
+
+
+def constrain(x, kind: str, meta=None):
     """Apply the ambient sharding rule for ``kind`` to ``x`` (identity when
-    no rule is installed or the rule returns None for this kind/shape)."""
+    no rule is installed or the rule returns None for this kind/shape).
+    ``meta`` is forwarded to the rule (per-group overrides etc.); rules that
+    take only (kind, shape) still work — unless a non-None ``meta`` would be
+    dropped, which raises."""
     rule = _RULE.get()
     if rule is None:
         return x
-    spec = rule(kind, tuple(x.shape))
+    if _takes_meta(rule):
+        spec = rule(kind, tuple(x.shape), meta)
+    else:
+        if meta is not None:
+            raise TypeError(
+                f"sharding rule {rule!r} takes no meta argument but the "
+                f"caller passed meta={meta!r} for kind {kind!r} — the "
+                f"override must not be silently dropped")
+        spec = rule(kind, tuple(x.shape))
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, spec)
@@ -32,10 +76,40 @@ def constrain(x, kind: str):
 
 @contextlib.contextmanager
 def sharding_ctx(rule: Callable):
-    """Install ``rule(kind, shape) -> sharding|None`` for the duration of a
-    trace (see module docstring)."""
+    """Install ``rule(kind, shape, meta=None) -> sharding|None`` for the
+    duration of a trace (see module docstring)."""
     tok = _RULE.set(rule)
     try:
         yield
     finally:
         _RULE.reset(tok)
+
+
+def constrain_update(x, index: int):
+    """Pin parameter leaf ``index``'s update tensor to the parameter's own
+    sharding (identity outside an :func:`update_specs_ctx`, or when the
+    ``smmf_no_constraint`` perf flag drops the optimizer constraints)."""
+    specs = _UPDATE_SPECS.get()
+    if specs is None:
+        return x
+    sh = specs[index]
+    if sh is None:
+        return x
+    from repro.models.perf import flags as _pf
+
+    if _pf().smmf_no_constraint:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+@contextlib.contextmanager
+def update_specs_ctx(leaf_shardings: Sequence | None):
+    """Install one sharding per flattened parameter leaf (canonical
+    ``jax.tree.flatten`` order — the optimizer engine's leaf order) for the
+    duration of a trace. ``None`` entries (and a ``None`` sequence) leave
+    those leaves unconstrained."""
+    tok = _UPDATE_SPECS.set(leaf_shardings)
+    try:
+        yield
+    finally:
+        _UPDATE_SPECS.reset(tok)

@@ -48,6 +48,12 @@ def dp_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.shape else ("data",)
 
 
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    """Mesh axis name -> size (plain dict; works for Mesh and AbstractMesh).
+    The form ``repro.core.plan.bucket_partition_wants`` consumes."""
+    return {str(name): int(size) for name, size in mesh.shape.items()}
+
+
 def _fit(mesh: Mesh, dim: int, want):
     """Return `want` if the axis exists and divides `dim`, else None."""
     if want is None:
@@ -180,36 +186,52 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     state leaves. Group labels are validated (``repro.optim.spec``) to
     exclude '/', '|' and ':', which keeps this invariant and the
     checkpoint path encoding unambiguous.
+
+    **Per-group overrides**: a spec partition with ``state_sharding=(axes,)``
+    (e.g. ``("model",)`` for expert groups) replaces the default
+    ``("pod", "data")`` stack preference chain for every bucket of that
+    group — the override is read off the lowered engine plan (bucket keys →
+    ``state_axes``), so this function and the in-update constraints stay
+    agreed (both sides call ``bucket_partition_wants`` with the same
+    ``stack_over``).
     """
-    from repro.core.plan import bucket_partition_wants, bucket_stack_wants
+    from repro.core.plan import DEFAULT_STACK_AXES, _stack_want, \
+        bucket_partition_wants, stack_axes
 
     state_shape = jax.eval_shape(opt.init, params_shape)
     pspecs = param_shardings(mesh, cfg, params_shape)
-    data_size = _axsize(mesh, "data")
+    axis_sizes = mesh_axis_sizes(mesh)
     pspec_by_shape: dict[tuple, NamedSharding] = {}
     for leaf, sh in zip(jax.tree.leaves(params_shape), jax.tree.leaves(pspecs)):
         pspec_by_shape.setdefault(tuple(leaf.shape), sh)
+    axes_by_key = _state_axes_by_bucket_key(opt, params_shape)
 
     def _one(path, leaf):
         shape = tuple(leaf.shape)
+        parts = path.split("/")
+        # per-group stack-axis override: bucket keys of override groups are
+        # always group-prefixed ("<group>/<bare key>"), i.e. parts[-3:-1]
+        over = None
+        if len(parts) >= 3:
+            over = axes_by_key.get(f"{parts[-3]}/{parts[-2]}")
         if len(shape) == 2 and leaf.dtype == np.uint8:  # packed sign matrix
-            want = bucket_partition_wants("sign", shape, data_size)
+            want = bucket_partition_wants("sign", shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
         if shape in pspec_by_shape:  # full-size momentum: shard like the param
             return pspec_by_shape[shape]
         if len(shape) >= 3 and shape[1:] in pspec_by_shape:
             # bucket-stacked full-size rank>=2 moment (leaf-plan engine): the
             # param's sharding shifted one axis right; the stack axis picks
-            # up "data" when divisible and the param spec doesn't use it.
+            # up the (pod, data) chain — or the group's override — when
+            # divisible and the param spec left those axes free.
             # 2-D engine leaves stay on the factor-tuple heuristics below —
             # (K, n) factor vectors must not inherit a 1-D param's spec.
             base = tuple(pspec_by_shape[shape[1:]].spec)
             flat_base = [a for w in base if w is not None
                          for a in (w if isinstance(w, tuple) else (w,))]
-            stack = ("data" if bucket_stack_wants(shape[0], data_size)
-                     and "data" not in flat_base else None)
+            free = {a: s for a, s in axis_sizes.items() if a not in flat_base}
+            stack = _stack_want(stack_axes(shape[0], free, over or DEFAULT_STACK_AXES))
             return NamedSharding(mesh, P(stack, *base))
-        parts = path.split("/")
         if (len(shape) == 2 and len(parts) >= 2
                 and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", parts[-2])):
             # SMMF factored-bucket tuple (r_m, c_m, sign, r_v, c_v) — the key
@@ -217,13 +239,13 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
             # 2-D leaves under a 3-int fac key). Tuple slots 1 and 4 are the
             # column factors, 0 and 3 the row factors.
             kind = "cols" if parts[-1] in ("1", "4") else "rows"
-            want = bucket_partition_wants(kind, shape, data_size)
+            want = bucket_partition_wants(kind, shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
         if (len(shape) == 2 and len(parts) >= 2
                 and re.match(r"dense:", parts[-2])):
             # fused flat (1, total) rows or stacked (K, numel) dense moments:
-            # elementwise math, shard the element axis over "data"
-            want = bucket_partition_wants("dense", shape, data_size)
+            # elementwise math, shard the element axis over the stack chain
+            want = bucket_partition_wants("dense", shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
         # everything else (row/col stats, SM3 accs, step scalars): replicate
         # — small vectors, same treatment as pre-engine layouts
@@ -232,6 +254,22 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     from repro.utils.tree import tree_map_with_path
 
     return tree_map_with_path(_one, state_shape)
+
+
+def _state_axes_by_bucket_key(opt, params_shape) -> dict[str, tuple]:
+    """{full bucket key -> state_sharding override} for a spec-built
+    optimizer whose partitions carry ``state_sharding`` overrides; {} for
+    plain transforms / specs without overrides. Best-effort and shape-only
+    (the plan walk runs on abstract leaves)."""
+    spec = getattr(opt, "spec", None)
+    plan = getattr(opt, "plan", None)
+    if spec is None or plan is None:
+        return {}
+    if not any(getattr(p, "state_sharding", None)
+               for p in getattr(spec, "partitions", ())):
+        return {}
+    engine = plan(params_shape)
+    return {bk.key: bk.state_axes for bk in engine.buckets if bk.state_axes}
 
 
 def sharded_state_bytes(shardings: PyTree, state_shape: PyTree) -> int:
@@ -250,16 +288,45 @@ def sharded_state_bytes(shardings: PyTree, state_shape: PyTree) -> int:
     return total
 
 
+def sharded_state_bytes_by_group(shardings: PyTree, state_shape: PyTree,
+                                 group_names=()) -> dict[str, int]:
+    """Per-device sharded bytes of an engine state split by partition group.
+
+    Walks the state by path: a leaf whose bucket key carries a group prefix
+    (``<group>/<bare key>/<slot>`` with ``<group>`` in ``group_names``)
+    bills that group, everything else (default-group buckets, the shared
+    step scalar) bills ``"default"``. Pure spec math like
+    :func:`sharded_state_bytes` — drives the pod×fsdp per-group grid of
+    ``benchmarks/opt_memory_sharded.py``.
+    """
+    names = set(group_names)
+    flat, _ = jax.tree_util.tree_flatten(shardings)
+    paths = jax.tree_util.tree_flatten_with_path(state_shape)[0]
+    out: dict[str, int] = {"default": 0}
+    for lbl in names:
+        out[lbl] = 0
+    for (path, leaf), sh in zip(paths, flat):
+        parts = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
+        parts = "/".join(parts).split("/")
+        group = parts[-3] if len(parts) >= 3 and parts[-3] in names else "default"
+        shard = sh.shard_shape(tuple(leaf.shape))
+        out[group] += int(np.prod(shard)) * np.dtype(leaf.dtype).itemsize
+    return out
+
+
 # ---------------------------------------------------------------------------
 # activation rules (installed via repro.distributed.ctx)
 # ---------------------------------------------------------------------------
 
 def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
-    """(kind, shape) -> NamedSharding|None for ctx.constrain.
+    """(kind, shape, meta=None) -> NamedSharding|None for ctx.constrain.
 
     mode: "train" (SP: sequence over model) | "prefill" | "decode".
     Every returned spec is divisibility-checked (`fit_spec`) so indivisible
     dims silently degrade to replication instead of failing to compile.
+    ``meta`` is the per-call annotation from ``ctx.constrain``: for the
+    bucket-state kinds it is the group's ``state_sharding`` stack-axis
+    override (None = the default ``("pod", "data")`` chain).
     """
     dp = dp_axes(mesh)
     msize = max(1, _axsize(mesh, "model"))
@@ -270,7 +337,7 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
     def _ns(shape, wants):
         return NamedSharding(mesh, fit_spec(mesh, shape, wants))
 
-    def rule(kind: str, shape: tuple):
+    def rule(kind: str, shape: tuple, meta=None):
         ndim = len(shape)
         if kind == "residual" and ndim == 3:
             from repro.models.perf import flags as _pf
@@ -330,6 +397,39 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
             if _pf().no_sp_residual:
                 return _ns(shape, (dp, None, "model"))
             return None
+        if kind == "opt_update_row":
+            # boundary transport for the engine's gather/scatter (and the
+            # SMMF sign pack/unpack):
+            #
+            # * a bucket whose stack axis is NOT mesh-sharded has no layout
+            #   the row<->param reshape can preserve, so the transient row
+            #   is explicitly replicated — a representable all-gather in
+            #   place of the SPMD partitioner's involuntary
+            #   rematerialization (which CHECK-crashes on stacked-scan
+            #   leaves, see docs/sharding.md);
+            # * buckets on a per-group ``state_sharding`` OVERRIDE chain
+            #   also take the replicated boundary: partitioning the gather
+            #   stack directly onto an override axis while the other mesh
+            #   axes hold replicas miscompiles in XLA (the stack lowers to
+            #   dynamic-update-slice + all-reduce and over-counts by the
+            #   replication factor — locked down by
+            #   tests/_multiaxis_child.py). The persistent state still
+            #   lives sharded on the override axis; only the transient
+            #   gather/scatter rows go through the replicated pin, after
+            #   which the explicit smmf_* constraints slice them out.
+            #
+            # Default-chain stack-sharded buckets return None and keep the
+            # fully-sharded, zero-collective path.
+            from repro.core.plan import DEFAULT_STACK_AXES, stack_axes
+            from repro.models.perf import flags as _pf
+
+            if _pf().smmf_no_constraint:
+                return None
+            stack, over = meta if meta else (1, None)
+            if over is None and stack_axes(stack, mesh_axis_sizes(mesh),
+                                           DEFAULT_STACK_AXES):
+                return None
+            return NamedSharding(mesh, P())
         if kind in ("smmf_matrix", "smmf_rows", "smmf_cols", "smmf_sign",
                     "dense_flat"):
             # bucket-stacked optimizer state: specs derive from the same
@@ -341,17 +441,20 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
 
             if _pf().smmf_no_constraint:
                 return None
-            dsize = _axsize(mesh, "data")
+            sizes = mesh_axis_sizes(mesh)
             if kind == "smmf_matrix" and ndim == 3:  # (K*B, n_hat, m_hat)
                 # keep the square-matricized momentum sharded through
                 # decompress -> EMA -> compress (the transient full-size
                 # tensors never materialize unsharded on any chip); the
-                # stack axis carries "data" whenever divisible
-                return _ns(shape, bucket_partition_wants("matrix", shape, dsize))
+                # stack axis carries the (pod, data) chain — or the group's
+                # state_sharding override (meta) — whenever divisible
+                return _ns(shape, bucket_partition_wants(
+                    "matrix", shape, sizes, stack_over=meta))
             if ndim == 2:
                 sub = {"smmf_rows": "rows", "smmf_cols": "cols",
                        "smmf_sign": "sign", "dense_flat": "dense"}[kind]
-                return _ns(shape, bucket_partition_wants(sub, shape, dsize))
+                return _ns(shape, bucket_partition_wants(
+                    sub, shape, sizes, stack_over=meta))
             return None
         return None
 

@@ -217,12 +217,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--blocks", type=int, default=0, help="SMMF blockwise factorization (0 = opt default)")
     ap.add_argument("--no-bucket", action="store_true", help="per-leaf baseline (no geometry bucketing)")
     ap.add_argument("--no-scatter-constraints", action="store_true",
-                    help="escape hatch for the known XLA SPMD partitioner "
-                         "CHECK crash on stacked-scan scatter reshapes "
-                         "(transformer_base train_4k): drop the in-update "
-                         "smmf_*/dense_flat sharding constraints (the "
-                         "smmf_no_constraint perf flag) so the cell compiles "
-                         "while the XLA fix is pending")
+                    help="A/B hatch: drop ALL in-update optimizer sharding "
+                         "constraints (smmf_*/dense_flat, the param-spec "
+                         "scatter constraints and the opt_update_row "
+                         "boundary — the smmf_no_constraint perf flag). The "
+                         "transformer_base/train_4k SPMD CHECK crash these "
+                         "constraints once triggered is fixed at the root; "
+                         "this remains for propagation-only perf "
+                         "experiments")
     ap.add_argument("--all", action="store_true")
     return ap
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import rules
-from repro.distributed.ctx import sharding_ctx
+from repro.distributed.ctx import sharding_ctx, update_specs_ctx
 from repro.models import (
     encdec_decode_step,
     encdec_loss,
@@ -253,7 +253,13 @@ def lower_cell(mesh, cfg: ModelConfig, shape, opt=None, donate: bool = True):
                 out_shardings=(in_sh[0], in_sh[1], None),
                 donate_argnums=(0, 1) if donate else (),
             )
-            return fn.lower(p_sds, o_sds, b_sds)
+            # per-leaf param shardings for the engine's scatter constraints
+            # (ctx.constrain_update): pins every reshaped update tensor to
+            # its parameter's sharding, which is what keeps the SPMD
+            # partitioner from rematerializing the bucket-stack -> param
+            # reshapes (the transformer_base/train_4k CHECK crash)
+            with update_specs_ctx(jax.tree.leaves(in_sh[0])):
+                return fn.lower(p_sds, o_sds, b_sds)
         if shape.kind == "prefill":
             step = make_prefill_step(cfg)
             in_sh = shardings_for_cell(mesh, cfg, "prefill", shape=shape)

@@ -8,8 +8,10 @@ names the default family, ``--optim spec.json`` loads a full declarative
 ``OptimizerSpec``, and ``--optim-rule 'PATTERN=FAMILY[,K=V...]'`` appends
 partition rules for mixed-family trees (e.g. ``'norm|bias=adam'`` runs
 plain Adam on norms/biases while SMMF handles the matrices; ``=freeze``
-gives a group zero state and zero updates). The spec's hash is stored in
-every checkpoint and verified on resume.
+gives a group zero state and zero updates; ``state_sharding=("model",)``
+rides that group's moment stacks on an override mesh axis — see
+``docs/sharding.md``). The spec's hash is stored in every checkpoint and
+verified on resume.
 
 On the CPU container this runs reduced (smoke) configs end-to-end; on a real
 pod the same entry point takes --mesh production and the full config. The

@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import Bucket, LeafPlan, build_buckets
-from repro.distributed.ctx import constrain
+from repro.distributed.ctx import constrain, constrain_update
 
 PyTree = Any
 
@@ -108,26 +108,63 @@ class LeafPlanEngine:
         Fused dense buckets concatenate instead: the result is a single
         ``(1, total_numel)`` row, sharding-constrained ("dense_flat") so the
         transient gradient row lands where the fused moments live.
+
+        Each leaf is routed through the ``"opt_update_row"`` boundary rule
+        before the param→geometry reshape (the mirror of :meth:`scatter`):
+        non-stack-sharded buckets get their gradient transported explicitly
+        instead of leaving the SPMD partitioner to invent a grouped
+        sharding for the reshape (see scatter's docstring).
         """
+        def _b(x):
+            return constrain(x, "opt_update_row",
+                             meta=(bucket.stack, bucket.state_axes))
+
         if bucket.fused:
-            parts = [flat[i].reshape(-1).astype(jnp.float32) for i in bucket.indices]
-            row = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-            return constrain(row[None], "dense_flat")
-        parts = [flat[i].reshape(bucket.geometry).astype(jnp.float32) for i in bucket.indices]
+            parts = [_b(flat[i]).reshape(-1).astype(jnp.float32)
+                     for i in bucket.indices]
+            row = parts[0] if len(parts) == 1 else _b(jnp.concatenate(parts))
+            return constrain(row[None], "dense_flat", meta=bucket.state_axes)
+        parts = [_b(flat[i]).reshape(bucket.geometry).astype(jnp.float32)
+                 for i in bucket.indices]
         if len(parts) == 1:
             return parts[0][None]
-        return jnp.stack(parts)
+        # the boundary pin must cover the stack OUTPUT too: a concatenate
+        # whose consumer demands a sharded layout lowers to partial writes
+        # + all-reduce, which over-counts replicated operands (the XLA
+        # miscompile tests/_multiaxis_child.py locks down)
+        return _b(jnp.stack(parts))
 
     def scatter(self, bucket: Bucket, stacked: jnp.ndarray, out_flat: list) -> None:
         """Split a (K, ...) stacked (or (1, total) fused) result back into
-        per-leaf shapes at their flat-param indices."""
+        per-leaf shapes at their flat-param indices.
+
+        This is where the bucket-stack layout and the parameter layout
+        meet, and the SPMD partitioner needs **param-spec-aware
+        constraints** here (the transformer_base/train_4k device_groups
+        CHECK crash, regression-tested in tests/test_spec_e2e.py):
+
+        * each per-leaf update segment is first routed through the
+          ``"opt_update_row"`` rule — for buckets whose stack axis is *not*
+          mesh-sharded it replicates the transient row, making the
+          row→param reshape trivially partitionable (an explicit,
+          representable all-gather in place of XLA's involuntary — and for
+          stacked-scan leaves, crashing — rematerialization); stack-sharded
+          buckets return None and keep their fully-sharded path;
+        * the reshaped per-leaf update is then pinned to its parameter's
+          own sharding (``ctx.constrain_update``; identity outside a mesh
+          trace).
+        """
         if bucket.fused:
             row = stacked.reshape(-1)
             for off, p in zip(bucket.offsets, bucket.plans):
-                out_flat[p.index] = row[off:off + p.numel].reshape(p.shape)
+                seg = constrain(row[off:off + p.numel], "opt_update_row",
+                                meta=(bucket.stack, bucket.state_axes))
+                out_flat[p.index] = constrain_update(seg.reshape(p.shape), p.index)
             return
         for k, p in enumerate(bucket.plans):
-            out_flat[p.index] = stacked[k].reshape(p.shape)
+            seg = constrain(stacked[k], "opt_update_row",
+                            meta=(bucket.stack, bucket.state_axes))
+            out_flat[p.index] = constrain_update(seg.reshape(p.shape), p.index)
 
     # -- introspection -----------------------------------------------------
 

@@ -255,7 +255,7 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
         k = bk.size
         b, n, m = bk.geometry
         kb = k * b
-        gm = constrain(gm.reshape(kb, n, m), "smmf_matrix")
+        gm = constrain(gm.reshape(kb, n, m), "smmf_matrix", meta=bk.state_axes)
         r_m, c_m, sign, r_v, c_v = fac
 
         if bk.kernel_ok and beta1 is not None:
@@ -272,7 +272,16 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
             # Decompression (Algo 3)
             v_hat = _decompress(r_v, c_v)
             if beta1 is not None:
-                signs = unpack_signs(sign, m).reshape(kb, n, m)
+                # the (K*B*n, pw) -> (K*B, n, m) unpack reshape is the other
+                # boundary where the SPMD partitioner rematerializes without
+                # a target: route the unpacked signs through the same
+                # "opt_update_row" boundary rule as the scatter (replicated
+                # for non-stack-sharded buckets, untouched otherwise), then
+                # pin the result to the working-matrix layout
+                signs = constrain(unpack_signs(sign, m), "opt_update_row",
+                                  meta=(kb, bk.state_axes))
+                signs = constrain(signs.reshape(kb, n, m), "smmf_matrix",
+                                  meta=bk.state_axes)
                 m_hat = signs * _decompress(r_m, c_m)
                 # EMA update with the intact current gradient
                 m_t = beta1_t * m_hat + (1.0 - beta1_t) * gm
@@ -281,7 +290,12 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
             v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
             # Compression (Algo 4)
             if beta1 is not None:
-                sign2 = pack_signs((m_t >= 0).reshape(kb * n, m))
+                # mirror boundary of the sign unpack: route the (K*B, n, m)
+                # -> (K*B*n, m) re-pack reshape through "opt_update_row" so
+                # non-stack-sharded buckets transport explicitly
+                nonneg = constrain((m_t >= 0).reshape(kb * n, m),
+                                   "opt_update_row", meta=(kb, bk.state_axes))
+                sign2 = pack_signs(nonneg)
                 r_m2, c_m2 = _compress(jnp.abs(m_t))
             else:
                 sign2, r_m2, c_m2 = sign, r_m, c_m
@@ -292,11 +306,11 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
         # keep the re-compressed stacked state placed where
         # opt_state_shardings puts it (stack axis over "data" when
         # divisible) so donation aliases buffers without resharding
-        r_m2 = constrain(r_m2, "smmf_rows")
-        r_v2 = constrain(r_v2, "smmf_rows")
-        c_m2 = constrain(c_m2, "smmf_cols")
-        c_v2 = constrain(c_v2, "smmf_cols")
-        sign2 = constrain(sign2, "smmf_sign")
+        r_m2 = constrain(r_m2, "smmf_rows", meta=bk.state_axes)
+        r_v2 = constrain(r_v2, "smmf_rows", meta=bk.state_axes)
+        c_m2 = constrain(c_m2, "smmf_cols", meta=bk.state_axes)
+        c_v2 = constrain(c_v2, "smmf_cols", meta=bk.state_axes)
+        sign2 = constrain(sign2, "smmf_sign", meta=bk.state_axes)
         return u.reshape(k, b * n * m), (r_m2, c_m2, sign2, r_v2, c_v2)
 
     m_, v_ = fac  # dense fallback: plain Adam on the paper's beta schedules
@@ -308,8 +322,8 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
     num = m2 if beta1 is not None else gm
     u = num / (jnp.sqrt(v2) + eps)
     if bk.fused:
-        m2 = constrain(m2, "dense_flat")
-        v2 = constrain(v2, "dense_flat")
+        m2 = constrain(m2, "dense_flat", meta=bk.state_axes)
+        v2 = constrain(v2, "dense_flat", meta=bk.state_axes)
     return u, (m2, v2)
 
 
@@ -367,13 +381,13 @@ def _adafactor_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
         vfull2 = beta2t * fac[-1] + (1 - beta2t) * g2
         vhat = vfull2
         if bk.fused:
-            vfull2 = constrain(vfull2, "dense_flat")
+            vfull2 = constrain(vfull2, "dense_flat", meta=bk.state_axes)
         second = (vfull2,)
     u = g / jnp.sqrt(vhat + eps1)
     u = u / jnp.maximum(1.0, _per_leaf_rms(u, bk) / hp["clip_threshold"])  # update clipping, d=1.0
     if beta1 is not None:
         m2 = beta1 * m + (1 - beta1) * u
-        m2_state = constrain(m2, "dense_flat") if bk.fused else m2
+        m2_state = constrain(m2, "dense_flat", meta=bk.state_axes) if bk.fused else m2
         return m2, (m2_state,) + second
     return u, second
 
@@ -442,9 +456,9 @@ def _came_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
         ufull2 = beta3 * ufull + (1 - beta3) * inst
         uhat = ufull2
         if bk.fused:
-            m2c = constrain(m2, "dense_flat")
-            new_fac = (m2c, constrain(vfull2, "dense_flat"),
-                       constrain(ufull2, "dense_flat"))
+            m2c = constrain(m2, "dense_flat", meta=bk.state_axes)
+            new_fac = (m2c, constrain(vfull2, "dense_flat", meta=bk.state_axes),
+                       constrain(ufull2, "dense_flat", meta=bk.state_axes))
         else:
             new_fac = (m2, vfull2, ufull2)
     return m2 / jnp.sqrt(uhat + eps2), new_fac
@@ -532,8 +546,8 @@ def _adam_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
         mhat, vhat = m2, v2
     u = mhat / (jnp.sqrt(vhat) + hp["eps"])
     if bk.fused:
-        m2 = constrain(m2, "dense_flat")
-        v2 = constrain(v2, "dense_flat")
+        m2 = constrain(m2, "dense_flat", meta=bk.state_axes)
+        v2 = constrain(v2, "dense_flat", meta=bk.state_axes)
     return u, (m2, v2)
 
 
@@ -567,7 +581,7 @@ def _sgd_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
     if momentum:
         m2 = momentum * fac[0] + g  # heavy-ball, no dampening
         if bk.fused:
-            m2 = constrain(m2, "dense_flat")
+            m2 = constrain(m2, "dense_flat", meta=bk.state_axes)
         return m2, (m2,)
     return g, ()
 

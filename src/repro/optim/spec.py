@@ -126,6 +126,15 @@ class Partition:
     an explicit per-group lr). Weight-decay masking is expressed the same
     way: a partition with ``hyperparams={"weight_decay": 0.0}`` exempts its
     leaves.
+
+    ``state_sharding`` overrides the mesh axes the group's bucket stacks
+    shard over — an ordered axis-name preference chain replacing the
+    default ``("pod", "data")`` (e.g. ``("model",)`` puts an expert group's
+    moment stacks on the expert-parallel axis). Placement-only: it changes
+    neither state keys nor shapes, so it is excluded from
+    :meth:`OptimizerSpec.spec_hash` and re-shardable on restore. Lowered
+    through both ``repro.distributed.rules.opt_state_shardings`` and the
+    engine's in-update constraints (``docs/sharding.md``).
     """
 
     name: str
@@ -135,12 +144,22 @@ class Partition:
     freeze: bool = False
     hyperparams: dict = dataclasses.field(default_factory=dict)
     schedule: dict | float | None = None
+    state_sharding: tuple[str, ...] | None = None
 
     def __post_init__(self):
-        if not _NAME_RE.match(self.name) or self.name == DEFAULT_GROUP:
+        if not _NAME_RE.match(self.name) or self.name in (DEFAULT_GROUP, "factors"):
             raise ValueError(
                 f"partition name must match {_NAME_RE.pattern} and not be "
-                f"{DEFAULT_GROUP!r}, got {self.name!r}")
+                f"{DEFAULT_GROUP!r} or 'factors', got {self.name!r}")
+        if self.state_sharding is not None:
+            axes = tuple(self.state_sharding)
+            if isinstance(self.state_sharding, str) or not axes or \
+                    len(set(axes)) != len(axes) or not all(
+                        isinstance(a, str) and _NAME_RE.match(a) for a in axes):
+                raise ValueError(
+                    f"state_sharding must be a non-repeating tuple of mesh "
+                    f"axis names, got {self.state_sharding!r}")
+            object.__setattr__(self, "state_sharding", axes)
 
     def matches(self, path: str, leaf) -> bool:
         """True when this partition claims the leaf at ``path``. A partition
@@ -205,7 +224,8 @@ class OptimizerSpec:
             Partition(name=p["name"], match=p.get("match"),
                       family=p.get("family"), freeze=bool(p.get("freeze", False)),
                       hyperparams=hp(p.get("hyperparams", {})),
-                      schedule=p.get("schedule"))
+                      schedule=p.get("schedule"),
+                      state_sharding=detuple(p.get("state_sharding")))
             for p in d.get("partitions", ())
         )
         return OptimizerSpec(family=d["family"], hyperparams=hp(d.get("hyperparams", {})),
@@ -216,12 +236,14 @@ class OptimizerSpec:
         checkpoint manifests and verified on restore.
 
         Execution-only knobs (``use_kernel``, ``kernel_block``,
-        ``interpret``), the learning rate and the schedule are excluded:
-        they never change the state layout, so a checkpoint written with
-        the fused TPU kernel resumes on CPU, and an lr re-tune on resume is
-        not refused. Everything that can change state keys/shapes or the
-        family math structure (families, partitions, ``bucket``,
-        ``fuse_dense``, ``blocks``, ``beta1``-presence, ...) is covered.
+        ``interpret``), the learning rate, the schedule and the per-group
+        ``state_sharding`` placement override are excluded: they never
+        change the state layout, so a checkpoint written with the fused TPU
+        kernel resumes on CPU, a re-sharded restore is not refused, and an
+        lr re-tune on resume is not refused. Everything that can change
+        state keys/shapes or the family math structure (families,
+        partitions, ``bucket``, ``fuse_dense``, ``blocks``,
+        ``beta1``-presence, ...) is covered.
         """
         skip = ("use_kernel", "kernel_block", "interpret", "lr")
         d = dataclasses.asdict(self)
@@ -231,6 +253,7 @@ class OptimizerSpec:
         for p in d["partitions"]:
             p.pop("predicate", None)
             p.pop("schedule", None)
+            p.pop("state_sharding", None)
             p["hyperparams"] = {k: v for k, v in p["hyperparams"].items()
                                 if k not in skip}
 
@@ -255,6 +278,11 @@ def parse_rule(rule: str, index: int = 0) -> Partition:
     pairs become hyperparam overrides (values parsed as Python literals,
     falling back to strings). The group is named ``<FAMILY><index>``, e.g.
     ``--optim-rule 'norm|bias=adam,lr=3e-4'`` -> group ``adam0``.
+
+    ``state_sharding`` is recognized as the :class:`Partition` placement
+    field rather than a hyperparam — ``--optim-rule
+    'moe/=smmf,state_sharding=("model",)'`` shards that group's bucket
+    stacks over the model axis (a bare axis name is lifted to a 1-tuple).
     """
     pat, sep, rhs = rule.partition("=")
     if not sep or not pat or not rhs:
@@ -288,7 +316,11 @@ def parse_rule(rule: str, index: int = 0) -> Partition:
             raise ValueError(f"freeze rule {rule!r} takes no overrides")
         return Partition(name=f"freeze{index}", match=pat, freeze=True)
     F.get_family(fam)  # validate early: unknown family -> ValueError
-    return Partition(name=f"{fam}{index}", match=pat, family=fam, hyperparams=hp)
+    state_sharding = hp.pop("state_sharding", None)
+    if isinstance(state_sharding, str):
+        state_sharding = (state_sharding,)
+    return Partition(name=f"{fam}{index}", match=pat, family=fam,
+                     hyperparams=hp, state_sharding=state_sharding)
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +337,7 @@ class _Group:
     hp: dict
     lr_fn: Schedule | None
     freeze: bool = False
+    state_axes: tuple[str, ...] | None = None  # state_sharding override
 
 
 def _merge_hp(entry: F.Family, *layers: dict, strict: tuple[dict, ...] = ()) -> dict:
@@ -357,7 +390,9 @@ def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
             sched = None  # resolve_schedule falls back to the group's lr
         else:
             sched = spec.schedule
-        groups.append(_Group(p.name, p.name, entry, hp, resolve_schedule(sched, hp)))
+        groups.append(_Group(p.name, p.name, entry, hp,
+                             resolve_schedule(sched, hp),
+                             state_axes=p.state_sharding))
     return groups
 
 
@@ -431,6 +466,7 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
                 p, group=g.name,
                 solo=not g.hp.get("bucket", True),
                 fuse=(not p.factorized) and bool(g.hp.get("fuse_dense", False)),
+                state_axes=g.state_axes,
             )
 
         return LeafPlanEngine(params, plan_fn)

@@ -1,0 +1,130 @@
+"""Subprocess child for the multi-axis / per-group-override parity test.
+
+Runs under the emulated-mesh harness (tests/conftest.py) on 8 forced host
+devices arranged as a (pod 2, data 2, model 2) mesh — the smallest mesh
+exercising every leg of the multi-axis stack policy:
+
+* default-group SMMF buckets whose stack divides pod*data -> stacked over
+  ``("pod", "data")`` (4-way);
+* an "experts" partition with ``state_sharding=("model",)`` -> its stacks
+  ride the model axis instead (and its minor dims drop "model");
+* an adam partition -> fused dense row on the (pod, data) element chain.
+
+Asserts the placements actually distribute, then 3 update steps of
+sharded-vs-replicated parity to float32 resolution (tight allclose — XLA
+fuses the two programs differently, so exact bit-equality is not
+attainable even for the override group's fully-local per-entry math).
+This child is also the lock on the XLA concatenate-partitioning
+miscompile: without the engine's "opt_update_row" boundary pins the
+override group's moments come out scaled by the replication factor.
+Prints "MULTIAXIS PARITY OK" on success.
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.distributed import rules  # noqa: E402
+from repro.distributed.ctx import sharding_ctx  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.base import apply_updates  # noqa: E402
+from repro.optim.spec import OptimizerSpec, Partition, build_optimizer  # noqa: E402
+
+SHAPES = {
+    # default smmf: one bucket, stack K*B = 4 -> ("pod", "data") (4-way)
+    "wq": (32, 64), "wk": (32, 64), "wv": (32, 64), "wo": (32, 64),
+    # experts: one bucket, stack 4, override -> ("model",) (2-way)
+    "experts/w0": (16, 32), "experts/w1": (16, 32),
+    "experts/w2": (16, 32), "experts/w3": (16, 32),
+    # adam group: fused dense flat row
+    "b1": (64,), "b2": (64,),
+}
+
+SPEC = OptimizerSpec(
+    family="smmf",
+    hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+    partitions=(
+        Partition(name="experts", match=r"^experts/",
+                  state_sharding=("model",)),
+        Partition(name="norms", match=r"^b\d$", family="adam",
+                  hyperparams={"lr": 1e-2}),
+    ),
+)
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def _n_shards(arr) -> int:
+    return len({str(s.index) for s in arr.addressable_shards})
+
+
+def main() -> None:
+    assert jax.device_count() >= 8, jax.device_count()
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 2, 2),
+                ("pod", "data", "model"))
+    cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
+    opt = build_optimizer(SPEC)
+    params = _tree(0)
+    state = opt.init(params)
+
+    psh = rules.param_shardings(mesh, None, params)
+    osh = rules.opt_state_shardings(mesh, None, params, opt)
+    rule = rules.activation_rules(mesh, cfg, "train")
+
+    params_s = jax.device_put(params, psh)
+    state_s = jax.device_put(state, osh)
+
+    # default-group stack (K*B = 4) rides (pod, data): 4 distinct shards
+    r_m = state_s.factors["fac:1x64x32"][0]
+    assert _n_shards(r_m) == 4, f"default stack not (pod,data)-sharded: {_n_shards(r_m)}"
+    # override group's stack rides the model axis: 2 distinct shards, and
+    # its column factors must NOT also carry model (axis never reused)
+    ex_rm = state_s.factors["experts/fac:1x32x16"][0]
+    assert _n_shards(ex_rm) == 2, f"override stack not model-sharded: {_n_shards(ex_rm)}"
+    ex_cm = state_s.factors["experts/fac:1x32x16"][1]
+    assert _n_shards(ex_cm) == 2, f"override cols wrong: {_n_shards(ex_cm)}"
+
+    def upd_with_constraints(g, s, p):
+        with sharding_ctx(rule):
+            return opt.update(g, s, p)
+
+    upd_s = jax.jit(upd_with_constraints, in_shardings=(psh, osh, psh),
+                    out_shardings=(psh, osh))
+    upd_r = jax.jit(opt.update)
+
+    for step in range(3):
+        grads = _tree(100 + step)
+        u_r, state = upd_r(grads, state, params)
+        u_s, state_s = upd_s(jax.device_put(grads, psh), state_s, params_s)
+        params = apply_updates(params, u_r)
+        params_s = apply_updates(params_s, u_s)
+        for k in params:
+            # all groups agree to float32 resolution: the override group's
+            # math is fully local per stack entry (fusion differences
+            # only), the rest reorders cross-shard reductions — a few ulps
+            # accumulate over steps either way
+            np.testing.assert_allclose(
+                np.asarray(params[k]), np.asarray(params_s[k]),
+                rtol=1e-6, atol=1e-7, err_msg=f"step {step} {k}")
+        for i, (a, b) in enumerate(zip(jax.tree.leaves(state),
+                                       jax.tree.leaves(state_s))):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7,
+                err_msg=f"step {step} state leaf {i}")
+    print("MULTIAXIS PARITY OK")
+
+
+if __name__ == "__main__":
+    main()

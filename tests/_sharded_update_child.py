@@ -1,25 +1,30 @@
 """Subprocess child for the sharded-vs-replicated update parity test.
 
-Must run in its own process: it forces 4 host devices via XLA_FLAGS, which
-is read at first jax import. Prints "PARITY OK" on success (the parent
-test asserts on it); any mismatch raises and the parent sees the traceback.
+Runs under the session-scoped emulated-mesh harness (tests/conftest.py),
+which forces the host-platform device count via XLA_FLAGS before spawning;
+when launched by hand it forces 4 devices itself. The data mesh is built
+from an explicit 4-device slice, so the same child works on the harness's
+8-device platform. Prints "PARITY OK" on success (the parent test asserts
+on it); any mismatch raises and the parent sees the traceback.
 """
 
 import os
 
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
-).strip()
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
 
-from repro.core.smmf import smmf  # noqa: E402
 from repro.distributed import rules  # noqa: E402
 from repro.distributed.ctx import sharding_ctx  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.optim.base import apply_updates  # noqa: E402
+from repro.optim.spec import OptimizerSpec, build_optimizer  # noqa: E402
 
 # four same-geometry 2-D leaves -> one bucket with stack K*B = 4, divisible
 # by the 4-way data axis (stack-sharded path); two 1-D leaves -> K*B = 2
@@ -38,10 +43,11 @@ def _tree(seed):
 
 
 def main() -> None:
-    assert jax.device_count() == 4, jax.device_count()
-    mesh = jax.make_mesh((4,), ("data",))
+    assert jax.device_count() >= 4, jax.device_count()
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("data",))
     cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
-    opt = smmf(1e-2, decay_rate=-0.8)
+    opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8}))
     params = _tree(0)
     state = opt.init(params)
 

@@ -1,0 +1,103 @@
+"""Shared pytest fixtures: the emulated multi-device mesh harness.
+
+Real-mesh tests (sharded-vs-replicated parity, multi-axis placement) need a
+process whose XLA *host platform* is forced to N devices — the
+``--xla_force_host_platform_device_count`` flag is read at first jax
+import, so it cannot be flipped inside the already-running test process.
+The :class:`MeshHarness` below is the single place that spawns such
+children: a **session-scoped** fixture with a result cache, so every test
+asserting on the same child's output shares one spawn instead of paying
+per-test subprocess boilerplate (the pre-PR-4 pattern).
+
+Markers (registered here; see pytest.ini):
+
+* ``multidevice`` — tests that spawn emulated-mesh children; the CI
+  ``multi-device`` job runs exactly these.
+* ``slow`` — the full dryrun compile-smoke matrix and other multi-minute
+  tests; **deselected by default**, opt in with ``--runslow``.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+TESTS = Path(__file__).resolve().parent
+SRC = TESTS.parent / "src"
+
+
+def spec_opt(family: str, lr: float = 1e-3, **hp):
+    """Spec-built twin of the deprecated per-family constructors.
+
+    Tier-1 turns the ``repro.optim`` shim DeprecationWarnings into errors
+    (pytest.ini), so tests that merely *use* an optimizer — rather than
+    testing the legacy surface itself — build through the OptimizerSpec
+    API via this one shared helper (``from conftest import spec_opt``).
+    """
+    from repro.optim.spec import OptimizerSpec, build_optimizer
+
+    return build_optimizer(
+        OptimizerSpec(family=family, hyperparams={"lr": lr, **hp}))
+
+# Default emulated device count: 8 = (pod 2) x (data 2) x (model 2), the
+# smallest mesh that exercises every axis of the multi-axis stack policy.
+MESH_DEVICES = 8
+
+
+class MeshHarness:
+    """Run helper scripts under an emulated N-device host platform.
+
+    ``run("child.py", "arg")`` spawns ``tests/child.py`` (or an absolute
+    path) once per distinct ``(script, args, devices)`` key with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and
+    ``PYTHONPATH=src`` set, and caches the ``CompletedProcess`` for the
+    rest of the session — tests assert on the cached stdout/returncode.
+    """
+
+    def __init__(self, devices: int = MESH_DEVICES):
+        self.devices = devices
+        self._cache: dict[tuple, subprocess.CompletedProcess] = {}
+
+    def run(self, script: str, *args: str, devices: int | None = None,
+            timeout: int = 900) -> subprocess.CompletedProcess:
+        devices = devices or self.devices
+        key = (script, args, devices)
+        if key not in self._cache:
+            path = Path(script)
+            if not path.is_absolute():
+                path = TESTS / script
+            env = dict(os.environ)
+            env["PYTHONPATH"] = f"{SRC}{os.pathsep}" + env.get("PYTHONPATH", "")
+            env["XLA_FLAGS"] = (
+                env.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={devices}"
+            ).strip()
+            self._cache[key] = subprocess.run(
+                [sys.executable, str(path), *args],
+                capture_output=True, text=True, env=env, timeout=timeout,
+            )
+        return self._cache[key]
+
+
+@pytest.fixture(scope="session")
+def emulated_mesh() -> MeshHarness:
+    """Session-scoped emulated-mesh subprocess harness (module docstring)."""
+    return MeshHarness()
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow (dryrun compile matrix)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -7,9 +7,15 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, PAPER_IDS, get_config, smoke_config
-from repro.core.smmf import smmf
 from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
 from repro.launch import specs as S
+from conftest import spec_opt
+
+
+def smmf(lr=1e-3, **hp):
+    # spec-built (shim DeprecationWarnings are errors in tier-1)
+    return spec_opt("smmf", lr, **hp)
+
 from repro.models import init_cache, init_encdec, init_encdec_cache, init_lm, vocab_padded
 from repro.models.config import SHAPES
 

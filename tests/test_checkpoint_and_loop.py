@@ -8,12 +8,19 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, restore, save
-from repro.core.smmf import smmf
 from repro.data import SyntheticLMStream
 from repro.launch.steps import make_train_step
 from repro.models import init_lm
 from repro.models.config import ModelConfig
 from repro.train import TrainLoop, TrainLoopConfig
+
+from conftest import spec_opt
+
+
+def smmf(lr=1e-3, **hp):
+    # spec-built (shim DeprecationWarnings are errors in tier-1)
+    return spec_opt("smmf", lr, **hp)
+
 
 CFG = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2, dtype="float32")
 

@@ -10,6 +10,13 @@ from repro.configs import ARCH_IDS, get_config
 from repro.distributed import rules
 from repro.launch import specs as S
 from repro.models.config import SHAPES, ModelConfig
+from conftest import spec_opt
+
+
+def smmf(lr=1e-3, **hp):
+    # spec-built twin of the deprecated constructor (shim warnings are
+    # errors in tier-1; these tests exercise sharding, not the shims)
+    return spec_opt("smmf", lr, **hp)
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))
 MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
@@ -43,8 +50,6 @@ def test_param_shardings_cover_all_archs(arch, mesh):
 
 @pytest.mark.parametrize("arch", ["grok_1_314b", "yi_6b", "mamba2_370m"])
 def test_opt_state_shardings(arch):
-    from repro.core.smmf import smmf
-
     cfg = get_config(arch)
     psds = S.params_specs(cfg)
     opt = smmf(1e-3)
@@ -139,8 +144,6 @@ def test_sharded_bucket_bytes_shrink_linearly():
     """Per-device optimizer-state bytes shrink ~linearly with the fsdp axis
     (acceptance: <= 30% of replicated on a 4-way AbstractMesh for
     smmf/transformer_base — the benchmarks/opt_memory_sharded.py metric)."""
-    from repro.core.smmf import smmf
-
     cfg = get_config("transformer_base")
     psds = S.params_specs(cfg)
     opt = smmf(1e-3, decay_rate=-0.8)
@@ -160,23 +163,14 @@ def test_sharded_bucket_bytes_shrink_linearly():
     assert per_dev(8) <= 0.20 * base
 
 
-def test_sharded_vs_replicated_update_parity():
-    """On a real (forced-host) 4-device mesh, the stack-sharded update is
-    numerically identical to the replicated one and the bucket stack is
-    actually distributed. Runs as a subprocess: the forced device count is
-    read at first jax import."""
-    import os
-    import subprocess
-    import sys
-    from pathlib import Path
-
-    here = Path(__file__).resolve().parent
-    env = dict(os.environ)
-    env["PYTHONPATH"] = f"{here.parent / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
-    out = subprocess.run(
-        [sys.executable, str(here / "_sharded_update_child.py")],
-        capture_output=True, text=True, env=env, timeout=600,
-    )
+@pytest.mark.multidevice
+def test_sharded_vs_replicated_update_parity(emulated_mesh):
+    """On a real (forced-host) multi-device mesh, the stack-sharded update
+    is numerically identical to the replicated one and the bucket stack is
+    actually distributed. Runs on the session-scoped emulated-mesh harness
+    (tests/conftest.py): the forced device count is read at first jax
+    import, and the child's result is cached for the whole session."""
+    out = emulated_mesh.run("_sharded_update_child.py")
     assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
     assert "PARITY OK" in out.stdout
 
@@ -185,7 +179,6 @@ def test_donation_with_grad_accum():
     """Donating params+opt state through the jitted step leaves no
     aliased-buffer errors under gradient accumulation, the jax.stages
     args_info marks them donated, and the executable aliases the bytes."""
-    from repro.core.smmf import smmf
     from repro.data import SyntheticLMStream
     from repro.launch.steps import assert_donation, make_train_step
     from repro.models import init_lm

@@ -16,10 +16,28 @@ import numpy as np
 import pytest
 
 from repro.core.plan import build_buckets, smmf_planner
-from repro.core.smmf import smmf
 from repro.kernels.smmf_update import ops as kops
-from repro.optim import adafactor, came, sm3
 from repro.optim.base import apply_updates
+
+# spec-built twins of the legacy constructors (shared helper: conftest)
+from conftest import spec_opt
+
+
+def smmf(lr=1e-3, **hp):
+    return spec_opt("smmf", lr, **hp)
+
+
+def adafactor(lr=1e-3, **hp):
+    return spec_opt("adafactor", lr, **hp)
+
+
+def came(lr=1e-3, **hp):
+    return spec_opt("came", lr, **hp)
+
+
+def sm3(lr=1e-3, **hp):
+    return spec_opt("sm3", lr, **hp)
+
 from repro.utils.tree import tree_bytes
 
 from reference_smmf import RefSMMF

@@ -10,6 +10,12 @@ from repro.core.smmf import smmf
 from repro.kernels.smmf_update import smmf_update, smmf_update_ref
 from repro.optim.base import apply_updates
 
+# These tests deliberately exercise the deprecated legacy-constructor
+# surface (shim parity / reference trajectories); tier-1 errors on shim
+# DeprecationWarnings everywhere else (pytest.ini).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:.*is deprecated. build via repro.optim.spec.OptimizerSpec.*:DeprecationWarning")
+
 SWEEP = [
     (8, 8), (64, 48), (128, 128), (300, 280), (517, 999),
     (1, 7), (2048, 96), (33, 1024),

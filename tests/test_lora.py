@@ -4,10 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.smmf import smmf
 from repro.models import init_lm, lm_loss
 from repro.models.config import ModelConfig
-from repro.optim import adam
+from conftest import spec_opt
+
+
+def smmf(lr=1e-3, **hp):
+    # spec-built (shim DeprecationWarnings are errors in tier-1)
+    return spec_opt("smmf", lr, **hp)
+
+
+def adam(lr=1e-3, **hp):
+    return spec_opt("adam", lr, **hp)
 from repro.train.lora import lora_init, lora_merge, make_lora_train_step
 from repro.utils.tree import tree_bytes
 

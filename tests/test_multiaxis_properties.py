@@ -1,0 +1,108 @@
+"""Hypothesis fuzz properties for the multi-axis stack policy.
+
+Fuzz twins of the deterministic tests in ``test_multiaxis_sharding.py``
+(own module: a module-level importorskip must not skip those). Runs where
+hypothesis is installed — CI installs requirements-dev.txt.
+"""
+
+import math
+
+import pytest
+from jax.sharding import AbstractMesh
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.plan import (  # noqa: E402
+    DEFAULT_STACK_AXES,
+    LeafPlan,
+    bucket_partition_wants,
+    build_buckets,
+    stack_axes,
+)
+from repro.distributed import rules  # noqa: E402
+
+KINDS = ("matrix", "rows", "cols", "sign", "dense")
+
+
+def _shape_for(kind: str, leading: int) -> tuple[int, ...]:
+    return {
+        "matrix": (leading, 64, 128),
+        "rows": (leading, 64),
+        "cols": (leading, 128),
+        "sign": (leading * 64, 16),
+        "dense": (leading, 4096),
+    }[kind]
+
+
+sizes_st = st.fixed_dictionaries({
+    "pod": st.sampled_from([1, 2, 4]),
+    "data": st.sampled_from([1, 2, 4, 8, 16]),
+    "model": st.sampled_from([1, 2, 8, 16]),
+})
+leading_st = st.integers(min_value=1, max_value=64)
+over_st = st.sampled_from([None, ("model",), ("data",), ("model", "data"),
+                           ("pod", "data")])
+
+
+@given(sizes_st, leading_st, st.sampled_from(KINDS), over_st)
+@settings(max_examples=200, deadline=None)
+def test_fuzz_wants_fit_and_never_reuse(sizes, leading, kind, over):
+    """Every want tuple uses each mesh axis at most once, and every kept
+    axis divides its dim after fit_spec."""
+    shape = _shape_for(kind, leading)
+    wants = bucket_partition_wants(kind, shape, sizes, stack_over=over)
+    flat = []
+    for w in wants:
+        if w is not None:
+            flat.extend(w if isinstance(w, tuple) else (w,))
+    assert len(flat) == len(set(flat))
+    axes = tuple((a, s) for a, s in sizes.items() if s > 1)
+    if axes:
+        mesh = AbstractMesh(axes)
+        spec = rules.fit_spec(mesh, shape, wants)
+        for dim, want in zip(shape, tuple(spec) + (None,) * 4):
+            if want is not None:
+                assert dim % rules._axsize(mesh, want) == 0
+
+
+@given(sizes_st, leading_st)
+@settings(max_examples=200, deadline=None)
+def test_fuzz_stack_assignment_divides_and_falls_back(sizes, leading):
+    """A stack assignment always divides the stack; None (replicated
+    fallback) only when no preferred axis fits alone either."""
+    st_ = stack_axes(leading, sizes)
+    if st_ is None:
+        for a in DEFAULT_STACK_AXES:
+            assert sizes.get(a, 0) <= 1 or leading % sizes[a] != 0
+    else:
+        assert leading % math.prod(sizes[a] for a in st_) == 0
+
+
+@given(sizes_st, leading_st, st.sampled_from(KINDS))
+@settings(max_examples=200, deadline=None)
+def test_fuzz_single_axis_mesh_identical_to_pr3(sizes, leading, kind):
+    """Without a pod axis the policy equals the PR 3 single-axis rules."""
+    sizes = dict(sizes, pod=1)
+    shape = _shape_for(kind, leading)
+    got = bucket_partition_wants(kind, shape, sizes)
+    data = sizes["data"]
+    stacked = data > 1 and shape[0] % data == 0
+    ref = {
+        "sign": ("data", "model"),
+        "dense": (None, "data"),
+        "matrix": ("data", None, "model") if stacked else (None, "data", "model"),
+        "rows": ("data", None) if stacked else (None, "data"),
+        "cols": ("data", "model") if stacked else (None, "model"),
+    }[kind]
+    assert got == ref
+
+
+@given(st.lists(st.sampled_from(["", "g1", "g2", "g3"]), min_size=1,
+                max_size=24))
+@settings(max_examples=100, deadline=None)
+def test_fuzz_buckets_never_span_groups(groups):
+    plans = [LeafPlan(i, (4, 4), True, (1, 4, 4), group=g)
+             for i, g in enumerate(groups)]
+    for bk in build_buckets(plans):
+        assert len({p.group for p in bk.plans}) == 1

@@ -1,0 +1,276 @@
+"""Multi-axis group sharding: policy properties + real-mesh parity.
+
+Covers the PR-4 tentpole:
+
+* :func:`repro.core.plan.stack_axes` / ``bucket_partition_wants`` over
+  ``(pod, data, model)`` axis combos — divisibility, axis-never-reused,
+  replicated fallback, single-axis (no-pod) bitwise identity with the PR 3
+  policy, ``state_sharding`` override routing (deterministic parametrized
+  versions always run; hypothesis fuzz versions run when hypothesis is
+  installed);
+* ``build_buckets`` never spans partition groups;
+* per-group ``state_sharding`` lowering through
+  ``rules.opt_state_shardings``;
+* sharded-vs-replicated parity for a mixed per-group-override spec on the
+  8-device emulated mesh (subprocess via the session harness; the
+  stack-only override group agrees to float32 resolution — it also locks
+  down the XLA concatenate-partitioning miscompile the update-boundary
+  pins guard against);
+* the 4-way-fsdp per-device memory number against the PR 2 baseline
+  (25.4% of replicated).
+"""
+
+import itertools
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.core.plan import (
+    DEFAULT_STACK_AXES,
+    LeafPlan,
+    bucket_partition_wants,
+    build_buckets,
+    stack_axes,
+)
+from repro.distributed import rules
+from repro.launch import specs as S
+from repro.optim.spec import OptimizerSpec, Partition, build_optimizer
+
+KINDS = ("matrix", "rows", "cols", "sign", "dense")
+
+
+def _shape_for(kind: str, leading: int) -> tuple[int, ...]:
+    return {
+        "matrix": (leading, 64, 128),
+        "rows": (leading, 64),
+        "cols": (leading, 128),
+        "sign": (leading * 64, 16),
+        "dense": (leading, 4096),
+    }[kind]
+
+
+def _flat_axes(wants) -> list[str]:
+    out = []
+    for w in wants:
+        if w is None:
+            continue
+        out.extend(w if isinstance(w, tuple) else (w,))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# deterministic policy properties (always run)
+# ---------------------------------------------------------------------------
+
+SIZE_GRID = list(itertools.product((1, 2), (1, 2, 4, 16), (1, 2, 16)))
+
+
+@pytest.mark.parametrize("pod,data,model", SIZE_GRID)
+@pytest.mark.parametrize("leading", [1, 2, 3, 4, 6, 16, 32, 48])
+def test_stack_axes_divisibility_and_maximality(pod, data, model, leading):
+    """The chosen subset exists, divides the stack, and no larger ordered
+    subset of the preference chain would also divide it."""
+    sizes = {"pod": pod, "data": data, "model": model}
+    st_ = stack_axes(leading, sizes)
+    ways = lambda combo: 1 if not combo else \
+        __import__("math").prod(sizes[a] for a in combo)
+    if st_ is not None:
+        assert all(sizes[a] > 1 for a in st_)
+        assert leading % ways(st_) == 0
+    # maximality: every ordered subset of (pod, data) that divides is no
+    # bigger than the chosen one
+    best = 0
+    for mask in range(1, 4):
+        combo = tuple(a for i, a in enumerate(DEFAULT_STACK_AXES) if mask >> i & 1)
+        if all(sizes[a] > 1 for a in combo) and leading % ways(combo) == 0:
+            best = max(best, ways(combo))
+    assert ways(st_) == (best or 1)
+
+
+@pytest.mark.parametrize("pod,data,model", SIZE_GRID)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("leading", [1, 2, 3, 4, 16, 32])
+def test_wants_never_reuse_an_axis_and_fit(pod, data, model, kind, leading):
+    """No mesh axis appears twice in a want tuple, and fit_spec accepts the
+    wants on the corresponding AbstractMesh (every kept axis divides)."""
+    sizes = {"pod": pod, "data": data, "model": model}
+    shape = _shape_for(kind, leading)
+    wants = bucket_partition_wants(kind, shape, sizes)
+    flat = _flat_axes(wants)
+    assert len(flat) == len(set(flat)), (kind, shape, wants)
+    mesh = AbstractMesh(tuple((a, s) for a, s in sizes.items() if s > 1))
+    spec = rules.fit_spec(mesh, shape, wants)
+    for dim, want in zip(shape, tuple(spec) + (None,) * 4):
+        if want is not None:
+            assert dim % rules._axsize(mesh, want) == 0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("leading", [1, 2, 3, 4, 16, 32])
+@pytest.mark.parametrize("data,model", [(1, 1), (2, 2), (16, 16), (4, 1)])
+def test_single_axis_mesh_identical_to_pr3_policy(kind, leading, data, model):
+    """On meshes without a pod axis the multi-axis policy is bitwise
+    identical to the PR 3 single-axis rules (the acceptance criterion)."""
+    sizes = {"data": data, "model": model}
+    shape = _shape_for(kind, leading)
+    got = bucket_partition_wants(kind, shape, sizes)
+    # PR 3 reference policy
+    stacked = data > 1 and shape[0] % data == 0
+    ref = {
+        "sign": ("data", "model"),
+        "dense": (None, "data"),
+        "matrix": ("data", None, "model") if stacked else (None, "data", "model"),
+        "rows": ("data", None) if stacked else (None, "data"),
+        "cols": ("data", "model") if stacked else (None, "model"),
+    }[kind]
+    assert got == ref, (kind, shape, sizes, got, ref)
+
+
+@pytest.mark.parametrize("pod,data", [(1, 4), (2, 2), (2, 8)])
+def test_pod_data_split_when_divisible(pod, data):
+    """A stack divisible by pod*data carries both axes (in mesh order)."""
+    sizes = {"pod": pod, "data": data, "model": 2}
+    leading = pod * data * 3
+    wants = bucket_partition_wants("matrix", (leading, 64, 128), sizes)
+    expect = ("pod", "data") if pod > 1 else "data"
+    assert wants[0] == expect
+
+
+def test_state_sharding_override_routes_stack_and_drops_minor_model():
+    """stack_over=("model",) puts the stack on model and frees the minor
+    dims of cols/sign from model (axis never reused); indivisible override
+    falls back to the replicated-stack rules."""
+    sizes = {"pod": 2, "data": 4, "model": 8}
+    over = ("model",)
+    assert bucket_partition_wants("matrix", (16, 64, 128), sizes, stack_over=over) \
+        == ("model", None, None)
+    assert bucket_partition_wants("cols", (16, 128), sizes, stack_over=over) \
+        == ("model", None)
+    assert bucket_partition_wants("rows", (16, 64), sizes, stack_over=over) \
+        == ("model", None)
+    assert bucket_partition_wants("sign", (16 * 64, 16), sizes, stack_over=over) \
+        == ("model", None)
+    # indivisible by the override -> replicated-stack fallback, model free
+    assert bucket_partition_wants("matrix", (3, 64, 128), sizes, stack_over=over) \
+        == (None, "data", "model")
+    assert bucket_partition_wants("cols", (3, 128), sizes, stack_over=over) \
+        == (None, "model")
+
+
+def test_buckets_never_span_groups():
+    """Same-geometry leaves in different groups land in different buckets
+    (deterministic mirror of the hypothesis fuzz below)."""
+    groups = ["", "a", "b", "", "a", "b", "", ""]
+    plans = [LeafPlan(i, (8, 8), True, (1, 8, 8), group=g)
+             for i, g in enumerate(groups)]
+    buckets = build_buckets(plans)
+    for bk in buckets:
+        assert len({p.group for p in bk.plans}) == 1
+    assert len(buckets) == 3  # one per group
+
+
+# (hypothesis fuzz versions of these properties live in
+# tests/test_multiaxis_properties.py — a module-level importorskip would
+# skip this whole file on hosts without hypothesis)
+
+
+# ---------------------------------------------------------------------------
+# lowering + real-mesh parity + memory regression
+# ---------------------------------------------------------------------------
+
+def test_opt_state_shardings_lower_state_sharding_override():
+    """A partition's state_sharding override reaches the state placement:
+    the override group's stacks ride "model", the default group's ride the
+    (pod, data) chain — shape-only, AbstractMesh."""
+    mesh = AbstractMesh((("pod", 2), ("data", 2), ("model", 2)))
+    spec = OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3},
+        partitions=(Partition(name="experts", match=r"^ex_",
+                              state_sharding=("model",)),),
+    )
+    opt = build_optimizer(spec)
+    params = {f"w{i}": jax.ShapeDtypeStruct((32, 64), jax.numpy.float32)
+              for i in range(4)}
+    params.update({f"ex_{i}": jax.ShapeDtypeStruct((16, 32), jax.numpy.float32)
+                   for i in range(4)})
+    sh = rules.opt_state_shardings(mesh, None, params, opt)
+    # default bucket (stack 4): (pod, data) on the stack axis
+    fac = sh.factors["fac:1x64x32"]
+    assert tuple(fac[0].spec) == (("pod", "data"), None)        # r_m
+    assert tuple(fac[1].spec) == (("pod", "data"), "model")     # c_m
+    # override bucket (stack 4): model on the stack, minor dims free it
+    ex = sh.factors["experts/fac:1x32x16"]
+    assert tuple(ex[0].spec) == ("model", None)                 # r_m
+    assert tuple(ex[1].spec) == ("model", None)                 # c_m
+    assert tuple(ex[2].spec) == ("model", None)                 # sign
+
+
+def test_state_sharding_roundtrip_and_hash_excluded():
+    """state_sharding serializes through JSON and never moves the spec hash
+    (placement-only: a re-sharded restore must not be refused)."""
+    spec = OptimizerSpec(
+        family="smmf",
+        partitions=(Partition(name="experts", match="ex", family="smmf",
+                              state_sharding=("model", "data")),),
+    )
+    back = OptimizerSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.partitions[0].state_sharding == ("model", "data")
+    bare = OptimizerSpec(
+        family="smmf",
+        partitions=(Partition(name="experts", match="ex", family="smmf"),))
+    assert spec.spec_hash() == bare.spec_hash()
+    with pytest.raises(ValueError):
+        Partition(name="bad", match="x", state_sharding=("model", "model"))
+    with pytest.raises(ValueError):
+        Partition(name="bad", match="x", state_sharding="model")
+
+
+def test_parse_rule_state_sharding():
+    from repro.optim.spec import parse_rule
+
+    part = parse_rule("moe/=smmf,state_sharding=('model',)")
+    assert part.state_sharding == ("model",)
+    part = parse_rule("moe/=smmf,state_sharding=model")
+    assert part.state_sharding == ("model",)
+    assert "state_sharding" not in part.hyperparams
+
+
+@pytest.mark.multidevice
+def test_multiaxis_sharded_vs_replicated_parity(emulated_mesh):
+    """Mixed per-group-override spec on the real 8-device emulated mesh:
+    placements distribute as planned and the sharded update trajectory
+    matches the replicated one. Also the lock on the XLA
+    concatenate-partitioning miscompile: without the engine's
+    update-boundary pins the override group's moments come out scaled by
+    the replication factor."""
+    out = emulated_mesh.run("_multiaxis_child.py")
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "MULTIAXIS PARITY OK" in out.stdout
+
+
+def test_4way_fsdp_memory_does_not_regress_pr2_baseline():
+    """smmf/transformer_base on a 4-way fsdp AbstractMesh: per-device state
+    must stay at the PR 2 measured baseline (25.4% of replicated)."""
+    from repro.configs import get_config
+    from repro.utils.tree import tree_bytes
+
+    cfg = get_config("transformer_base")
+    psds = S.params_specs(cfg)
+    opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3, "decay_rate": -0.8}))
+    state_sds = jax.eval_shape(opt.init, psds)
+
+    def per_dev(axes):
+        mesh = AbstractMesh(axes)
+        sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+        return rules.sharded_state_bytes(sh, state_sds)
+
+    base = per_dev((("data", 1),))
+    assert base == tree_bytes(state_sds)
+    frac4 = per_dev((("data", 4),)) / base
+    assert frac4 <= 0.254 + 1e-3, f"4-way regressed: {frac4:.1%} > 25.4%"
+    # the pod axis must help, not hurt: 2x4 <= 1x4
+    frac24 = per_dev((("pod", 2), ("data", 4))) / base
+    assert frac24 <= frac4

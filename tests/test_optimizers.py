@@ -11,6 +11,12 @@ from repro.optim import adafactor, adam, adamw, came, sgd, sm3
 from repro.optim.base import apply_updates, chain, clip_by_global_norm, warmup_cosine
 from repro.utils.tree import tree_bytes
 
+# These tests deliberately exercise the deprecated legacy-constructor
+# surface (shim parity / reference trajectories); tier-1 errors on shim
+# DeprecationWarnings everywhere else (pytest.ini).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:.*is deprecated. build via repro.optim.spec.OptimizerSpec.*:DeprecationWarning")
+
 OPTS = {
     "adam": lambda: adam(5e-2),
     "adamw": lambda: adamw(5e-2),

@@ -12,6 +12,12 @@ from repro.utils.tree import tree_bytes
 
 from reference_smmf import RefSMMF
 
+# These tests deliberately exercise the deprecated legacy-constructor
+# surface (shim parity / reference trajectories); tier-1 errors on shim
+# DeprecationWarnings everywhere else (pytest.ini).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:.*is deprecated. build via repro.optim.spec.OptimizerSpec.*:DeprecationWarning")
+
 SHAPES = {
     "linear": (48, 96),
     "bias": (96,),

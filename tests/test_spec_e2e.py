@@ -3,13 +3,18 @@
 * the acceptance-criterion mixed spec (SMMF on >=2-D leaves, Adam on
   norms/biases, a frozen group) training through ``repro.launch.train``
   with buffer donation asserted;
-* the known XLA SPMD partitioner CHECK crash on
-  ``dryrun --arch transformer_base --shape train_4k`` (xfail-gated: starts
-  xpassing when an XLA bump fixes it) and its ``--no-scatter-constraints``
-  escape hatch.
+* the ``transformer_base/train_4k`` dry-run cell as a **hard regression
+  test**: the XLA SPMD partitioner CHECK crash on the engine's scatter
+  reshapes is fixed at the root (param-spec-aware scatter constraints +
+  the "opt_update_row" boundary rule, PR 4), so the cell must compile
+  WITHOUT ``--no-scatter-constraints``;
+* the ``--no-scatter-constraints`` A/B hatch still compiles (it now drops
+  the fix along with the other optimizer constraints);
+* a compile-smoke matrix over every arch × train_4k behind the ``slow``
+  marker (``--runslow``; the scheduled CI job runs it).
 
 Subprocesses are required: the dry-run forces 512 host devices at first
-jax import, and the XLA CHECK failure aborts the whole process.
+jax import.
 """
 
 import os
@@ -53,26 +58,48 @@ def test_mixed_spec_trains_e2e_with_donation(tmp_path):
     assert manifests and json.loads(manifests[0].read_text()).get("spec_hash")
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known XLA SPMD partitioner CHECK crash (spmd_partitioner_util.cc "
-           "device_groups mismatch) while partitioning the engine's scatter "
-           "reshapes for stacked-scan leaves; tracked in ROADMAP.md, needs an "
-           "XLA bump or param-spec-aware scatter constraints",
-)
 def test_transformer_base_train4k_dryrun_compiles():
-    """Regression guard for the known crash: flips to XPASS once fixed."""
+    """HARD regression test (was xfail until PR 4): the engine's
+    param-spec-aware scatter constraints and the "opt_update_row" boundary
+    rule fixed the XLA SPMD partitioner CHECK crash
+    (spmd_partitioner_util.cc device_groups mismatch) at the root — this
+    cell must compile with constraints ON, no escape hatch."""
     out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
-                "--shape", "train_4k"], timeout=900)
+                "--shape", "train_4k", "--variant", "regression"], timeout=900)
     assert out.returncode == 0, (
-        f"dryrun crashed (rc={out.returncode}):\n{out.stdout[-2000:]}\n"
-        f"{out.stderr[-2000:]}")
+        f"dryrun crashed (rc={out.returncode}) — the scatter-constraint fix "
+        f"regressed:\n{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
+    assert "ALL CELLS OK" in out.stdout
 
 
 def test_no_scatter_constraints_escape_hatch():
-    """--no-scatter-constraints makes the crashing cell compile today."""
+    """--no-scatter-constraints (now a pure A/B hatch: it drops the scatter
+    fix together with the other optimizer constraints) still compiles."""
     out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
                 "--shape", "train_4k", "--no-scatter-constraints",
                 "--variant", "noconstraint_test"], timeout=900)
     assert out.returncode == 0, f"escape hatch failed:\n{out.stdout}\n{out.stderr}"
+    assert "ALL CELLS OK" in out.stdout
+
+
+def _arch_ids():
+    sys.path.insert(0, str(SRC))
+    try:
+        from repro.configs import ARCH_IDS
+
+        return list(ARCH_IDS)
+    finally:
+        sys.path.pop(0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", _arch_ids())
+def test_dryrun_compile_smoke_matrix(arch):
+    """Every arch × train_4k lowers + compiles on the production mesh with
+    the full constraint set (slow: one multi-minute compile per arch)."""
+    out = _run(["-m", "repro.launch.dryrun", "--arch", arch,
+                "--shape", "train_4k", "--variant", "matrix"], timeout=1800)
+    assert out.returncode == 0, (
+        f"{arch}/train_4k dryrun failed:\n{out.stdout[-2000:]}\n"
+        f"{out.stderr[-2000:]}")
     assert "ALL CELLS OK" in out.stdout
