@@ -4,6 +4,11 @@ Trains (a) the rank-4 CNN on synthetic prototype images and (b) a small
 Transformer LM on the structured synthetic stream, with all five
 optimizers, and reports the final losses. The paper's claim: SMMF is
 competitive with Adam/Adafactor/SM3/CAME at a fraction of the memory.
+
+The LM table additionally runs quantized-state SMMF (``quant=int8``/
+``fp8``, the qstate codec) and ASSERTS final-loss parity with f32 SMMF
+within 5% — the convergence half of the quantized-state acceptance
+(the memory half lives in ``benchmarks/memory_table.py``).
 """
 
 from __future__ import annotations
@@ -21,9 +26,9 @@ from repro.optim.base import apply_updates
 from repro.utils.tree import tree_bytes
 
 
-def _opts(lr, family):
+def _opts(lr, family, quant=False):
     gamma = -0.5 if family == "cnn" else -0.8
-    return {
+    out = {
         "adam": build_optimizer(OptimizerSpec(family="adam", hyperparams={"lr": lr})),
         "adafactor": build_optimizer(OptimizerSpec(family="adafactor", hyperparams={"lr": lr})),
         "sm3": build_optimizer(OptimizerSpec(family="sm3", hyperparams={"lr": lr})),
@@ -31,6 +36,12 @@ def _opts(lr, family):
         "smmf": build_optimizer(OptimizerSpec(family="smmf",
                                               hyperparams={"lr": lr, "decay_rate": gamma})),
     }
+    if quant:
+        for mode in ("int8", "fp8"):
+            out[f"smmf({mode})"] = build_optimizer(OptimizerSpec(
+                family="smmf",
+                hyperparams={"lr": lr, "decay_rate": gamma, "quant": mode}))
+    return out
 
 
 def bench_cnn(steps=60, lr=3e-3) -> dict:
@@ -63,7 +74,7 @@ def bench_lm(steps=60, lr=1e-3) -> dict:
     cfg = ModelConfig("bench-lm", "dense", 2, 64, 4, 128, 512, n_kv_heads=2, dtype="float32")
     stream = SyntheticLMStream(cfg, 8, 64, seed=0)
     out = {}
-    for name, opt in _opts(lr, "transformer").items():
+    for name, opt in _opts(lr, "transformer", quant=True).items():
         params = init_lm(jax.random.PRNGKey(0), cfg)
         state = opt.init(params)
         step = jax.jit(make_train_step(cfg, opt))
@@ -85,11 +96,18 @@ def main() -> None:
     base = res["adam"]["final_loss"]
     for k, v in res.items():
         print(f"{k:10s} loss {v['final_loss']:7.4f} (adam {base:.4f})  opt-state {v['opt_bytes']/1024:8.1f}KiB")
-    print("\n== Transformer LM (gamma=-0.8) ==")
+    print("\n== Transformer LM (gamma=-0.8, + quantized-state parity) ==")
     res = bench_lm()
     base = res["adam"]["final_loss"]
     for k, v in res.items():
         print(f"{k:10s} loss {v['final_loss']:7.4f} (adam {base:.4f})  opt-state {v['opt_bytes']/1024:8.1f}KiB")
+    f32 = res["smmf"]["final_loss"]
+    for mode in ("int8", "fp8"):
+        q = res[f"smmf({mode})"]["final_loss"]
+        assert abs(q - f32) <= 0.05 * abs(f32), (
+            f"quantized-vs-f32 parity broken: smmf({mode}) {q:.4f} vs "
+            f"smmf {f32:.4f}")
+    print("quantized parity OK: smmf(int8/fp8) final losses within 5% of f32 smmf")
 
 
 if __name__ == "__main__":

@@ -6,12 +6,26 @@ optimizer state bytes for Adam / Adafactor / SM3 / CAME / SMMF and the
 reduction ratios the paper claims (up to ~96% vs the memory-efficient
 family, tens-of-x vs Adam).
 
+A third section prices the **qstate codec** (``repro.optim.qstate``,
+``docs/memory.md``): total AND per-device (4-way fsdp) state bytes for
+f32 vs int8 vs fp8 SMMF on transformer_base, momentum and momentum-free.
+Acceptance (asserted every run): ``smmf(beta1=None), quant=int8`` holds
+<= 30% of its f32 twin per device, scales included. (The momentum variant
+is honestly reported too — its packed sign matrix is already 1
+bit/element and dominates, so quantization only trims the factor
+vectors.)
+
 Full-size configs are measured ANALYTICALLY via jax.eval_shape over
 abstract params (no allocation), exactly matching what the optimizer would
-hold in memory.
+hold in memory. ``main(json_path=...)`` additionally emits the whole table
+as a machine-readable record (``benchmarks/run.py`` writes
+``BENCH_opt_memory.json`` for the CI perf-trajectory artifact).
 """
 
 from __future__ import annotations
+
+import json
+from pathlib import Path
 
 import jax
 
@@ -25,6 +39,9 @@ from repro.optim import (
     state_bytes_by_group,
 )
 from repro.utils.tree import tree_bytes
+
+# acceptance bound for the quantized momentum-free row (scales included)
+QUANT_ACCEPT_FRACTION = 0.30
 
 OPTS = {
     name: (lambda n=name: build_optimizer(OptimizerSpec(family=n,
@@ -85,11 +102,42 @@ def group_rows():
     return out
 
 
-def main() -> None:
+def quant_rows(arch: str = "transformer_base"):
+    """The qstate pricing grid for one arch: (variant, quant) -> total and
+    per-device (4-way fsdp) state bytes. Spec math only (AbstractMesh)."""
+    from jax.sharding import AbstractMesh
+
+    from repro.distributed import rules
+
+    cfg = get_config(arch)
+    psds = S.params_specs(cfg)
+    mesh = AbstractMesh((("data", 4),))
+    out = []
+    for label, beta1 in (("smmf", 0.9), ("smmf(beta1=None)", None)):
+        for quant in (None, "int8", "fp8"):
+            hp = {"lr": 1e-3, "decay_rate": -0.8, "beta1": beta1}
+            if quant:
+                hp["quant"] = quant
+            opt = build_optimizer(OptimizerSpec(family="smmf", hyperparams=hp))
+            state_shape = jax.eval_shape(opt.init, psds)
+            sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+            out.append({
+                "variant": label, "quant": quant or "f32",
+                "total": tree_bytes(state_shape),
+                "per_device": rules.sharded_state_bytes(sh, state_shape),
+            })
+    return out
+
+
+def main(json_path: str | Path | None = None) -> dict:
+    """Print all three memory tables, assert the qstate acceptance bound,
+    and return (optionally write) the machine-readable record."""
+    rec: dict = {"archs": {}, "groups": {}, "qstate": []}
     print(f"{'model':22s} {'params':>10s} | " + " ".join(f"{n:>12s}" for n in OPTS)
           + " |  smmf/adam  smmf/best-eff")
     for name, pbytes, sizes in rows():
         best_eff = min(sizes["adafactor"], sizes["sm3"], sizes["came"])
+        rec["archs"][name] = {"param_bytes": pbytes, **sizes}
         print(
             f"{name:22s} {pbytes/2**20:9.1f}M | "
             + " ".join(f"{sizes[n]/2**20:11.2f}M" for n in OPTS)
@@ -100,10 +148,39 @@ def main() -> None:
 
     print(f"\n{'spec (per-group state bytes)':28s}  groups")
     for name, by_group in group_rows():
+        rec["groups"][name] = dict(by_group)
         cells = "  ".join(f"{g}={b/2**20:.3f}M" for g, b in sorted(by_group.items()))
         print(f"{name:28s}  {cells}")
     print("\n(frozen groups hold exactly 0 bytes — the LoRA frozen-base win; "
           "per-group numbers are what rules.opt_state_shardings shards)")
+
+    print(f"\nquantized state (qstate codec), transformer_base, 4-way fsdp:")
+    print(f"{'variant':20s} {'quant':>5s} {'total MB':>9s} {'per-dev MB':>11s} "
+          f"{'vs f32':>7s}")
+    base = {}
+    frac_accept = None
+    for row in quant_rows():
+        rec["qstate"].append(row)
+        key = row["variant"]
+        if row["quant"] == "f32":
+            base[key] = row["per_device"]
+        frac = row["per_device"] / base[key]
+        if key == "smmf(beta1=None)" and row["quant"] == "int8":
+            frac_accept = frac
+        print(f"{key:20s} {row['quant']:>5s} {row['total']/2**20:9.3f} "
+              f"{row['per_device']/2**20:11.3f} {frac:6.1%}")
+    assert frac_accept is not None and frac_accept <= QUANT_ACCEPT_FRACTION, (
+        f"qstate acceptance: smmf(beta1=None),quant=int8 per-device bytes "
+        f"are {frac_accept:.1%} of f32 (bound {QUANT_ACCEPT_FRACTION:.0%})")
+    print(f"\nqstate acceptance OK: smmf(beta1=None),quant=int8 = "
+          f"{frac_accept:.1%} of f32 (<= {QUANT_ACCEPT_FRACTION:.0%}, scales "
+          f"included; the momentum variant is sign-bound — docs/memory.md)")
+
+    if json_path is not None:
+        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(json_path).write_text(json.dumps(rec, indent=1))
+        print(f"[memory_table] wrote {json_path}")
+    return rec
 
 
 if __name__ == "__main__":

@@ -1,12 +1,21 @@
 """Benchmark aggregator: one section per paper table/figure + the roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json-dir DIR]
+
+Emits the machine-readable perf trajectory alongside the printed tables:
+``BENCH_opt_memory.json`` (per-arch state bytes per family, per-group rows
+incl. frozen groups, and the qstate quantized grid) and
+``BENCH_step_time.json`` (per-optimizer ms/launches/boundary-transport
+bytes) under ``--json-dir`` (default ``results/bench/``). CI uploads both
+as workflow artifacts (the ``bench`` job in ``.github/workflows/ci.yml``),
+so every commit carries its measured trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 
 def _section(title: str):
@@ -16,22 +25,26 @@ def _section(title: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the slow convergence runs")
+    ap.add_argument("--json-dir", default=str(Path(__file__).resolve().parents[1]
+                                             / "results" / "bench"),
+                    help="directory for the BENCH_*.json trajectory records")
     args = ap.parse_args()
 
+    json_dir = Path(args.json_dir)
     t0 = time.time()
 
-    _section("Optimizer memory (paper Tables 1-4, memory columns)")
+    _section("Optimizer memory (paper Tables 1-4, memory columns + qstate grid)")
     from benchmarks import memory_table
 
-    memory_table.main()
+    memory_table.main(json_path=json_dir / "BENCH_opt_memory.json")
 
-    _section("Optimizer step time (paper Table 5)")
+    _section("Optimizer step time (paper Table 5 + boundary transport)")
     from benchmarks import step_time
 
-    step_time.main()
+    step_time.main(json_path=json_dir / "BENCH_step_time.json")
 
     if not args.fast:
-        _section("Convergence, 5 optimizers (paper Figures 1-2)")
+        _section("Convergence, 5 optimizers + quantized parity (paper Figures 1-2)")
         from benchmarks import convergence
 
         convergence.main()

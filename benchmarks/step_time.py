@@ -15,23 +15,42 @@ A second table runs SMMF on a dense-fallback-heavy (CNN-like) tree —
 fallback — showing the fused flat dense launch (``fuse_dense``, PR 2):
 all fallback leaves of a dtype dispatch as **one** concatenated launch
 instead of one per distinct element count, and ``stats()`` counts it as 1.
+
+The ``bnd@4dev`` column prices the ``"opt_update_row"`` replicated
+boundary on a hypothetical 4-way fsdp mesh
+(``rules.boundary_transport_bytes``): per step, the f32 bytes each
+non-stack-sharded bucket transports explicitly through the gather/scatter
+(and SMMF sign) pins — including the override-group demo row, whose
+``state_sharding=("model",)`` group always takes the replicated boundary.
+``main(json_path=...)`` emits the whole table as a machine-readable record
+(``benchmarks/run.py`` writes ``BENCH_step_time.json``).
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.rules import boundary_transport_bytes
 from repro.launch.steps import optimizer_launch_stats
 from repro.optim import OptimizerSpec, build_optimizer
 from repro.optim.base import apply_updates
 
-def _mk(family, **hp):
+# hypothetical mesh for the static boundary-transport column
+TRANSPORT_AXES = {"data": 4}
+
+
+def _mk(family, _rules=(), **hp):
     """Spec-built optimizer (benchmarks construct via the OptimizerSpec API)."""
-    return build_optimizer(OptimizerSpec(family=family, hyperparams=hp))
+    spec = OptimizerSpec(family=family, hyperparams=hp)
+    for r in _rules:
+        spec = spec.with_rule(r)
+    return build_optimizer(spec)
 
 
 OPTS = {
@@ -39,10 +58,21 @@ OPTS = {
     "adafactor": lambda: _mk("adafactor", lr=1e-3),
     "sm3": lambda: _mk("sm3", lr=1e-3),
     "came": lambda: _mk("came", lr=1e-3),
+    "came_conf": lambda: _mk("came_conf", lr=1e-3),
     "smmf": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8),
     "smmf(nobucket)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, bucket=False),
     "smmf(kernel)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, use_kernel=True),
     "smmf(kernel,b=4)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, use_kernel=True, blocks=4),
+    "smmf(int8)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, quant="int8"),
+    "smmf(int8,kernel)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8,
+                                     quant="int8", use_kernel=True),
+    "smmf(fp8)": lambda: _mk("smmf", lr=1e-3, decay_rate=-0.8, quant="fp8"),
+    # override-group demo (PR 4 follow-up): the attn leaves ride a "model"
+    # state_sharding override, so their buckets take the explicit
+    # replicated boundary — the transport column prices it
+    "smmf(override)": lambda: _mk(
+        "smmf", _rules=('attn=smmf,state_sharding=("model",)',),
+        lr=1e-3, decay_rate=-0.8),
 }
 
 
@@ -82,14 +112,16 @@ DENSE_OPTS = {
 }
 
 
-def bench(name: str, iters: int = 20, opts=None, params_fn=_params) -> tuple[float, int | None]:
-    """Compile + time ``iters`` optimizer-only steps; returns (ms, launches)."""
+def bench(name: str, iters: int = 20, opts=None, params_fn=_params):
+    """Compile + time ``iters`` optimizer-only steps; returns
+    (ms, launches, boundary-transport bytes on the TRANSPORT_AXES mesh)."""
     opt = (opts or OPTS)[name]()
     params = params_fn()
     state = opt.init(params)
     grads = jax.tree.map(lambda p: p * 0.01, params)
     stats = optimizer_launch_stats(opt, params)
     launches = stats["update_launches"] if stats else None
+    transport = boundary_transport_bytes(opt.plan(params), TRANSPORT_AXES)
 
     @jax.jit
     def step(params, state, grads):
@@ -102,36 +134,58 @@ def bench(name: str, iters: int = 20, opts=None, params_fn=_params) -> tuple[flo
     for _ in range(iters):
         params, state = step(params, state, grads)
     jax.block_until_ready(params)
-    return (time.perf_counter() - t0) / iters * 1e3, launches
+    return (time.perf_counter() - t0) / iters * 1e3, launches, transport
 
 
-def main() -> None:
-    """Print the step-time table and the dense-fallback fusion table."""
+def main(json_path: str | Path | None = None) -> dict:
+    """Print the step-time and dense-fallback tables (with the boundary
+    transport column) and return (optionally write) the machine-readable
+    record."""
+    rec: dict = {"transport_axes": TRANSPORT_AXES, "optimizers": {},
+                 "dense": {}}
     base = None
     launch = {}
-    print(f"{'optimizer':16s} {'ms/step':>9s} {'vs adam':>8s} {'launches':>9s}")
+    print(f"{'optimizer':18s} {'ms/step':>9s} {'vs adam':>8s} {'launches':>9s} "
+          f"{'bnd@4dev':>9s}")
     for name in OPTS:
-        ms, launches = bench(name)
+        ms, launches, transport = bench(name)
         launch[name] = launches
         if name == "adam":
             base = ms
+        rec["optimizers"][name] = {"ms": ms, "launches": launches,
+                                   "boundary_bytes": transport["total"],
+                                   "boundary_by_group": transport["by_group"]}
         ls = f"{launches:9d}" if launches is not None else f"{'-':>9s}"
         ratio = f"{ms/base:7.2f}x" if base else ""
-        print(f"{name:16s} {ms:9.2f} {ratio} {ls}")
+        print(f"{name:18s} {ms:9.2f} {ratio} {ls} "
+              f"{transport['total']/2**20:8.2f}M")
     if launch.get("smmf") and launch.get("smmf(nobucket)"):
         r = launch["smmf(nobucket)"] / launch["smmf"]
         print(f"\nbucketed engine: {launch['smmf']} launches/step vs "
               f"{launch['smmf(nobucket)']} per-leaf ({r:.1f}x fewer)")
+    ov = rec["optimizers"]["smmf(override)"]["boundary_by_group"]
+    print(f"override-group transport (state_sharding=('model',)): "
+          + ", ".join(f"{g}={b/2**20:.2f}M" for g, b in sorted(ov.items()))
+          + " per step through the replicated opt_update_row boundary")
 
     print(f"\ndense-fallback fusion (CNN-like tree, vector_reshape=False):")
     print(f"{'variant':22s} {'ms/step':>9s} {'launches':>9s}")
     for name in DENSE_OPTS:
-        ms, launches = bench(name, opts=DENSE_OPTS, params_fn=_cnn_params)
+        ms, launches, transport = bench(name, opts=DENSE_OPTS,
+                                        params_fn=_cnn_params)
+        rec["dense"][name] = {"ms": ms, "launches": launches,
+                              "boundary_bytes": transport["total"]}
         ls = f"{launches:9d}" if launches is not None else f"{'-':>9s}"
         print(f"{name:22s} {ms:9.2f} {ls}")
 
     print("\n(paper Table 5: SMMF ~1.2-1.6x Adam end-to-end; optimizer-only "
           "overhead is the bound. CPU timings; TPU uses the fused Pallas kernel.)")
+
+    if json_path is not None:
+        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(json_path).write_text(json.dumps(rec, indent=1))
+        print(f"[step_time] wrote {json_path}")
+    return rec
 
 
 if __name__ == "__main__":

@@ -1,0 +1,67 @@
+"""Registry composition demo: the ``came_conf`` variant family.
+
+``came_conf`` (``repro.optim.families``) is CAME with a second per-leaf RMS
+clip applied to the confidence-rescaled *output* — registered as a
+``dataclasses.replace`` of the base ``came`` entry, so planner, state
+layout, capability flags and qstate quant slots are all inherited and only
+the update math differs. This is the composition path third-party variants
+take: no engine code, no spec code, just a registry entry.
+
+The shipped spec below (picked up by ``tools/spec_lint.py``) pairs the
+variant with quantized state storage — confidence statistics are exactly
+the kind of state the qstate codec compresses (row/col vectors,
+sqrt-companded int8). Run:
+
+    PYTHONPATH=src python examples/came_variant.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import OptimizerSpec, build_optimizer
+from repro.optim.base import apply_updates
+from repro.utils.tree import tree_bytes
+
+SPEC = OptimizerSpec(
+    family="came_conf",
+    hyperparams={"lr": 1e-3, "quant": "int8"},
+)
+
+
+def main():
+    """Train a toy quadratic bowl with came vs came_conf (quantized) and
+    report the trajectories + state bytes."""
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+
+    def loss_fn(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    print(f"{'family':12s} {'final loss':>11s} {'state KiB':>10s}")
+    for name, spec in (
+        ("came", OptimizerSpec(family="came", hyperparams={"lr": 1e-3})),
+        ("came_conf", SPEC),
+    ):
+        opt = build_optimizer(spec)
+        params = {"w": jnp.zeros((64, 64), jnp.float32)}
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s):
+            l, g = jax.value_and_grad(loss_fn)(p)
+            u, s = opt.update(g, s, p)
+            return apply_updates(p, u), s, l
+
+        for _ in range(200):
+            params, state, l = step(params, state)
+        print(f"{name:12s} {float(l):11.5f} {tree_bytes(state)/1024:10.2f}")
+    print("\n(came_conf = dataclasses.replace(came, update_bucket=...) — see "
+          "repro/optim/families.py; its spec ships with quant='int8'. The "
+          "slower bowl descent is the variant working as intended: base "
+          "CAME's confidence rescale amplifies early steps far beyond lr, "
+          "came_conf clips that amplification to the per-leaf RMS bound.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,13 @@
 SMMF's payoff at this layer: the optimizer state is O(sqrt(N)) per tensor,
 so checkpoint size ~= params + signs (1/16 of an Adam checkpoint's state),
 and elastic re-sharding of optimizer state is effectively free.
+
+Quantized optimizer state (the qstate codec, ``repro.optim.qstate``) flows
+through the same path-keyed mechanism: int8 payloads and f32 scales are
+ordinary leaves, and fp8 payloads are **bit-preserved** — saved as uint8
+views (``np.savez`` cannot round-trip ml_dtypes float8) with the true
+dtype recorded in the manifest, and viewed back on restore. Elastic
+restore re-shards payload and scale leaves like any other state.
 """
 
 from __future__ import annotations
@@ -68,7 +75,12 @@ def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = No
         shutil.rmtree(tmp)
     tmp.mkdir()
     flat = _flatten(state)
-    np.savez(tmp / "arrays.npz", **flat)
+    # fp8 payloads (qstate): store the raw bytes as uint8 — np.savez drops
+    # ml_dtypes dtypes to void on reload; the manifest keeps the true dtype
+    # and restore() views the bits back
+    store = {k: (v.view(np.uint8) if str(v.dtype).startswith("float8") else v)
+             for k, v in flat.items()}
+    np.savez(tmp / "arrays.npz", **store)
     manifest = {
         "step": step,
         "time": time.time(),
@@ -134,6 +146,8 @@ def restore(ckpt_dir: str | Path, like: PyTree, step: int | None = None,
         arr = data[name]
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"shape mismatch for {name}: ckpt {arr.shape} vs model {ref.shape}")
+        if str(ref.dtype).startswith("float8") and arr.dtype == np.uint8:
+            arr = arr.view(np.dtype(ref.dtype))  # bit-exact fp8 payload
         arr = arr.astype(ref.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
     return treedef.unflatten(out), manifest

@@ -83,6 +83,8 @@ class LeafPlan:
     solo: bool = False              # per-leaf baseline for this leaf
     fuse: bool = False              # dense leaf eligible for flat fusion
     state_axes: tuple[str, ...] | None = None  # per-group stack-axis override
+    quant: str | None = None        # qstate storage mode (int8/fp8/None)
+    momentum: bool = True           # SMMF: first-moment factors + signs exist
 
     @property
     def numel(self) -> int:
@@ -146,6 +148,17 @@ class Bucket:
             off += p.numel
         return tuple(out)
 
+    def segment_ids(self):
+        """Static contained-leaf segment ids of the fused flat row (int32
+        numpy, one entry per element) — the single source for every
+        per-leaf reduction over a fused bucket (the Adafactor/CAME
+        segment-aware RMS clip and the qstate per-leaf quantization
+        scales must agree on it)."""
+        import numpy as np
+
+        return np.repeat(np.arange(self.size, dtype=np.int32),
+                         [p.numel for p in self.plans])
+
     @property
     def kernel_ok(self) -> bool:
         """True iff every leaf in the bucket planned onto the fused kernel."""
@@ -157,6 +170,12 @@ class Bucket:
         groups, so every plan agrees; None = the default (pod, data)
         preference chain of :func:`stack_axes`)."""
         return self.plans[0].state_axes
+
+    @property
+    def quant(self) -> str | None:
+        """The partition group's qstate storage mode (buckets never span
+        groups, so every plan agrees; None = full-precision f32 state)."""
+        return self.plans[0].quant
 
 
 def build_buckets(
@@ -316,6 +335,7 @@ def smmf_planner(
     blocks: int = 1,
     vector_reshape: bool = True,
     use_kernel: bool = False,
+    momentum: bool = True,
 ) -> Callable[[int, tuple[int, ...]], LeafPlan]:
     """Planner for square-matricized SMMF leaves.
 
@@ -323,6 +343,8 @@ def smmf_planner(
     unless ``vector_reshape`` (default True); scalars never factorize. The
     fused kernel is eligible for every factorized geometry (padding to the
     clamped tile, :func:`clamp_kernel_block`, handles lane alignment).
+    ``momentum=False`` marks the beta1=None variant (no momentum factors,
+    no sign matrix — state and boundary accounting differ).
     """
 
     def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
@@ -330,11 +352,12 @@ def smmf_planner(
         squeezed = [s for s in shape if s != 1]
         factorized = numel > 1 and not (len(squeezed) <= 1 and not vector_reshape)
         if not factorized:
-            return LeafPlan(index, shape, False, (numel,))
+            return LeafPlan(index, shape, False, (numel,), momentum=momentum)
         b, n, m = block_shape(numel, blocks)
         return LeafPlan(
             index, shape, True, (b, n, m), blocks=b,
             kernel_ok=use_kernel, constraint="smmf_matrix",
+            momentum=momentum,
         )
 
     return plan
@@ -384,19 +407,37 @@ def clamp_kernel_block(n: int, m: int, block: tuple[int, int]) -> tuple[int, int
     return bn, bm
 
 
-def smmf_plan_bytes(p: LeafPlan) -> int:
+def smmf_plan_bytes(p: LeafPlan, quant: str | None = None,
+                    momentum: bool = True) -> int:
     """Predicted persistent optimizer-state bytes for one SMMF leaf plan
     (the paper's 'optimizer memory'): factor vectors + packed signs, or the
     dense fallback's full M and V. Only meaningful for plans produced by
-    :func:`smmf_planner` (geometry (blocks, rows, cols))."""
+    :func:`smmf_planner` (geometry (blocks, rows, cols)).
+
+    ``quant`` prices the qstate storage codec (``repro.optim.qstate``):
+    factor vectors (and dense buffers) drop to 1 byte/element plus one f32
+    scale per stacked row; the packed sign matrix is already 1 bit/element
+    and does not shrink. ``momentum=False`` prices the beta1=None variant
+    (no momentum factors, no sign matrix) — the configuration where
+    quantization cuts the *whole* state ~4x.
+    """
+    elem = 1 if quant else 4
     if not p.factorized:
-        return 2 * 4 * p.numel
+        n_buf = 2 if momentum else 1
+        return n_buf * (elem * p.numel + (4 if quant else 0))
     b, n, m = p.geometry
-    # (r_m, r_v) 2*b*n + (c_m, c_v) 2*b*m f32 vectors + packed sign bits
-    return 4 * 2 * (b * n + b * m) + b * n * packed_width(m)
+    vecs = 2 if momentum else 1           # (r_m, c_m) and/or (r_v, c_v)
+    out = elem * vecs * (b * n + b * m)   # factor vector payloads
+    if quant:
+        out += 4 * 2 * vecs * b           # one f32 scale per stacked row
+    if momentum:
+        out += b * n * packed_width(m)    # packed sign bits (never shrink)
+    return out
 
 
-def smmf_state_bytes(plans: Sequence[LeafPlan]) -> int:
+def smmf_state_bytes(plans: Sequence[LeafPlan], quant: str | None = None,
+                     momentum: bool = True) -> int:
     """Predicted persistent SMMF optimizer-state bytes for a whole plan set
     (see :func:`smmf_plan_bytes`; SMMF planner geometries only)."""
-    return sum(smmf_plan_bytes(p) for p in plans)
+    return sum(smmf_plan_bytes(p, quant=quant, momentum=momentum)
+               for p in plans)

@@ -1,0 +1,119 @@
+"""Quantization numerics for stored optimizer state (the qstate subsystem).
+
+SMMF's value proposition is optimizer-state *memory*; this module supplies
+the number formats that compound the factorization win by another ~4x:
+persistent state tensors are stored in
+
+* ``"int8"`` — symmetric absmax int8: ``q = clip(round(x / s), -127, 127)``
+  with one f32 scale ``s = absmax / 127`` per **leading-stack row** (the
+  bucket engine's stacked leaf axis), or per contained-leaf *segment* for
+  fused flat dense rows; or
+* ``"fp8"`` — an e4m3 emulation: payloads live in ``jnp.float8_e4m3fn``
+  (1 byte, 4-bit exponent / 3-bit mantissa, max normal 448) with the same
+  per-row scale mapping the row's absmax onto the format's range.
+
+Both formats support **stochastic rounding** (pass a PRNG ``key``): int8
+rounds ``floor(y + u)``, ``u ~ U[0, 1)``, which is exactly unbiased; fp8
+adds uniform noise to the low ``23 - 3`` f32 mantissa bits and truncates,
+which is unbiased for values in e4m3's normal range (the sub-normal tail
+falls back to round-to-nearest granularity). Stochastic rounding is what
+lets the optimizer *re-quantize its own state every step* without the
+quantization bias accumulating — no error-feedback buffer needed, unlike
+the gradient-traffic compressor (``repro.distributed.compress``).
+
+Everything here is shape-polymorphic math over arrays; the bucket-aware
+codec that decides *which* state tensors quantize (and threads sharding
+constraints) is ``repro.optim.qstate``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QUANT_MODES = ("int8", "fp8")
+
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0          # largest e4m3fn normal
+_SCALE_FLOOR = 1e-30      # zero rows quantize to zero, never divide by 0
+_FP8_DROP_BITS = 20       # f32 mantissa (23) - e4m3 mantissa (3)
+
+
+def check_mode(mode: str) -> str:
+    """Validate a quantization mode string (``"int8"`` / ``"fp8"``)."""
+    if mode not in QUANT_MODES:
+        raise ValueError(f"unknown quantization mode {mode!r}; "
+                         f"supported: {QUANT_MODES}")
+    return mode
+
+
+def payload_dtype(mode: str):
+    """Storage dtype of a quantized payload (1 byte/element either way)."""
+    check_mode(mode)
+    return jnp.int8 if mode == "int8" else jnp.float8_e4m3fn
+
+
+def qmax(mode: str) -> float:
+    """Largest representable scaled magnitude of ``mode`` (127 / 448)."""
+    check_mode(mode)
+    return INT8_QMAX if mode == "int8" else FP8_QMAX
+
+
+def row_scale(x: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Per-leading-row absmax scale for ``x``: shape ``x.shape[:1] + (1,)*``
+    (keepdims), mapping each row's absmax onto the format's full range."""
+    axes = tuple(range(1, x.ndim))
+    s = jnp.max(jnp.abs(x), axis=axes, keepdims=True) / qmax(mode)
+    return jnp.maximum(s.astype(jnp.float32), _SCALE_FLOOR)
+
+
+def segment_scale(x: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
+                  mode: str) -> jnp.ndarray:
+    """Per-segment absmax scale ``(num_segments,)`` for a flat fused row
+    (``seg`` = static contained-leaf ids, sorted): each concatenated leaf
+    keeps its own quantization range instead of sharing one row absmax."""
+    absmax = jax.ops.segment_max(jnp.abs(x.reshape(-1)), seg,
+                                 num_segments=num_segments,
+                                 indices_are_sorted=True)
+    return jnp.maximum(absmax.astype(jnp.float32) / qmax(mode), _SCALE_FLOOR)
+
+
+def _sr_fp8(y: jnp.ndarray, key) -> jnp.ndarray:
+    # stochastic rounding by mantissa-noise + truncate: add U[0, 2^20) to
+    # the f32 bit pattern, clear the dropped bits, cast (the cast of an
+    # exactly-representable value is the identity). |y| <= 448 keeps the
+    # noisy pattern inside the same exponent bucket, so no overflow.
+    bits = jax.lax.bitcast_convert_type(y, jnp.uint32)
+    noise = jax.random.bits(key, y.shape, jnp.uint32) \
+        & jnp.uint32((1 << _FP8_DROP_BITS) - 1)
+    bits = (bits + noise) & jnp.uint32(0xFFFFFFFF ^ ((1 << _FP8_DROP_BITS) - 1))
+    return jax.lax.bitcast_convert_type(bits, jnp.float32).astype(jnp.float8_e4m3fn)
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, mode: str,
+             key=None) -> jnp.ndarray:
+    """Quantize f32 ``x`` against a broadcastable ``scale``.
+
+    ``key=None`` rounds to nearest (used at ``init`` where the state is
+    exact zeros); a PRNG key selects stochastic rounding (used at every
+    update's re-quantization so the per-step bias is zero in expectation).
+    Non-negative inputs stay non-negative under both roundings.
+    """
+    check_mode(mode)
+    y = x.astype(jnp.float32) / scale
+    if mode == "int8":
+        if key is None:
+            q = jnp.round(y)
+        else:
+            q = jnp.floor(y + jax.random.uniform(key, y.shape))
+        return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    y = jnp.clip(y, -FP8_QMAX, FP8_QMAX)
+    if key is None:
+        return y.astype(jnp.float8_e4m3fn)
+    return _sr_fp8(y, key)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize` up to rounding: ``q * scale`` in f32
+    (works for both payload dtypes — fp8 upcasts exactly)."""
+    return q.astype(jnp.float32) * scale

@@ -10,7 +10,11 @@ The optimizer state per weight tensor W (N elements, square-matricized to
   c_v (m_hat,) f32   col factor of V
 
 i.e. O(n_hat + m_hat) floats + N bits, vs Adam's 2N floats — the paper's
-up-to-96% optimizer-memory reduction.
+up-to-96% optimizer-memory reduction. The momentum-free variant
+(``beta1=None``) holds ONLY ``r_v``/``c_v`` (no momentum factors, no sign
+matrix), and the qstate codec (``quant="int8"|"fp8"`` hyperparam,
+``docs/memory.md``) stores the factor vectors as 1-byte payloads + per-row
+scales — another ~4x on the factor state.
 
 Each update step performs the paper's decompression -> compression scheme:
 

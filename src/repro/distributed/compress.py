@@ -11,6 +11,14 @@ Note the EF buffer costs a full-size f32 tensor per parameter — this is a
 *bandwidth* trick, intentionally opposite in the memory/traffic trade to
 SMMF itself; enable it on links-bound meshes only. (Recorded as such in
 DESIGN.md / EXPERIMENTS.md.)
+
+The **state-side counterpart** is the qstate codec
+(``repro.optim.qstate`` + ``repro.core.quant``, docs/memory.md): it
+quantizes the *stored* optimizer state (int8/fp8 payloads + per-row
+scales) and needs NO error-feedback buffer — the re-quantization uses
+stochastic rounding in-state, so its only overhead is the small scale
+arrays. Use this module when the mesh is links-bound, qstate when it is
+memory-bound; they compose.
 """
 
 from __future__ import annotations

@@ -194,6 +194,14 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     ``state_axes``), so this function and the in-update constraints stay
     agreed (both sides call ``bucket_partition_wants`` with the same
     ``stack_over``).
+
+    **Quantized state** (the qstate codec, ``repro.optim.qstate``):
+    quantized slots nest one level deeper — ``<bucket key>/<slot>/q`` +
+    ``/scale``. Payloads keep the exact shapes of their f32 twins and take
+    the same per-kind placement (the rules here are dtype-agnostic except
+    for the uint8 sign check, and int8 ≠ uint8); the per-row scale arrays
+    ride the bucket's stack placement (their leading axis IS the stack
+    axis), per-segment scales of fused rows replicate (tiny).
     """
     from repro.core.plan import DEFAULT_STACK_AXES, _stack_want, \
         bucket_partition_wants, stack_axes
@@ -208,12 +216,31 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
 
     def _one(path, leaf):
         shape = tuple(leaf.shape)
-        parts = path.split("/")
+        key_i, parts = _bucket_key_index(path)
+        bare = parts[key_i] if key_i is not None else None
         # per-group stack-axis override: bucket keys of override groups are
-        # always group-prefixed ("<group>/<bare key>"), i.e. parts[-3:-1]
+        # always group-prefixed ("<group>/<bare key>")
         over = None
-        if len(parts) >= 3:
-            over = axes_by_key.get(f"{parts[-3]}/{parts[-2]}")
+        if key_i is not None and key_i >= 1:
+            over = axes_by_key.get(f"{parts[key_i - 1]}/{bare}")
+        # qstate QTensor slots sit one level below the slot index: .../q
+        # and .../scale (namedtuple attr paths)
+        is_scale = parts[-1] == "scale" and key_i is not None \
+            and len(parts) == key_i + 3
+        slot = parts[key_i + 1] if key_i is not None and len(parts) > key_i + 1 \
+            else None
+        if is_scale:
+            if len(shape) == 2 and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", bare):
+                # per-stack-row scales of an SMMF factored bucket ride the
+                # stack placement (leading axis = the bucket's stack axis),
+                # matching the in-update "qscale" constraint. Other
+                # families' scales replicate — their payloads do too, and
+                # an unmatched at-rest sharding would just reshard tiny
+                # arrays every step.
+                want = bucket_partition_wants("rows", shape, axis_sizes,
+                                              stack_over=over)
+                return NamedSharding(mesh, fit_spec(mesh, shape, want))
+            return NamedSharding(mesh, P())  # per-segment / dense: tiny
         if len(shape) == 2 and leaf.dtype == np.uint8:  # packed sign matrix
             want = bucket_partition_wants("sign", shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
@@ -232,17 +259,17 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
             free = {a: s for a, s in axis_sizes.items() if a not in flat_base}
             stack = _stack_want(stack_axes(shape[0], free, over or DEFAULT_STACK_AXES))
             return NamedSharding(mesh, P(stack, *base))
-        if (len(shape) == 2 and len(parts) >= 2
-                and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", parts[-2])):
+        if (len(shape) == 2 and slot is not None
+                and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", bare)):
             # SMMF factored-bucket tuple (r_m, c_m, sign, r_v, c_v) — the key
             # "fac:BxNxM" identifies it (adafactor/CAME/SM3 buckets never put
             # 2-D leaves under a 3-int fac key). Tuple slots 1 and 4 are the
-            # column factors, 0 and 3 the row factors.
-            kind = "cols" if parts[-1] in ("1", "4") else "rows"
+            # column factors, 0 and 3 the row factors; quantized payloads
+            # (".../<slot>/q") take their slot's placement unchanged.
+            kind = "cols" if slot in ("1", "4") else "rows"
             want = bucket_partition_wants(kind, shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
-        if (len(shape) == 2 and len(parts) >= 2
-                and re.match(r"dense:", parts[-2])):
+        if len(shape) == 2 and bare is not None and bare.startswith("dense:"):
             # fused flat (1, total) rows or stacked (K, numel) dense moments:
             # elementwise math, shard the element axis over the stack chain
             want = bucket_partition_wants("dense", shape, axis_sizes, stack_over=over)
@@ -254,6 +281,23 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
     from repro.utils.tree import tree_map_with_path
 
     return tree_map_with_path(_one, state_shape)
+
+
+def _bucket_key_index(path: str) -> tuple[int | None, list[str]]:
+    """Locate the bucket-key segment of a state-leaf path.
+
+    Returns ``(index, parts)`` where ``parts`` is the '/'-split path with
+    namedtuple attr-entries normalized (leading '.' stripped) and ``index``
+    points at the last ``fac:...`` / ``dense:...`` segment (None when the
+    leaf is not bucket state — e.g. the step scalar). Group labels cannot
+    collide: partition names are validated to exclude ':'.
+    """
+    parts = [p.lstrip(".") for p in path.split("/")]
+    key_i = None
+    for i, p in enumerate(parts):
+        if re.match(r"(fac|dense):", p):
+            key_i = i
+    return key_i, parts
 
 
 def _state_axes_by_bucket_key(opt, params_shape) -> dict[str, tuple]:
@@ -307,8 +351,10 @@ def sharded_state_bytes_by_group(shardings: PyTree, state_shape: PyTree,
         out[lbl] = 0
     for (path, leaf), sh in zip(paths, flat):
         parts = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
-        parts = "/".join(parts).split("/")
-        group = parts[-3] if len(parts) >= 3 and parts[-3] in names else "default"
+        key_i, parts = _bucket_key_index("/".join(parts))
+        group = "default"
+        if key_i is not None and key_i >= 1 and parts[key_i - 1] in names:
+            group = parts[key_i - 1]
         shard = sh.shard_shape(tuple(leaf.shape))
         out[group] += int(np.prod(shard)) * np.dtype(leaf.dtype).itemsize
     return out
@@ -430,6 +476,18 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
                                            DEFAULT_STACK_AXES):
                 return None
             return NamedSharding(mesh, P())
+        if kind == "qscale" and ndim == 2:
+            # per-stack-row quantization scales (repro.optim.qstate): the
+            # leading axis IS the bucket's stack axis, so the scales ride
+            # the same (pod, data) chain — or the group's override (meta) —
+            # as their payloads; the trailing keepdims axis is size 1
+            from repro.core.plan import bucket_partition_wants
+            from repro.models.perf import flags as _pf
+
+            if _pf().smmf_no_constraint:
+                return None
+            return _ns(shape, bucket_partition_wants(
+                "rows", shape, mesh_axis_sizes(mesh), stack_over=meta))
         if kind in ("smmf_matrix", "smmf_rows", "smmf_cols", "smmf_sign",
                     "dense_flat"):
             # bucket-stacked optimizer state: specs derive from the same
@@ -459,6 +517,48 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
         return None
 
     return rule
+
+
+def boundary_transport_bytes(engine, axis_sizes: dict[str, int]) -> dict:
+    """Static per-step bytes the ``"opt_update_row"`` boundary rule
+    transports explicitly (the PR 4 replicated-pin fix).
+
+    A bucket whose stack axis is *not* sharded over the default
+    ``("pod", "data")`` chain — or that carries a per-group
+    ``state_sharding`` override — routes its transient gather/scatter rows
+    through an explicit replicated pin instead of leaving the SPMD
+    partitioner to invent a grouped sharding. This function prices that
+    choice: per such bucket, the f32 gather row plus the scatter row
+    (``2 × 4 × numel``), and for momentum-SMMF factored buckets
+    (``plan.momentum`` — beta1=None buckets have no sign matrix and never
+    take those boundaries) the two additional sign pack/unpack crossings
+    (another ``2 × 4 × numel``). Stack-sharded default-chain buckets
+    transport 0.
+
+    Returns ``{"total": bytes, "by_group": {label: bytes}}`` — the
+    ``transport`` column of ``benchmarks/step_time.py``. Pure plan math
+    over a ``LeafPlanEngine`` (no mesh or arrays needed): ``axis_sizes``
+    is the hypothetical mesh, e.g. ``{"data": 4}``.
+    """
+    from repro.core.plan import DEFAULT_STACK_AXES, stack_axes
+
+    total = 0
+    by_group: dict[str, int] = {}
+    for bk in engine.buckets:
+        over = bk.state_axes
+        if over is None and stack_axes(bk.stack, axis_sizes,
+                                       DEFAULT_STACK_AXES):
+            continue  # fully stack-sharded: zero-collective path
+        numel = sum(p.numel for p in bk.plans)
+        crossings = 2  # gather row in, scatter row out
+        if bk.factorized and bk.plans[0].constraint == "smmf_matrix" \
+                and bk.plans[0].momentum:
+            crossings += 2  # SMMF sign unpack + re-pack reshapes
+        b = crossings * 4 * numel
+        total += b
+        label = bk.plans[0].group or "default"
+        by_group[label] = by_group.get(label, 0) + b
+    return {"total": total, "by_group": by_group}
 
 
 # ---------------------------------------------------------------------------

@@ -57,32 +57,17 @@ def _pack_tile(nonneg: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(b * _bits3(), axis=-1, dtype=jnp.uint8)
 
 
-def _kernel(
-    scal_ref,      # (1, 3) f32: [beta1_t, beta2_t, eps]
-    g_ref,         # (1, bn, bm)
-    rm_ref,        # (1, bn, 1)
-    cm_ref,        # (1, 1, bm)
-    sign_ref,      # (1, bn, bm//8) uint8
-    rv_ref,        # (1, bn, 1)
-    cv_ref,        # (1, 1, bm)
-    u_ref,         # out (1, bn, bm)
-    sign_out_ref,  # out (1, bn, bm//8)
-    rmp_ref,       # out (1, bn, 1)   row partials of |M_t|
-    cmp_ref,       # out (1, 1, bm)   col partials of |M_t|
-    rvp_ref,       # out (1, bn, 1)
-    cvp_ref,       # out (1, 1, bm)
-):
+def _update_tile(scal_ref, g, signs, rm, cm, rv, cv,
+                 u_ref, sign_out_ref, rmp_ref, cmp_ref, rvp_ref, cvp_ref):
+    """Shared tile math for the f32 and quantized kernels: decompress ->
+    EMA -> update -> sign/compress partials, factors already in f32."""
     beta1 = scal_ref[0, 0]
     beta2 = scal_ref[0, 1]
     eps = scal_ref[0, 2]
 
-    g = g_ref[0]
-    bm = g.shape[1]
-    signs = _unpack_tile(sign_ref[0], bm)
-
     # Decompression (Algo 3): rank-1 outer products of the factor slices.
-    m_hat = signs * (rm_ref[0] * cm_ref[0])
-    v_hat = rv_ref[0] * cv_ref[0]
+    m_hat = signs * (rm * cm)
+    v_hat = rv * cv
 
     # EMA with the intact current gradient (decompression -> compression).
     m_t = beta1 * m_hat + (1.0 - beta1) * g
@@ -100,21 +85,77 @@ def _kernel(
     cvp_ref[0] = jnp.sum(v_t, axis=0, keepdims=True)
 
 
+def _kernel(
+    scal_ref,      # (1, 3) f32: [beta1_t, beta2_t, eps]
+    g_ref,         # (1, bn, bm)
+    rm_ref,        # (1, bn, 1)
+    cm_ref,        # (1, 1, bm)
+    sign_ref,      # (1, bn, bm//8) uint8
+    rv_ref,        # (1, bn, 1)
+    cv_ref,        # (1, 1, bm)
+    u_ref,         # out (1, bn, bm)
+    sign_out_ref,  # out (1, bn, bm//8)
+    rmp_ref,       # out (1, bn, 1)   row partials of |M_t|
+    cmp_ref,       # out (1, 1, bm)   col partials of |M_t|
+    rvp_ref,       # out (1, bn, 1)
+    cvp_ref,       # out (1, 1, bm)
+):
+    g = g_ref[0]
+    signs = _unpack_tile(sign_ref[0], g.shape[1])
+    _update_tile(scal_ref, g, signs, rm_ref[0], cm_ref[0], rv_ref[0],
+                 cv_ref[0], u_ref, sign_out_ref, rmp_ref, cmp_ref,
+                 rvp_ref, cvp_ref)
+
+
+def _kernel_q(
+    scal_ref,      # (1, 3) f32: [beta1_t, beta2_t, eps]
+    g_ref,         # (1, bn, bm)
+    rm_ref,        # (1, bn, 1) int8 qstate payload
+    cm_ref,        # (1, 1, bm) int8
+    sign_ref,      # (1, bn, bm//8) uint8
+    rv_ref,        # (1, bn, 1) int8
+    cv_ref,        # (1, 1, bm) int8
+    rms_ref,       # (1, 1, 1) f32 per-matrix absmax scales
+    cms_ref,       # (1, 1, 1)
+    rvs_ref,       # (1, 1, 1)
+    cvs_ref,       # (1, 1, 1)
+    u_ref, sign_out_ref, rmp_ref, cmp_ref, rvp_ref, cvp_ref,  # outs (as above)
+):
+    # qstate in-register dequant: int8 payload * per-matrix f32 scale
+    # (repro.optim.qstate kernel_deq slots) — the f32 factors exist only in
+    # VMEM/registers, never as HBM tensors. The v factors arrive
+    # sqrt-companded (SlotSpec.sqrt: denominator-side state needs
+    # quasi-relative precision under a linear 8-bit code), so the kernel
+    # squares them after the linear dequant.
+    g = g_ref[0]
+    signs = _unpack_tile(sign_ref[0], g.shape[1])
+    rm = rm_ref[0].astype(jnp.float32) * rms_ref[0]
+    cm = cm_ref[0].astype(jnp.float32) * cms_ref[0]
+    rv_s = rv_ref[0].astype(jnp.float32) * rvs_ref[0]
+    cv_s = cv_ref[0].astype(jnp.float32) * cvs_ref[0]
+    _update_tile(scal_ref, g, signs, rm, cm, rv_s * rv_s, cv_s * cv_s,
+                 u_ref, sign_out_ref, rmp_ref, cmp_ref, rvp_ref, cvp_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def smmf_update_tiles(
     g: jnp.ndarray,        # (B, n, m)
-    r_m: jnp.ndarray,      # (B, n)
+    r_m: jnp.ndarray,      # (B, n)   f32, or 1-byte qstate payload
     c_m: jnp.ndarray,      # (B, m)
     sign: jnp.ndarray,     # (B, n, m//8)
     r_v: jnp.ndarray,      # (B, n)
     c_v: jnp.ndarray,      # (B, m)
     scalars: jnp.ndarray,  # (1, 3) [beta1_t, beta2_t, eps]
+    factor_scales=None,    # None, or (rm_s, cm_s, rv_s, cv_s) each (B, 1) f32
     block: tuple[int, int] = DEFAULT_BLOCK,
     interpret: bool = True,
 ):
     """Run the fused kernel on pre-padded batched operands.
 
     Requires n % bn == 0, m % bm == 0, bm % 8 == 0 (ops.py pads).
+    ``factor_scales`` selects the quantized-state kernel: the four factor
+    operands are then 1-byte qstate payloads dequantized **in-register**
+    against their per-matrix scales (no f32 factor tensor in HBM).
     Returns (u, sign_new, rm_partial (B, n, nj), cm_partial (B, ni, m),
              rv_partial, cv_partial).
     """
@@ -149,11 +190,19 @@ def smmf_update_tiles(
         pl.BlockSpec((1, bn, 1), lambda b, i, j: (b, i, j)),      # rv partials
         pl.BlockSpec((1, 1, bm), lambda b, i, j: (b, i, j)),      # cv partials
     ]
+    operands = [scalars, g, r_m[:, :, None], c_m[:, None, :], sign,
+                r_v[:, :, None], c_v[:, None, :]]
+    kernel = _kernel
+    if factor_scales is not None:
+        kernel = _kernel_q
+        scale_spec = pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, 0, 0))
+        in_specs += [scale_spec] * 4
+        operands += [s.reshape(bsz, 1, 1) for s in factor_scales]
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
-    )(scalars, g, r_m[:, :, None], c_m[:, None, :], sign, r_v[:, :, None], c_v[:, None, :])
+    )(*operands)

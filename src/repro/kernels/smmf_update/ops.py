@@ -34,7 +34,7 @@ def _resolve_interpret(interpret: bool | None) -> bool:
 
 def smmf_update_batched(
     g: jnp.ndarray,      # (B, n, m)
-    r_m: jnp.ndarray,    # (B, n)
+    r_m: jnp.ndarray,    # (B, n)   f32, or 1-byte qstate payload
     c_m: jnp.ndarray,    # (B, m)
     sign: jnp.ndarray,   # (B, n, packed_width(m)) uint8
     r_v: jnp.ndarray,    # (B, n)
@@ -45,12 +45,21 @@ def smmf_update_batched(
     eps: float,
     block: tuple[int, int] | None = None,
     interpret: bool | None = None,
+    factor_scales=None,  # None, or (rm_s, cm_s, rv_s, cv_s) each (B, 1) f32
 ):
     """Fused SMMF update for a batch of square-matricized (n, m) gradients.
 
     Returns (u, r_m', c_m', sign', r_v', c_v') with unpadded shapes, leading
     batch axis preserved. Each batch element is factorized independently
     (per-matrix Algo-4 normalization), exactly as B separate calls would.
+
+    ``factor_scales`` selects the quantized-state path (the qstate codec's
+    ``kernel_deq`` slots, ``repro.optim.qstate``): the four factor operands
+    are 1-byte payloads the kernel dequantizes in-register against their
+    per-matrix scales; zero padding quantizes/dequantizes losslessly, so
+    the pad-and-crop plumbing is unchanged. Outputs are always f32 — the
+    re-quantization (with stochastic rounding) happens codec-side after the
+    Algo-4 normalization below.
     """
     global KERNEL_LAUNCHES
     bsz, n, m = g.shape
@@ -74,6 +83,7 @@ def smmf_update_batched(
     KERNEL_LAUNCHES += 1
     u, sign2, rm_part, cm_part, rv_part, cv_part = smmf_update_tiles(
         gp, rmp, cmp_, sgn, rvp, cvp, scalars,
+        factor_scales=factor_scales,
         block=(bn, bm), interpret=_resolve_interpret(interpret),
     )
 

@@ -93,10 +93,12 @@ def parse_collectives(hlo_text: str) -> dict:
 
 def cell_optimizer_spec(cfg, opt_name: str, *, use_kernel: bool = False,
                         blocks: int | None = None, bucket: bool = True,
+                        quant: str | None = None,
                         rules: list[str] | None = None) -> OptimizerSpec:
     """The dry-run cell's OptimizerSpec for one arch + ``--opt`` name
     (``smmf_local`` = smmf with blocks default 16 here), with any
-    ``--optim-rule`` partitions appended."""
+    ``--optim-rule`` partitions appended. ``quant`` stores the default
+    group's optimizer state through the qstate codec (int8/fp8)."""
     from repro.configs import recommended_decay_rate
 
     gamma = recommended_decay_rate(cfg.family)
@@ -107,6 +109,8 @@ def cell_optimizer_spec(cfg, opt_name: str, *, use_kernel: bool = False,
                   blocks=blocks or (16 if opt_name == "smmf_local" else 1),
                   use_kernel=use_kernel, bucket=bucket, fuse_dense=bucket)
         name = "smmf"
+    if quant:
+        hp["quant"] = quant
     spec = OptimizerSpec(family=name, hyperparams=hp)
     for rule in rules or []:
         spec = spec.with_rule(rule)
@@ -116,21 +120,24 @@ def cell_optimizer_spec(cfg, opt_name: str, *, use_kernel: bool = False,
 def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_name: str = "smmf",
              variant: str = "", flags_spec: str = "", verbose: bool = True,
              use_kernel: bool = False, blocks: int | None = None,
-             bucket: bool = True, optim_rules: list[str] | None = None) -> dict:
+             bucket: bool = True, quant: str | None = None,
+             optim_rules: list[str] | None = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     status = cell_status(cfg, shape)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
-    tag = f"{arch}.{shape_name}.{mesh_tag}.{opt_name}" + (f".{variant}" if variant else "")
+    opt_tag = opt_name + (f".{quant}" if quant else "")
+    tag = f"{arch}.{shape_name}.{mesh_tag}.{opt_tag}" + (f".{variant}" if variant else "")
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "opt": opt_name,
-           "variant": variant, "status": status}
+           "quant": quant, "variant": variant, "status": status}
     if status != "run":
         return rec
 
     opt = None
     if shape.kind == "train":
         spec = cell_optimizer_spec(cfg, opt_name, use_kernel=use_kernel,
-                                   blocks=blocks, bucket=bucket, rules=optim_rules)
+                                   blocks=blocks, bucket=bucket, quant=quant,
+                                   rules=optim_rules)
         rec["spec_hash"] = spec.spec_hash()
         opt = build_optimizer(spec)
 
@@ -214,6 +221,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--variant", default="", help="tag suffix for perf experiments")
     ap.add_argument("--flags", default="", help="PerfFlags, e.g. bf16_accum_attention,ssd_chunk_override=128")
     ap.add_argument("--use-kernel", action="store_true", help="fused Pallas SMMF update")
+    ap.add_argument("--quant", default=None, choices=["int8", "fp8"],
+                    help="quantized optimizer-state storage for the train "
+                         "cell (qstate codec; composes with --use-kernel "
+                         "via the in-kernel dequant path)")
     ap.add_argument("--blocks", type=int, default=0, help="SMMF blockwise factorization (0 = opt default)")
     ap.add_argument("--no-bucket", action="store_true", help="per-leaf baseline (no geometry bucketing)")
     ap.add_argument("--no-scatter-constraints", action="store_true",
@@ -249,7 +260,7 @@ def main() -> None:
                 try:
                     rec = run_cell(arch, shape, mp, args.opt, args.variant, flags_spec,
                                    use_kernel=args.use_kernel, blocks=args.blocks or None,
-                                   bucket=not args.no_bucket,
+                                   bucket=not args.no_bucket, quant=args.quant,
                                    optim_rules=args.optim_rule)
                     if rec["status"] != "run":
                         print(f"[{arch}.{shape}] {rec['status']}", flush=True)

@@ -45,7 +45,8 @@ from repro.models import init_encdec, init_lm
 from repro.optim.spec import OptimizerSpec, build_optimizer, state_bytes_by_group
 from repro.train import TrainLoop, TrainLoopConfig
 
-FAMILY_CHOICES = ("smmf", "smmf_local", "adam", "adafactor", "came", "sm3", "sgd")
+FAMILY_CHOICES = ("smmf", "smmf_local", "adam", "adafactor", "came",
+                  "came_conf", "sm3", "sgd")
 
 
 def spec_from_args(args, family: str) -> OptimizerSpec:
@@ -59,10 +60,10 @@ def spec_from_args(args, family: str) -> OptimizerSpec:
     ``--optim-rule`` partitions append to either base spec in order.
     """
     if args.optim:
-        if args.blocks or args.use_kernel or args.no_bucket:
+        if args.blocks or args.use_kernel or args.no_bucket or args.quant:
             raise SystemExit("--optim FILE cannot be combined with "
-                             "--blocks/--use-kernel/--no-bucket; put the "
-                             "knobs in the spec's hyperparams")
+                             "--blocks/--use-kernel/--no-bucket/--quant; put "
+                             "the knobs in the spec's hyperparams")
         spec = OptimizerSpec.from_json(Path(args.optim).read_text())
     else:
         from repro.configs import recommended_decay_rate
@@ -76,8 +77,10 @@ def spec_from_args(args, family: str) -> OptimizerSpec:
                       use_kernel=args.use_kernel, bucket=not args.no_bucket,
                       fuse_dense=not args.no_bucket)
             name = "smmf"
-        elif name in ("adafactor", "came", "sm3"):
+        elif name in ("adafactor", "came", "came_conf", "sm3"):
             hp.update(bucket=not args.no_bucket)
+        if args.quant:
+            hp["quant"] = args.quant  # sm3 rejects it at spec validation
         spec = OptimizerSpec(family=name, hyperparams=hp)
     for rule in args.optim_rule:
         spec = spec.with_rule(rule)
@@ -109,6 +112,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="SMMF blockwise factorization (0 = optimizer default)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route factored buckets through the fused Pallas kernel")
+    ap.add_argument("--quant", default=None, choices=("int8", "fp8"),
+                    help="store the default group's optimizer state "
+                         "quantized (qstate codec: 1-byte payloads + "
+                         "per-row scales, stochastic-rounding requant)")
     ap.add_argument("--no-bucket", action="store_true",
                     help="per-leaf baseline (disable geometry bucketing)")
     ap.add_argument("--grad-accum", type=int, default=1,
@@ -163,7 +170,8 @@ def main() -> None:
         print(f"[train] update engine: {stats['leaves']} leaves -> "
               f"{stats['update_launches']} launches/step "
               f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
-              f"{stats['kernel_buckets']} kernel, {stats['groups']} groups, "
+              f"{stats['kernel_buckets']} kernel, {stats['quantized_buckets']} "
+              f"quantized, {stats['groups']} groups, "
               f"{stats['frozen_leaves']} frozen)")
     if args.use_kernel:
         # static half of the no-silent-fallback assertion: every factored

@@ -49,7 +49,10 @@ class EngineState(NamedTuple):
     """State of a spec-built (engine-backed) optimizer: ONE shared step
     counter for every partition group + a flat dict of per-bucket state
     subtrees keyed ``[<group>/]fac:GEOM`` / ``[<group>/]dense:...`` (layout
-    and donation/sharding contracts in ``repro.optim.engine``)."""
+    and donation/sharding contracts in ``repro.optim.engine``). Groups
+    built with ``quant=`` store their quantized slots as
+    ``repro.optim.qstate.QTensor`` payload+scale pairs under the same
+    keys."""
 
     step: jnp.ndarray
     factors: dict

@@ -25,7 +25,10 @@ State layout convention: each optimizer stores ``dict[bucket.key ->
 tuple(arrays)]`` with the leading axis of every array indexing the bucket's
 leaves (length ``bucket.stack``; 1 for fused dense). Bucket keys are
 deterministic functions of the parameter shapes and engine config, so
-checkpoints are reproducible.
+checkpoints are reproducible. Groups built with ``quant="int8"|"fp8"``
+store quantized slots as ``repro.optim.qstate.QTensor`` pairs (1-byte
+payload + per-stack-row scales) under the SAME bucket keys — the codec
+sits between this engine and the family callbacks (``docs/memory.md``).
 
 Distribution invariants (see ``docs/sharding.md``):
 
@@ -194,6 +197,9 @@ class LeafPlanEngine:
             "kernel_buckets": sum(1 for b in fac if b.kernel_ok),
             "groups": len({p.group for p in self.plans}),
             "frozen_leaves": sum(1 for p in self.plans if p.freeze),
+            # qstate codec coverage (repro.optim.qstate): buckets whose
+            # persistent state stores as 1-byte payloads + scale rows
+            "quantized_buckets": sum(1 for b in self.buckets if b.quant),
         }
 
 

@@ -15,7 +15,14 @@ fallback may legally be concatenated into one flat row per (group, dtype) —
 true for the purely elementwise families (smmf's plain-Adam fallback, adam,
 sgd) and now also for adafactor/came whose per-leaf RMS update clip is
 computed **segment-aware** on fused rows (:func:`_per_leaf_rms`), so the
-clip still reduces over each original leaf.
+clip still reduces over each original leaf. ``quant_slots`` declares which
+state slots may store in int8/fp8 under the qstate codec
+(``repro.optim.qstate``): SMMF quantizes its ``r``/``c`` moment factors
+(the packed sign matrix is already 1 bit/element), Adafactor/CAME their
+row/col second-moment and confidence stats (the full-size momentum stays
+exact), and the dense-fallback flat buffers quantize whole; SM3's
+min-combined cover accumulators are excluded (``quant_slots=None`` — a
+spec asking for ``quant`` on sm3 is rejected at resolve time).
 
 Weight decay is handled generically by the spec engine (grad-coupled
 "adam" mode before the bucket math, decoupled "adamw" mode after), so the
@@ -34,7 +41,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.plan import (
     Bucket,
@@ -45,6 +51,7 @@ from repro.core.plan import (
 )
 from repro.core.signpack import pack_signs, packed_width, unpack_signs
 from repro.distributed.ctx import constrain
+from repro.optim.qstate import QTensor, SlotSpec
 
 PyTree = Any
 PlanFn = Callable[[int, tuple[int, ...]], LeafPlan]
@@ -93,6 +100,10 @@ class Family:
     fuse_dense_ok: bool = False          # dense fallback may be flat-fused
     wd_mode_key: str | None = None
     validate: Callable[[dict], None] | None = None
+    # (bucket, hp) -> one repro.optim.qstate.SlotSpec per state slot; None
+    # means the family's state cannot be quantized (hp key "quant" is then
+    # absent from `defaults`, so specs asking for it fail validation)
+    quant_slots: Callable[[Bucket, dict], tuple] | None = None
 
     def wd_mode(self, hp: dict) -> str:
         """Weight-decay style for resolved hyperparams: "adam" (grad-coupled,
@@ -148,8 +159,7 @@ def _per_leaf_rms(u: jnp.ndarray, bk: Bucket) -> jnp.ndarray:
     makes ``fuse_dense`` legal for families with a per-leaf reduction.
     """
     if bk.fused and bk.size > 1:
-        seg = np.repeat(np.arange(bk.size, dtype=np.int32),
-                        [p.numel for p in bk.plans])
+        seg = bk.segment_ids()
         flat = u.reshape(-1)
         sums = jax.ops.segment_sum(flat * flat, seg, num_segments=bk.size,
                                    indices_are_sorted=True)
@@ -227,22 +237,52 @@ def _smmf_plan_fn(hp: dict) -> PlanFn:
         # the fused kernel always computes the momentum EMA; the
         # momentum-free variant keeps the unfused path
         use_kernel=hp["use_kernel"] and hp["beta1"] is not None,
+        momentum=hp["beta1"] is not None,
     )
+
+
+def _smmf_quant_slots(bk: Bucket, hp: dict) -> tuple:
+    """SlotSpecs for SMMF state: quantize the ``r``/``c`` moment factors
+    (the packed sign matrix is already 1 bit/element). When the bucket runs
+    the fused kernel with int8 state, the factors are flagged
+    ``kernel_deq`` — the kernel dequantizes them in-register instead of
+    materializing f32 copies in HBM."""
+    momentum = hp["beta1"] is not None
+    if bk.factorized:
+        kd = bool(bk.kernel_ok) and hp.get("quant") == "int8" and momentum
+        # v factors are denominator-side -> sqrt-companded under int8 (the
+        # quantized kernel bakes the matching un-companding in)
+        rows_v = SlotSpec(True, "smmf_rows", kernel_deq=kd, sqrt=True)
+        cols_v = SlotSpec(True, "smmf_cols", kernel_deq=kd, sqrt=True)
+        if momentum:
+            return (SlotSpec(True, "smmf_rows", kernel_deq=kd),
+                    SlotSpec(True, "smmf_cols", kernel_deq=kd),
+                    SlotSpec(False), rows_v, cols_v)
+        return (rows_v, cols_v)
+    kind = "dense_flat" if bk.fused else None
+    v = SlotSpec(True, kind, sqrt=True)
+    return (SlotSpec(True, kind), v) if momentum else (v,)
 
 
 def _smmf_init(bk: Bucket, hp: dict):
     k = bk.size
+    momentum = hp["beta1"] is not None
     if bk.factorized:
         b, n, m = bk.geometry
+        second = (_zeros((k * b, n)), _zeros((k * b, m)))        # r_v, c_v
+        if not momentum:
+            # momentum-free SMMF (beta1=None) holds ONLY the second-moment
+            # factors — no momentum factors, no sign matrix (the sign bits
+            # are what dominate the momentum variant's state bytes)
+            return second
         return (
             _zeros((k * b, n)),                                  # r_m
             _zeros((k * b, m)),                                  # c_m
             _zeros((k * b * n, packed_width(m)), jnp.uint8),     # sign
-            _zeros((k * b, n)),                                  # r_v
-            _zeros((k * b, m)),                                  # c_v
-        )
+        ) + second
     (numel,) = bk.geometry  # total numel for fused buckets
-    return (_zeros((bk.stack, numel)), _zeros((bk.stack, numel)))  # m, v
+    v = (_zeros((bk.stack, numel)),)                             # v
+    return ((_zeros((bk.stack, numel)),) + v) if momentum else v  # [m,] v
 
 
 def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
@@ -256,16 +296,28 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
         b, n, m = bk.geometry
         kb = k * b
         gm = constrain(gm.reshape(kb, n, m), "smmf_matrix", meta=bk.state_axes)
-        r_m, c_m, sign, r_v, c_v = fac
+        if beta1 is not None:
+            r_m, c_m, sign, r_v, c_v = fac
+        else:  # momentum-free layout: second-moment factors only
+            r_v, c_v = fac
 
         if bk.kernel_ok and beta1 is not None:
             from repro.kernels.smmf_update import ops as _kops
 
+            # qstate kernel_deq path: the codec left the r/c factors as
+            # int8 QTensor pairs; hand payloads + scales to the kernel,
+            # which dequantizes in-register (no f32 factor copy in HBM)
+            factor_scales = None
+            if isinstance(r_m, QTensor):
+                (r_m, rms), (c_m, cms) = r_m, c_m
+                (r_v, rvs), (c_v, cvs) = r_v, c_v
+                factor_scales = (rms, cms, rvs, cvs)
             pw = packed_width(m)
             u, r_m2, c_m2, sign2, r_v2, c_v2 = _kops.smmf_update_batched(
                 gm, r_m, c_m, sign.reshape(kb, n, pw), r_v, c_v,
                 beta1_t=beta1_t, beta2_t=beta2_t, eps=eps,
                 block=hp["kernel_block"], interpret=hp["interpret"],
+                factor_scales=factor_scales,
             )
             sign2 = sign2.reshape(kb * n, pw)
         else:
@@ -297,8 +349,6 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
                                    "opt_update_row", meta=(kb, bk.state_axes))
                 sign2 = pack_signs(nonneg)
                 r_m2, c_m2 = _compress(jnp.abs(m_t))
-            else:
-                sign2, r_m2, c_m2 = sign, r_m, c_m
             r_v2, c_v2 = _compress(v_t)
             num = m_t if beta1 is not None else gm
             u = num / (jnp.sqrt(v_t) + eps)
@@ -306,24 +356,29 @@ def _smmf_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
         # keep the re-compressed stacked state placed where
         # opt_state_shardings puts it (stack axis over "data" when
         # divisible) so donation aliases buffers without resharding
-        r_m2 = constrain(r_m2, "smmf_rows", meta=bk.state_axes)
         r_v2 = constrain(r_v2, "smmf_rows", meta=bk.state_axes)
-        c_m2 = constrain(c_m2, "smmf_cols", meta=bk.state_axes)
         c_v2 = constrain(c_v2, "smmf_cols", meta=bk.state_axes)
+        u = u.reshape(k, b * n * m)
+        if beta1 is None:
+            return u, (r_v2, c_v2)
+        r_m2 = constrain(r_m2, "smmf_rows", meta=bk.state_axes)
+        c_m2 = constrain(c_m2, "smmf_cols", meta=bk.state_axes)
         sign2 = constrain(sign2, "smmf_sign", meta=bk.state_axes)
-        return u.reshape(k, b * n * m), (r_m2, c_m2, sign2, r_v2, c_v2)
+        return u, (r_m2, c_m2, sign2, r_v2, c_v2)
 
-    m_, v_ = fac  # dense fallback: plain Adam on the paper's beta schedules
+    # dense fallback: plain Adam on the paper's beta schedules
     if beta1 is not None:
+        m_, v_ = fac
         m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
     else:
-        m2 = m_
+        (v_,) = fac
     v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
     num = m2 if beta1 is not None else gm
     u = num / (jnp.sqrt(v2) + eps)
-    if bk.fused:
-        m2 = constrain(m2, "dense_flat", meta=bk.state_axes)
-        v2 = constrain(v2, "dense_flat", meta=bk.state_axes)
+    v2 = constrain(v2, "dense_flat", meta=bk.state_axes) if bk.fused else v2
+    if beta1 is None:
+        return u, (v2,)
+    m2 = constrain(m2, "dense_flat", meta=bk.state_axes) if bk.fused else m2
     return u, (m2, v2)
 
 
@@ -333,7 +388,7 @@ register(Family(
         lr=1e-3, beta1=0.9, eps=1e-8, weight_decay=0.0, decay_rate=-0.5,
         growth_rate=0.999, vector_reshape=True, weight_decay_mode="adamw",
         blocks=1, use_kernel=False, kernel_block=DEFAULT_KERNEL_BLOCK,
-        interpret=None, bucket=True, fuse_dense=True,
+        interpret=None, bucket=True, fuse_dense=True, quant=None,
     ),
     make_plan_fn=_smmf_plan_fn,
     init_bucket=_smmf_init,
@@ -341,12 +396,27 @@ register(Family(
     fuse_dense_ok=True,
     wd_mode_key="weight_decay_mode",
     validate=_smmf_validate,
+    quant_slots=_smmf_quant_slots,
 ))
 
 
 # ---------------------------------------------------------------------------
 # Adafactor (Shazeer & Stern 2018) — last-two-axes factored second moment
 # ---------------------------------------------------------------------------
+
+def _adafactor_quant_slots(bk: Bucket, hp: dict) -> tuple:
+    """SlotSpecs for Adafactor: quantize the row/col second-moment stats
+    (denominator-side -> sqrt-companded under int8, and the dense fallback
+    whole); the full-size momentum stays exact."""
+    if bk.factorized:
+        second = (SlotSpec(True, sqrt=True), SlotSpec(True, sqrt=True))
+        return ((SlotSpec(False),) if hp["beta1"] is not None else ()) + second
+    kind = "dense_flat" if bk.fused else None
+    v = (SlotSpec(True, kind, sqrt=True),)
+    if hp["beta1"] is not None:
+        return (SlotSpec(True, kind),) + v
+    return v
+
 
 def _adafactor_init(bk: Bucket, hp: dict):
     k = bk.stack
@@ -397,6 +467,7 @@ register(Family(
     defaults=dict(
         lr=1e-3, beta1=0.9, decay_rate=-0.8, eps1=1e-30, eps2=1e-3,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
+        quant=None,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_adafactor_init,
@@ -404,12 +475,25 @@ register(Family(
     # segment-aware RMS clip makes flat fusion legal; defaults['fuse_dense']
     # is off so the unfused layout (and its state keys) stays the baseline
     fuse_dense_ok=True,
+    quant_slots=_adafactor_quant_slots,
 ))
 
 
 # ---------------------------------------------------------------------------
 # CAME (Luo et al. 2023) — Adafactor + factored confidence rescaling
 # ---------------------------------------------------------------------------
+
+def _came_quant_slots(bk: Bucket, hp: dict) -> tuple:
+    """SlotSpecs for CAME: quantize the row/col second-moment AND
+    confidence stats (both denominator-side -> sqrt-companded under int8);
+    the full-size momentum stays exact; the dense fallback quantizes
+    whole (its v/u buffers companded the same way)."""
+    del hp
+    if bk.factorized:
+        return (SlotSpec(False),) + (SlotSpec(True, sqrt=True),) * 4
+    kind = "dense_flat" if bk.fused else None
+    return (SlotSpec(True, kind),) + (SlotSpec(True, kind, sqrt=True),) * 2
+
 
 def _came_init(bk: Bucket, hp: dict):
     k = bk.stack
@@ -464,17 +548,41 @@ def _came_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
     return m2 / jnp.sqrt(uhat + eps2), new_fac
 
 
-register(Family(
+_CAME = register(Family(
     name="came",
     defaults=dict(
         lr=1e-3, beta1=0.9, beta2=0.999, beta3=0.9999, eps1=1e-30, eps2=1e-16,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
+        quant=None,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_came_init,
     update_bucket=_came_update,
     fuse_dense_ok=True,          # segment-aware RMS clip (see adafactor)
+    quant_slots=_came_quant_slots,
 ))
+
+
+# ---------------------------------------------------------------------------
+# CAME-conf (registry-composition demo) — CAME + confidence-clipped output
+# ---------------------------------------------------------------------------
+
+def _came_conf_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
+    """CAME update whose confidence-rescaled *output* is RMS-clipped per
+    leaf a second time: the ``u - m`` instability estimate spikes early in
+    training (and after quantized-state resumes), and the extra clip bounds
+    the resulting step exactly like the pre-confidence clip bounds ``u``.
+    State layout is identical to CAME (same ``_came_init``)."""
+    u, new_fac = _came_update(ctx, bk, g, fac)
+    u = u / jnp.maximum(1.0, _per_leaf_rms(u, bk) / ctx.hp["clip_threshold"])
+    return u, new_fac
+
+
+# registry composition (docs/optimizer_api.md): a variant family is a
+# dataclasses.replace of its base entry — planner, state init, capability
+# flags and quant slots are inherited, only the update math differs
+register(dataclasses.replace(
+    _CAME, name="came_conf", update_bucket=_came_conf_update))
 
 
 # ---------------------------------------------------------------------------
@@ -556,13 +664,17 @@ register(Family(
     defaults=dict(
         lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
         bias_correction=True, weight_decay_mode="adam", bucket=True,
-        fuse_dense=True,
+        fuse_dense=True, quant=None,
     ),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_adam_init,
     update_bucket=_adam_update,
     fuse_dense_ok=True,
     wd_mode_key="weight_decay_mode",
+    quant_slots=lambda bk, hp: (
+        SlotSpec(True, "dense_flat" if bk.fused else None),
+        SlotSpec(True, "dense_flat" if bk.fused else None, sqrt=True),  # v
+    ),
 ))
 
 
@@ -589,9 +701,12 @@ def _sgd_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
 register(Family(
     name="sgd",
     defaults=dict(lr=1e-2, momentum=0.0, weight_decay=0.0, bucket=True,
-                  fuse_dense=True),
+                  fuse_dense=True, quant=None),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_sgd_init,
     update_bucket=_sgd_update,
     fuse_dense_ok=True,
+    quant_slots=lambda bk, hp: (
+        SlotSpec(True, "dense_flat" if bk.fused else None),
+    ) * (1 if hp["momentum"] else 0),
 ))

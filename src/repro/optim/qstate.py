@@ -1,0 +1,194 @@
+"""qstate: quantized storage codec for bucketed optimizer state.
+
+This is the layer between the leaf-plan engine and the family
+``init_bucket``/``update_bucket`` callbacks (``repro.optim.spec`` installs
+it when a group's resolved hyperparams carry ``quant="int8"|"fp8"``):
+
+* persistent state tensors live as :class:`QTensor` pairs — a 1-byte
+  payload (int8 or emulated fp8-e4m3, ``repro.core.quant``) plus small f32
+  absmax scales (one per leading-stack row; per contained-leaf segment for
+  fused flat dense rows);
+* at gather time the codec **dequantizes** the quantized slots to f32
+  (:func:`decode`), the family math runs unchanged in f32, and at scatter
+  time the codec **re-quantizes with stochastic rounding**
+  (:func:`encode`) — in-state rounding instead of an error-feedback
+  buffer, so the only memory overhead over the payload is the scale rows;
+* which slots of a bucket's state tuple quantize is a **family
+  capability**: ``repro.optim.families.Family.quant_slots`` returns one
+  :class:`SlotSpec` per state slot (SMMF quantizes its ``r``/``c`` moment
+  factors — the packed sign matrix is already 1 bit/element; Adafactor and
+  CAME their row/col second-moment (and confidence) stats; dense-fallback
+  flat buffers quantize whole; SM3 has no entry and rejects ``quant``);
+* a :class:`SlotSpec` may flag ``kernel_deq``: :func:`decode` then leaves
+  the slot quantized and the SMMF family feeds the raw int8 payload +
+  scales straight into the fused Pallas kernel, which dequantizes
+  **in-register** (``repro.kernels.smmf_update``) — ``use_kernel`` never
+  materializes a dequantized factor copy in HBM.
+
+Layout/placement contracts: payloads keep the exact shapes (and bucket
+keys) of their f32 twins, so checkpoints store raw int8 + scales through
+the ordinary path-keyed flow (``repro.checkpoint.ckpt`` bit-preserves fp8
+payloads) and ``rules.opt_state_shardings`` shards payloads like the f32
+state and rides the scale rows on the same stack placement (constraint
+kind ``"qscale"``). Donation safety is preserved: every payload/scale is
+consumed once and returned fresh with identical shape/dtype/sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+from repro.core.plan import Bucket
+from repro.distributed.ctx import constrain
+
+
+class QTensor(NamedTuple):
+    """One quantized state tensor: 1-byte payload + f32 absmax scales.
+
+    ``q`` has the exact shape of the f32 tensor it replaces (int8 or
+    float8_e4m3fn); ``scale`` is ``(rows, 1, ...)`` per leading-stack row,
+    or ``(num_leaves,)`` per contained-leaf segment for fused flat rows.
+    """
+
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    """Codec recipe for one slot of a bucket's state tuple.
+
+    ``quantize=False`` passes the slot through untouched (full precision —
+    e.g. the packed sign matrix, or a full-size momentum the family keeps
+    exact). ``kind`` is the ``ctx.constrain`` kind re-applied to the fresh
+    payload after re-quantization (None = unconstrained, matching the f32
+    behavior of that slot); ``kernel_deq`` marks slots the family
+    dequantizes *inside* its fused kernel — :func:`decode` passes the
+    :class:`QTensor` through instead of materializing f32 in HBM.
+
+    ``sqrt=True`` compands the slot through the sqrt domain under the
+    linear ``"int8"`` code (payload ``q ≈ √x / s``, dequant ``(q·s)²``).
+    This is REQUIRED for non-negative *denominator-side* state (second
+    moments): a factored preconditioner keeps ``m̂/√v̂`` bounded only
+    because numerator and denominator share their rank-1 row/col profile,
+    and linear absmax error on ``v`` factors rounds small entries to zero
+    while their ``m`` counterparts survive — the update explodes (observed
+    within 10 steps on transformer_base). Companding squares the dynamic
+    range the 8-bit code covers, restoring quasi-relative precision like
+    the fp8-e4m3 mode (which needs no companding and ignores the flag).
+    """
+
+    quantize: bool
+    kind: str | None = None
+    kernel_deq: bool = False
+    sqrt: bool = False
+
+
+def quant_mode(hp: dict) -> str | None:
+    """The group's quantization mode (validated), or None when off."""
+    mode = hp.get("quant")
+    if mode is None:
+        return None
+    return Q.check_mode(mode)
+
+
+def fused_segments(bucket: Bucket) -> np.ndarray:
+    """Static contained-leaf segment ids for a fused flat row (delegates to
+    ``Bucket.segment_ids`` — the same source the segment-aware RMS clip in
+    ``repro.optim.families`` reduces over, so scales and clips agree)."""
+    return bucket.segment_ids()
+
+
+def _uses_segments(bucket: Bucket) -> bool:
+    return bucket.fused and bucket.size > 1
+
+
+def _companded(slot: SlotSpec, mode: str) -> bool:
+    return slot.sqrt and mode == "int8"
+
+
+def _quantize_slot(x, bucket: Bucket, slot: SlotSpec, mode: str,
+                   key=None) -> QTensor:
+    if _companded(slot, mode):
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    if _uses_segments(bucket):
+        seg = fused_segments(bucket)
+        scale = Q.segment_scale(x, seg, bucket.size, mode)
+        row = scale[seg].reshape(x.shape)
+        return QTensor(Q.quantize(x, row, mode, key=key), scale)
+    scale = Q.row_scale(x, mode)
+    return QTensor(Q.quantize(x, scale, mode, key=key), scale)
+
+
+def dequantize_slot(qt: QTensor, bucket: Bucket, slot: SlotSpec,
+                    mode: str) -> jnp.ndarray:
+    """f32 view of one quantized slot (segment-aware for fused rows,
+    un-companding ``sqrt`` slots)."""
+    if _uses_segments(bucket):
+        row = qt.scale[fused_segments(bucket)].reshape(qt.q.shape)
+        x = Q.dequantize(qt.q, row)
+    else:
+        x = Q.dequantize(qt.q, qt.scale)
+    if _companded(slot, mode):
+        x = x * x
+    return x
+
+
+def encode_init(slots, bucket: Bucket, hp: dict, state):
+    """Quantize a freshly-initialized bucket state tuple (round-to-nearest
+    — init state is exact zeros, which quantize losslessly)."""
+    mode = quant_mode(hp)
+    return tuple(
+        _quantize_slot(x, bucket, s, mode) if s.quantize else x
+        for s, x in zip(slots, state, strict=True)
+    )
+
+
+def decode(slots, bucket: Bucket, hp: dict, state):
+    """Dequantize a stored state tuple for the family math (the gather-side
+    half of the codec). ``kernel_deq`` slots stay :class:`QTensor` — the
+    family's fused kernel dequantizes them in-register."""
+    mode = quant_mode(hp)
+    return tuple(
+        (x if s.kernel_deq else dequantize_slot(x, bucket, s, mode))
+        if s.quantize else x
+        for s, x in zip(slots, state, strict=True)
+    )
+
+
+def encode(slots, bucket: Bucket, hp: dict, state, key):
+    """Re-quantize a bucket's fresh f32 state with stochastic rounding (the
+    scatter-side half). Payloads and scale rows are re-pinned to the same
+    sharding kinds as their f32 twins so donation aliases in place."""
+    mode = quant_mode(hp)
+    out = []
+    for i, (s, x) in enumerate(zip(slots, state, strict=True)):
+        if not s.quantize:
+            out.append(x)
+            continue
+        qt = _quantize_slot(x, bucket, s, mode, key=jax.random.fold_in(key, i))
+        q, scale = qt
+        if s.kind:
+            q = constrain(q, s.kind, meta=bucket.state_axes)
+            if scale.ndim == 2:
+                scale = constrain(scale, "qscale", meta=bucket.state_axes)
+        out.append(QTensor(q, scale))
+    return tuple(out)
+
+
+_BASE_KEY = 0x5317  # arbitrary fixed base; SR stream is a pure function of
+                    # (step, bucket key, slot), so runs are reproducible
+
+
+def update_key(step: jnp.ndarray, bucket: Bucket) -> jnp.ndarray:
+    """Deterministic per-(step, bucket) PRNG key for stochastic rounding;
+    :func:`encode` folds in the slot index per quantized slot."""
+    key = jax.random.fold_in(jax.random.PRNGKey(_BASE_KEY), step)
+    return jax.random.fold_in(key, zlib.crc32(bucket.key.encode()) & 0x7FFFFFFF)

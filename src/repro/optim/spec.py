@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import families as F
+from repro.optim import qstate
 from repro.optim.base import (
     EngineState,
     GradientTransformation,
@@ -243,19 +244,32 @@ class OptimizerSpec:
         lr re-tune on resume is not refused. Everything that can change
         state keys/shapes or the family math structure (families,
         partitions, ``bucket``, ``fuse_dense``, ``blocks``,
-        ``beta1``-presence, ...) is covered.
+        ``beta1``-presence, and the qstate storage mode ``quant`` — int8
+        payloads+scales are a different checkpoint layout than f32) is
+        covered.
         """
         skip = ("use_kernel", "kernel_block", "interpret", "lr")
         d = dataclasses.asdict(self)
         d.pop("schedule", None)
-        d["hyperparams"] = {k: v for k, v in d["hyperparams"].items()
-                            if k not in skip}
+
+        def hp_form(hp: dict, family: str | None) -> dict:
+            out = {k: v for k, v in hp.items() if k not in skip}
+            # momentum-free SMMF changed its state layout (5 slots ->
+            # (r_v, c_v)) in PR 5; the spec itself is unchanged, so the
+            # hash must carry a layout version or a checkpoint written by
+            # the old code would restore its r_m/c_m factors into the new
+            # r_v/c_v slots (same shapes!) without any error
+            if (family or self.family) == "smmf" and \
+                    "beta1" in hp and hp["beta1"] is None:
+                out["_smmf_momentum_free_layout"] = 2
+            return out
+
+        d["hyperparams"] = hp_form(d["hyperparams"], None)
         for p in d["partitions"]:
             p.pop("predicate", None)
             p.pop("schedule", None)
             p.pop("state_sharding", None)
-            p["hyperparams"] = {k: v for k, v in p["hyperparams"].items()
-                                if k not in skip}
+            p["hyperparams"] = hp_form(p["hyperparams"], p.get("family"))
 
         def enc(o):
             raise ValueError(f"OptimizerSpec hash needs serializable "
@@ -359,6 +373,21 @@ def _merge_hp(entry: F.Family, *layers: dict, strict: tuple[dict, ...] = ()) -> 
     return out
 
 
+def _check_quant(entry: F.Family, hp: dict) -> None:
+    """Validate a group's ``quant`` hyperparam against the family's qstate
+    capability (families without ``quant_slots`` — sm3 — also reject the
+    key itself via their ``defaults`` schema)."""
+    mode = hp.get("quant")
+    if mode is None:
+        return
+    from repro.core.quant import check_mode
+
+    check_mode(mode)
+    if entry.quant_slots is None:
+        raise ValueError(
+            f"family {entry.name!r} has no quantizable state (quant={mode!r})")
+
+
 def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
     """[default group] + one group per partition, hyperparams validated."""
     base = F.get_family(spec.family)
@@ -367,6 +396,7 @@ def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
         base_hp["fuse_dense"] = False
     if base.validate:
         base.validate(base_hp)
+    _check_quant(base, base_hp)
     groups = [_Group("", DEFAULT_GROUP, base, base_hp,
                      resolve_schedule(spec.schedule, base_hp))]
     for p in spec.partitions:
@@ -381,6 +411,7 @@ def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
             hp["fuse_dense"] = False
         if entry.validate:
             entry.validate(hp)
+        _check_quant(entry, hp)
         # schedule precedence: the partition's own schedule wins; a partition
         # that overrides "lr" (without a schedule) means that lr — it must
         # NOT be shadowed by the spec-level schedule; otherwise inherit
@@ -467,6 +498,7 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
                 solo=not g.hp.get("bucket", True),
                 fuse=(not p.factorized) and bool(g.hp.get("fuse_dense", False)),
                 state_axes=g.state_axes,
+                quant=g.hp.get("quant"),
             )
 
         return LeafPlanEngine(params, plan_fn)
@@ -486,7 +518,11 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
         factors = {}
         for bk in engine.buckets:
             g = _group_of(bk)
-            factors[bk.key] = g.entry.init_bucket(bk, g.hp)
+            raw = g.entry.init_bucket(bk, g.hp)
+            if g.hp.get("quant"):
+                raw = qstate.encode_init(
+                    g.entry.quant_slots(bk, g.hp), bk, g.hp, raw)
+            factors[bk.key] = raw
         return EngineState(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params, *, step=None, **extras):
@@ -517,7 +553,20 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             g = _group_of(bk)
             ctx = F.UpdateCtx(step=new_step, t=t, hp=g.hp)
             gm = engine.gather(flat_g, bk)
-            u, factors[bk.key] = g.entry.update_bucket(ctx, bk, gm, state.factors[bk.key])
+            st = state.factors[bk.key]
+            # qstate codec (repro.optim.qstate): dequantize stored slots at
+            # gather, run the family math in f32, re-quantize with
+            # stochastic rounding at scatter (kernel_deq slots skip the
+            # decode — the fused kernel dequantizes in-register)
+            slots = None
+            if g.hp.get("quant"):
+                slots = g.entry.quant_slots(bk, g.hp)
+                st = qstate.decode(slots, bk, g.hp, st)
+            u, new_st = g.entry.update_bucket(ctx, bk, gm, st)
+            if slots is not None:
+                new_st = qstate.encode(slots, bk, g.hp, new_st,
+                                       qstate.update_key(new_step, bk))
+            factors[bk.key] = new_st
             engine.scatter(bk, -g.lr_fn(new_step) * u, out_flat)
 
         # decoupled ("adamw" mode, paper Algo 7) weight decay, per group

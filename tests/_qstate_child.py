@@ -1,0 +1,160 @@
+"""Subprocess child for the quantized-state (qstate) multi-device tests.
+
+Runs under the session-scoped emulated-mesh harness (tests/conftest.py).
+Covers, on a real 4-device "data" mesh:
+
+* sharded-vs-replicated parity of a quantized (int8) SMMF update — the
+  payloads AND scale rows are stack-sharded per ``rules.opt_state_shardings``
+  and the sharded trajectory matches the single-device one to within ONE
+  quantizer code (the SR stream is deterministic per (step, bucket, slot),
+  but sharded f32 reduction order can nudge a value across a rounding
+  boundary — never further than one code);
+* a checkpoint written from the 2-way mesh restores onto the 4-way mesh
+  (mesh-elastic re-sharding of int8 payloads + scales) with bit-identical
+  contents.
+
+Prints "QSTATE PARITY OK" / "QSTATE ELASTIC OK" on success.
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
+import tempfile  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.checkpoint import ckpt  # noqa: E402
+from repro.distributed import rules  # noqa: E402
+from repro.distributed.ctx import sharding_ctx  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.base import apply_updates  # noqa: E402
+from repro.optim.spec import OptimizerSpec, build_optimizer  # noqa: E402
+
+# four same-geometry 2-D leaves -> one factored bucket with stack 4
+# (divisible by the 4-way data axis -> stack-sharded payloads + scales);
+# two 1-D leaves + a scalar -> the fused dense path with segment scales
+SHAPES = {
+    "wq": (32, 64), "wk": (32, 64), "wv": (32, 64), "wo": (32, 64),
+    "b1": (64,), "b2": (64,),
+    "s": (),
+}
+
+SPEC = OptimizerSpec(family="smmf", hyperparams={
+    "lr": 1e-2, "decay_rate": -0.8, "quant": "int8"})
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def _assert_bitwise(a_tree, b_tree, msg):
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(a_tree),
+                                   jax.tree.leaves(b_tree))):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype, f"{msg}: leaf {i} dtype {a.dtype}!={b.dtype}"
+        np.testing.assert_array_equal(a, b, err_msg=f"{msg}: leaf {i}")
+
+
+def _assert_one_code(a_tree, b_tree, msg):
+    """Quantized-state parity: int8 payloads within ONE code of each other,
+    everything else (scales, signs, the step scalar) numerically close."""
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(a_tree),
+                                   jax.tree.leaves(b_tree))):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype, f"{msg}: leaf {i} dtype {a.dtype}!={b.dtype}"
+        if a.dtype == np.int8:
+            d = np.abs(a.astype(np.int16) - b.astype(np.int16))
+            assert int(d.max(initial=0)) <= 1, \
+                f"{msg}: leaf {i} payloads differ by {int(d.max())} codes"
+        elif a.dtype == np.uint8:
+            np.testing.assert_array_equal(a, b, err_msg=f"{msg}: leaf {i}")
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-9,
+                                       err_msg=f"{msg}: leaf {i}")
+
+
+def parity() -> None:
+    """Sharded-vs-replicated bitwise parity of the quantized trajectory."""
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+    cfg = ModelConfig("t", "dense", 2, 32, 4, 64, 64, n_kv_heads=2,
+                      dtype="float32")
+    opt = build_optimizer(SPEC)
+    params = _tree(0)
+    state = opt.init(params)
+
+    psh = rules.param_shardings(mesh, None, params)
+    osh = rules.opt_state_shardings(mesh, None, params, opt)
+    rule = rules.activation_rules(mesh, cfg, "train")
+
+    params_s = jax.device_put(params, psh)
+    state_s = jax.device_put(state, osh)
+
+    # the factored bucket's int8 payload AND its scale rows must actually
+    # be distributed over the 4-way stack axis
+    qt = state_s.factors["fac:1x64x32"][0]
+    assert str(qt.q.dtype) == "int8", qt.q.dtype
+    for name, arr in (("payload", qt.q), ("scale", qt.scale)):
+        n_shards = len({str(s.index) for s in arr.addressable_shards})
+        assert n_shards == 4, f"quantized {name} not stack-sharded: {n_shards}"
+
+    def upd_with_constraints(g, s, p):
+        with sharding_ctx(rule):
+            return opt.update(g, s, p)
+
+    upd_s = jax.jit(upd_with_constraints, in_shardings=(psh, osh, psh),
+                    out_shardings=(psh, osh))
+    upd_r = jax.jit(opt.update)
+
+    for step in range(3):
+        grads = _tree(100 + step)
+        u_r, state = upd_r(grads, state, params)
+        u_s, state_s = upd_s(jax.device_put(grads, psh), state_s, params_s)
+        params = apply_updates(params, u_r)
+        params_s = apply_updates(params_s, u_s)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(params[k]), np.asarray(params_s[k]),
+                rtol=1e-6, atol=1e-7, err_msg=f"step {step} leaf {k}")
+        # shared SR stream -> payloads agree to within one quantizer code
+        _assert_one_code(state, state_s, f"step {step} quantized state")
+    print("QSTATE PARITY OK")
+
+
+def elastic() -> None:
+    """int8+scales checkpoint round-trip across a mesh-size change."""
+    opt = build_optimizer(SPEC)
+    params = _tree(1)
+    mesh2 = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+    mesh4 = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+    osh2 = rules.opt_state_shardings(mesh2, None, params, opt)
+    osh4 = rules.opt_state_shardings(mesh4, None, params, opt)
+
+    state = jax.device_put(opt.init(params), osh2)
+    u, state = jax.jit(opt.update)(_tree(2), state, params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, state, spec_hash=SPEC.spec_hash())
+        like = jax.eval_shape(lambda: state)
+        restored, manifest = ckpt.restore(d, like, shardings=osh4,
+                                          spec_hash=SPEC.spec_hash())
+    assert manifest["spec_hash"] == SPEC.spec_hash()
+    _assert_bitwise(state, restored, "elastic restore")
+    # and the restored payloads really live on the 4-way layout
+    qt = restored.factors["fac:1x64x32"][0]
+    n_shards = len({str(s.index) for s in qt.q.addressable_shards})
+    assert n_shards == 4, f"restored payload not re-sharded: {n_shards}"
+    print("QSTATE ELASTIC OK")
+
+
+if __name__ == "__main__":
+    assert jax.device_count() >= 4, jax.device_count()
+    parity()
+    elastic()

@@ -1,0 +1,321 @@
+"""Quantized optimizer-state (qstate) subsystem tests.
+
+Covers the codec end to end: state dtypes/bytes, spec hashing and CLI rule
+plumbing, the in-kernel dequant path (no silent fallback), fused-dense
+segment scales, checkpoint round-trips (incl. the fp8 bit-preserving path
+and the spec-hash refusal), convergence parity against f32 on the
+transformer_base smoke config, and the memory acceptance ratio.
+Multi-device placement/parity lives in ``_qstate_child.py``
+(test_qstate_sharded below); hypothesis error-bound fuzzing in
+``test_qstate_properties.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptimizerSpec, Partition, build_optimizer, get_family
+from repro.optim.base import apply_updates
+from repro.optim.qstate import QTensor
+from repro.utils.tree import tree_bytes
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((96,)) * 1e-3, jnp.float32),
+        "s": jnp.asarray(rng.standard_normal(()), jnp.float32),
+    }
+
+
+def _spec(family="smmf", **hp):
+    base = {"lr": 1e-2}
+    if family == "smmf":
+        base["decay_rate"] = -0.8
+    base.update(hp)
+    return OptimizerSpec(family=family, hyperparams=base)
+
+
+def _run_steps(opt, params, steps=3, seed=7):
+    state = opt.init(params)
+    step = jax.jit(lambda g, s, p: opt.update(g, s, p))
+    for t in range(steps):
+        rng = np.random.default_rng(seed + t)
+        grads = jax.tree.map(
+            lambda p: jnp.asarray(rng.standard_normal(p.shape) * 0.1,
+                                  jnp.float32), params)
+        u, state = step(grads, state, params)
+        params = apply_updates(params, u)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# state layout: dtypes, bytes, capability gating
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,pdtype", [("int8", "int8"),
+                                         ("fp8", "float8_e4m3fn")])
+def test_smmf_quant_state_layout(mode, pdtype):
+    params = _params()
+    opt = build_optimizer(_spec(quant=mode))
+    state = opt.init(params)
+    fac = state.factors["fac:1x72x64"]
+    assert len(fac) == 5
+    for slot in (0, 1, 3, 4):  # r_m, c_m, r_v, c_v
+        qt = fac[slot]
+        assert isinstance(qt, QTensor)
+        assert str(qt.q.dtype) == pdtype
+        assert qt.scale.dtype == jnp.float32
+        assert qt.scale.shape == (qt.q.shape[0], 1)
+    assert fac[2].dtype == jnp.uint8  # sign matrix untouched
+
+
+def test_quant_state_bytes_shrink():
+    params = _params()
+    for family in ("smmf", "adafactor", "came", "adam"):
+        f32 = tree_bytes(build_optimizer(_spec(family)).init(params))
+        q8 = tree_bytes(build_optimizer(_spec(family, quant="int8")).init(params))
+        assert q8 < f32, (family, q8, f32)
+
+
+def test_momentum_free_smmf_layout_and_bytes():
+    """beta1=None holds ONLY (r_v, c_v) — no momentum factors, no sign —
+    and int8 then cuts the whole state ~4x (scales included)."""
+    params = _params()
+    f32 = build_optimizer(_spec(beta1=None)).init(params)
+    fac = f32.factors["fac:1x72x64"]
+    assert len(fac) == 2 and all(x.dtype == jnp.float32 for x in fac)
+    q8 = build_optimizer(_spec(beta1=None, quant="int8")).init(params)
+    assert tree_bytes(q8) <= 0.30 * tree_bytes(f32)
+
+
+def test_sm3_rejects_quant():
+    with pytest.raises(ValueError, match="unknown hyperparams|quant"):
+        build_optimizer(OptimizerSpec(family="sm3",
+                                      hyperparams={"lr": 1e-3,
+                                                   "quant": "int8"}))
+
+
+def test_bad_quant_mode_rejected():
+    with pytest.raises(ValueError, match="unknown quantization mode"):
+        build_optimizer(_spec(quant="int4"))
+
+
+def test_engine_stats_report_quantized_buckets():
+    params = _params()
+    stats = build_optimizer(_spec(quant="int8")).plan(params).stats()
+    assert stats["quantized_buckets"] == stats["buckets"] > 0
+    stats32 = build_optimizer(_spec()).plan(params).stats()
+    assert stats32["quantized_buckets"] == 0
+
+
+# ---------------------------------------------------------------------------
+# spec hashing / serialization / CLI rules (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_spec_hash_changes_with_quant_not_with_kernel():
+    base = _spec()
+    q8 = _spec(quant="int8")
+    fp8 = _spec(quant="fp8")
+    kern = _spec(quant="int8", use_kernel=True)
+    assert base.spec_hash() != q8.spec_hash()
+    assert q8.spec_hash() != fp8.spec_hash()
+    # execution-only knob: kernel toggle never invalidates the checkpoint
+    assert kern.spec_hash() == q8.spec_hash()
+
+
+def test_quant_spec_json_roundtrip_and_rule():
+    spec = _spec(quant="fp8")
+    back = OptimizerSpec.from_json(spec.to_json())
+    assert back == spec and back.spec_hash() == spec.spec_hash()
+    # the ISSUE's CLI form: a per-group quant override via --optim-rule
+    ruled = _spec().with_rule("ffn/=smmf,quant=int8")
+    (part,) = ruled.partitions
+    assert part.hyperparams["quant"] == "int8"
+    back = OptimizerSpec.from_json(ruled.to_json())
+    assert back == ruled
+    build_optimizer(ruled)  # validates against the registry
+
+
+def test_per_group_quant_override():
+    """Only the matching group stores quantized; state keys are unchanged."""
+    params = _params()
+    spec = OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8},
+        partitions=(Partition(name="mats", match=r"^w", family="smmf",
+                              hyperparams={"quant": "int8"}),),
+    )
+    state = build_optimizer(spec).init(params)
+    assert isinstance(state.factors["mats/fac:1x72x64"][0], QTensor)
+    for key, sub in state.factors.items():
+        if not key.startswith("mats/"):
+            assert not any(isinstance(x, QTensor) for x in sub), key
+
+
+# ---------------------------------------------------------------------------
+# numerics: kernel path, fused segment scales, updates stay sane
+# ---------------------------------------------------------------------------
+
+def test_kernel_dequant_parity_and_no_fallback():
+    """use_kernel + quant=int8: the fused kernel consumes the int8 payloads
+    directly (launch counter moves), matches the unfused quantized path,
+    and the returned state is still quantized."""
+    from repro.kernels.smmf_update import ops as kops
+
+    params = _params()
+    opt_k = build_optimizer(_spec(quant="int8", use_kernel=True))
+    opt_u = build_optimizer(_spec(quant="int8"))
+    n0 = kops.KERNEL_LAUNCHES
+    pk, sk = _run_steps(opt_k, params)
+    assert kops.KERNEL_LAUNCHES > n0, "silent fallback: no kernel launch traced"
+    pu, su = _run_steps(opt_u, params)
+    for a, b in zip(jax.tree.leaves(pk), jax.tree.leaves(pu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert isinstance(sk.factors["fac:1x72x64"][0], QTensor)
+
+
+def test_fused_dense_segment_scales():
+    """Fused flat rows quantize per contained leaf: a tiny leaf next to a
+    huge one keeps its own absmax range instead of dying in the shared one."""
+    params = {"big": jnp.full((64,), 1e3), "small": jnp.full((48,), 1e-3)}
+    opt = build_optimizer(_spec(family="adam", quant="int8"))
+    state = opt.init(params)
+    grads = {"big": jnp.full((64,), 1e2), "small": jnp.full((48,), 1e-4)}
+    u, state = jax.jit(lambda g, s, p: opt.update(g, s, p))(
+        grads, state, params)
+    qt = state.factors["dense:flat:float32"][1]  # v
+    assert qt.scale.shape == (2,)  # one scale per contained leaf
+    from repro.optim.qstate import dequantize_slot, fused_segments
+    bk = [b for b in opt.plan(params).buckets][0]
+    slots = get_family("adam").quant_slots(bk, {"quant": "int8"})
+    deq = np.asarray(dequantize_slot(qt, bk, slots[1], "int8")).reshape(-1)
+    seg = fused_segments(bk)
+    # per-segment reconstruction error bounded by one (sqrt-companded)
+    # int8 code: |x̂ - x| <= (√x_seg_max/127)² + 2√(x x_seg_max)/127
+    v_ref = np.concatenate([np.full(64, (1e2) ** 2 * 1e-3),
+                            np.full(48, (1e-4) ** 2 * 1e-3)])
+    for s in (0, 1):
+        m = seg == s
+        xmax = v_ref[m].max()
+        bound = (np.sqrt(xmax) / 127.0) ** 2 \
+            + 2 * np.sqrt(v_ref[m].max() * xmax) / 127.0
+        err = np.abs(deq[m] - v_ref[m]).max()
+        assert err <= 1.01 * bound, (s, err, bound)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+def test_quantized_update_tracks_f32(mode):
+    """A few steps of quantized SMMF stay close to the f32 trajectory."""
+    params = _params()
+    p32, _ = _run_steps(build_optimizer(_spec()), params, steps=5)
+    pq, _ = _run_steps(build_optimizer(_spec(quant=mode)), params, steps=5)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(pq)):
+        a, b = np.asarray(a), np.asarray(b)
+        # lr 1e-2 x 5 steps moves params by ~5e-2; the 8-bit preconditioner
+        # drift must stay a modest fraction of that motion
+        assert np.max(np.abs(a - b)) < 1e-2, np.max(np.abs(a - b))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["int8", "fp8"])
+def test_quant_checkpoint_roundtrip_bitwise(mode, tmp_path):
+    from repro.checkpoint import ckpt
+
+    spec = _spec(quant=mode)
+    opt = build_optimizer(spec)
+    params = _params()
+    _, state = _run_steps(opt, params)
+    ckpt.save(tmp_path, 3, state, spec_hash=spec.spec_hash())
+    restored, manifest = ckpt.restore(tmp_path, jax.eval_shape(lambda: state),
+                                      spec_hash=spec.spec_hash())
+    assert manifest["spec_hash"] == spec.spec_hash()
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype  # fp8 payloads restore bit-preserved
+        np.testing.assert_array_equal(
+            a.view(np.uint8) if a.dtype.itemsize == 1 else a,
+            b.view(np.uint8) if b.dtype.itemsize == 1 else b)
+
+
+def test_quant_layout_change_refuses_restore(tmp_path):
+    from repro.checkpoint import ckpt
+
+    spec8 = _spec(quant="int8")
+    opt = build_optimizer(spec8)
+    params = _params()
+    state = opt.init(params)
+    ckpt.save(tmp_path, 1, state, spec_hash=spec8.spec_hash())
+    with pytest.raises(ValueError, match="spec hash mismatch"):
+        ckpt.restore(tmp_path, jax.eval_shape(lambda: state),
+                     spec_hash=_spec().spec_hash())
+
+
+# ---------------------------------------------------------------------------
+# convergence parity (acceptance) + memory acceptance ratio
+# ---------------------------------------------------------------------------
+
+def test_transformer_base_convergence_parity():
+    """Quantized-vs-f32 final-loss parity on the transformer_base smoke
+    config (the convergence-smoke acceptance criterion)."""
+    from repro.configs import smoke_config
+    from repro.data import SyntheticLMStream
+    from repro.launch.steps import make_train_step
+    from repro.models import init_encdec
+
+    cfg = smoke_config("transformer_base")  # the paper's encoder-decoder
+    stream = SyntheticLMStream(cfg, 4, 32, seed=0)
+    finals = {}
+    for tag, hp in (("f32", {}), ("int8", {"quant": "int8"})):
+        opt = build_optimizer(_spec(lr=1e-3, **hp))
+        params = init_encdec(jax.random.PRNGKey(0), cfg)
+        state = opt.init(params)
+        step = jax.jit(make_train_step(cfg, opt))
+        hist = []
+        for t in range(25):
+            params, state, m = step(params, state,
+                                    jax.tree.map(jnp.asarray, stream.batch(t)))
+            hist.append(float(m["loss"]))
+        finals[tag] = float(np.mean(hist[-5:]))
+        assert np.isfinite(finals[tag])
+    assert abs(finals["int8"] - finals["f32"]) <= 0.05 * abs(finals["f32"]), finals
+
+
+def test_memory_acceptance_int8_le_30pct():
+    """Acceptance: per-device optimizer-state bytes of smmf(beta1=None),
+    quant=int8 <= 30% of the f32 twin on transformer_base, scales included
+    (the table itself lives in benchmarks/memory_table.py)."""
+    from jax.sharding import AbstractMesh
+
+    from repro.configs import get_config
+    from repro.distributed import rules
+    from repro.launch import specs as S
+
+    cfg = get_config("transformer_base")
+    psds = S.params_specs(cfg)
+    mesh = AbstractMesh((("data", 4),))
+
+    def per_dev(**hp):
+        opt = build_optimizer(_spec(**hp))
+        sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+        return rules.sharded_state_bytes(sh, jax.eval_shape(opt.init, psds))
+
+    assert per_dev(beta1=None, quant="int8") <= 0.30 * per_dev(beta1=None)
+
+
+# ---------------------------------------------------------------------------
+# multi-device placement + elastic restore (emulated-mesh child)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_qstate_sharded_parity_and_elastic(emulated_mesh):
+    out = emulated_mesh.run("_qstate_child.py", devices=4)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "QSTATE PARITY OK" in out.stdout
+    assert "QSTATE ELASTIC OK" in out.stdout

@@ -1,0 +1,115 @@
+"""Hypothesis fuzz properties for the qstate quantization numerics.
+
+Round-trip error bounds and stochastic-rounding unbiasedness of
+``repro.core.quant`` (own module: a module-level importorskip must not
+skip the deterministic ``test_qstate.py``). Runs where hypothesis is
+installed — CI installs requirements-dev.txt.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import quant as Q  # noqa: E402
+
+_rows = st.integers(min_value=1, max_value=5)
+_cols = st.integers(min_value=1, max_value=64)
+_seeds = st.integers(min_value=0, max_value=2**31 - 1)
+_scale_pow = st.integers(min_value=-8, max_value=8)
+
+
+def _mk(rows, cols, seed, scale_pow):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, cols)) * 10.0 ** scale_pow
+    return jnp.asarray(x, jnp.float32)
+
+
+@settings(deadline=None, max_examples=60)
+@given(_rows, _cols, _seeds, _scale_pow)
+def test_int8_roundtrip_bounded_by_one_code(rows, cols, seed, scale_pow):
+    """|deq(quant(x)) - x| <= scale per element: half a code for round-to-
+    nearest, a full code for stochastic rounding."""
+    x = _mk(rows, cols, seed, scale_pow)
+    scale = Q.row_scale(x, "int8")
+    for key, codes in ((None, 0.5), (jax.random.PRNGKey(seed), 1.0)):
+        q = Q.quantize(x, scale, "int8", key=key)
+        err = np.abs(np.asarray(Q.dequantize(q, scale) - x))
+        bound = codes * np.asarray(scale) * (1 + 1e-6)
+        assert (err <= bound).all(), (err.max(), float(bound.max()))
+
+
+@settings(deadline=None, max_examples=60)
+@given(_rows, _cols, _seeds, _scale_pow)
+def test_fp8_roundtrip_relative_bound(rows, cols, seed, scale_pow):
+    """e4m3 emulation: elementwise error <= one e4m3 ulp of the scaled
+    value — 2^-3 relative for normals, plus the subnormal absolute floor
+    (2^-9 of the row scale); doubled under stochastic rounding."""
+    x = _mk(rows, cols, seed, scale_pow)
+    scale = Q.row_scale(x, "fp8")
+    for key, ulps in ((None, 0.5), (jax.random.PRNGKey(seed), 1.0)):
+        q = Q.quantize(x, scale, "fp8", key=key)
+        err = np.abs(np.asarray(Q.dequantize(q, scale) - x))
+        rel = 2.0 * ulps * np.abs(np.asarray(x)) / 8.0
+        floor = 2.0 * ulps * np.asarray(scale) * 2.0 ** -9
+        assert (err <= rel + floor + 1e-30).all(), float(err.max())
+
+
+@settings(deadline=None, max_examples=30)
+@given(_cols, _seeds, _scale_pow)
+def test_int8_stochastic_rounding_unbiased(cols, seed, scale_pow):
+    """Averaged over many SR draws, deq(quant(x)) converges to x (this is
+    what lets the optimizer re-quantize its state every step without an
+    error-feedback buffer)."""
+    x = _mk(1, cols, seed, scale_pow)
+    scale = Q.row_scale(x, "int8")
+    draws = 256
+
+    def one(key):
+        return Q.dequantize(Q.quantize(x, scale, "int8", key=key), scale)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), draws)
+    mean = np.asarray(jnp.mean(jax.vmap(one)(keys), axis=0))
+    # SE of the mean of a one-code-wide distribution ~ scale/sqrt(draws);
+    # allow 5 SEs
+    tol = 5.0 * np.asarray(scale) / np.sqrt(draws)
+    assert (np.abs(mean - np.asarray(x)) <= tol).all()
+
+
+@settings(deadline=None, max_examples=40)
+@given(_rows, _cols, _seeds)
+def test_nonneg_stays_nonneg_and_zero_exact(rows, cols, seed):
+    """Non-negative inputs never quantize negative (second-moment slots
+    must stay valid under sqrt), and exact zeros round-trip exactly."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.abs(rng.standard_normal((rows, cols))), jnp.float32)
+    x = x.at[:, 0].set(0.0)
+    for mode in ("int8", "fp8"):
+        scale = Q.row_scale(x, mode)
+        for key in (None, jax.random.PRNGKey(seed)):
+            deq = np.asarray(Q.dequantize(
+                Q.quantize(x, scale, mode, key=key), scale))
+            assert (deq >= 0).all()
+            assert (deq[:, 0] == 0).all()
+
+
+@settings(deadline=None, max_examples=40)
+@given(_cols, _seeds, st.integers(min_value=2, max_value=5))
+def test_segment_scale_isolates_leaves(cols, seed, nseg):
+    """Per-segment scales: each segment's round-trip error is bounded by
+    its OWN absmax, not the row's (the fused-dense property)."""
+    rng = np.random.default_rng(seed)
+    parts = [rng.standard_normal(cols) * 10.0 ** (3 * i) for i in range(nseg)]
+    x = jnp.asarray(np.concatenate(parts), jnp.float32)[None, :]
+    seg = np.repeat(np.arange(nseg, dtype=np.int32), cols)
+    scale = Q.segment_scale(x, seg, nseg, "int8")
+    row = scale[seg].reshape(x.shape)
+    deq = np.asarray(Q.dequantize(Q.quantize(x, row, "int8"), row))
+    err = np.abs(deq - np.asarray(x))[0]
+    for s in range(nseg):
+        m = seg == s
+        own_bound = 0.5 * float(scale[s]) * (1 + 1e-6)
+        assert err[m].max() <= own_bound, (s, err[m].max(), own_bound)

@@ -72,6 +72,20 @@ def test_transformer_base_train4k_dryrun_compiles():
     assert "ALL CELLS OK" in out.stdout
 
 
+def test_transformer_base_train4k_quantized_compiles():
+    """Quantized-state (qstate int8 + fused kernel, in-kernel dequant)
+    twin of the hard-regression cell: the sharded train step must compile
+    with all constraints ON — payloads, scale rows ("qscale") and the
+    boundary pins all agree with ``rules.opt_state_shardings``."""
+    out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
+                "--shape", "train_4k", "--quant", "int8", "--use-kernel",
+                "--variant", "qstate_regression"], timeout=900)
+    assert out.returncode == 0, (
+        f"quantized dryrun crashed (rc={out.returncode}):\n"
+        f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
+    assert "ALL CELLS OK" in out.stdout
+
+
 def test_no_scatter_constraints_escape_hatch():
     """--no-scatter-constraints (now a pure A/B hatch: it drops the scatter
     fix together with the other optimizer constraints) still compiles."""
@@ -102,4 +116,18 @@ def test_dryrun_compile_smoke_matrix(arch):
     assert out.returncode == 0, (
         f"{arch}/train_4k dryrun failed:\n{out.stdout[-2000:]}\n"
         f"{out.stderr[-2000:]}")
+    assert "ALL CELLS OK" in out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_dryrun_compile_smoke_quantized_cells(quant):
+    """Quantized-spec cells of the compile matrix: both qstate modes
+    lower + compile on the production mesh (scheduled CI job)."""
+    out = _run(["-m", "repro.launch.dryrun", "--arch", "transformer_base",
+                "--shape", "train_4k", "--quant", quant,
+                "--variant", "matrix"], timeout=1800)
+    assert out.returncode == 0, (
+        f"transformer_base/train_4k quant={quant} dryrun failed:\n"
+        f"{out.stdout[-2000:]}\n{out.stderr[-2000:]}")
     assert "ALL CELLS OK" in out.stdout

@@ -81,6 +81,12 @@ def main() -> int:
             spec = cell_optimizer_spec(get_config(arch), opt_name)
             violations += _check(f"dryrun:{arch}:{opt_name}", spec)
             n += 1
+        # quantized-state specs (the qstate codec) must round-trip too —
+        # quant is layout-relevant, so the hash must be stable across JSON
+        for quant in ("int8", "fp8"):
+            spec = cell_optimizer_spec(get_config(arch), "smmf", quant=quant)
+            violations += _check(f"dryrun:{arch}:smmf.{quant}", spec)
+            n += 1
     for label, spec in _example_specs():
         violations += _check(label, spec)
         n += 1
