@@ -4,11 +4,13 @@
 
 Emits the machine-readable perf trajectory alongside the printed tables:
 ``BENCH_opt_memory.json`` (per-arch state bytes per family, per-group rows
-incl. frozen groups, and the qstate quantized grid) and
-``BENCH_step_time.json`` (per-optimizer ms/launches/boundary-transport
-bytes) under ``--json-dir`` (default ``results/bench/``). CI uploads both
-as workflow artifacts (the ``bench`` job in ``.github/workflows/ci.yml``),
-so every commit carries its measured trajectory.
+incl. frozen groups, the qstate quantized grid, and the host-offload
+device/host split) and ``BENCH_step_time.json`` (per-optimizer
+ms/launches/boundary-transport bytes plus the ``--overlap``/``--offload``
+on/off grid) under ``--json-dir`` (default ``results/bench/``). The CI
+``bench`` job gates the fresh records against the committed repo-root
+baselines via ``tools/bench_compare.py`` and uploads both as workflow
+artifacts, so every commit carries its measured trajectory.
 """
 
 from __future__ import annotations

@@ -24,6 +24,14 @@ non-stack-sharded bucket transports explicitly through the gather/scatter
 ``state_sharding=("model",)`` group always takes the replicated boundary.
 ``main(json_path=...)`` emits the whole table as a machine-readable record
 (``benchmarks/run.py`` writes ``BENCH_step_time.json``).
+
+A fourth section runs the ``--overlap``/``--offload`` execution-knob grid
+(:data:`OVERLAP_GRID`) on the quantized SMMF variant: step time with the
+bucket updates interleaved (``schedule="grad"``) and/or the cold buckets
+round-tripping the host tier, next to the analytic device/host state-byte
+split and the offload transport per step. ``tools/bench_compare.py`` gates
+regressions on these rows (overlap-on must not be slower than overlap-off
+beyond tolerance, at equal memory).
 """
 
 from __future__ import annotations
@@ -137,12 +145,59 @@ def bench(name: str, iters: int = 20, opts=None, params_fn=_params):
     return (time.perf_counter() - t0) / iters * 1e3, launches, transport
 
 
+def bench_overlap(name: str, iters: int = 20, schedule=None, offload=None):
+    """Time the optimizer-only step under the execution knobs of the
+    overlapped train step: ``schedule="grad"`` (interleave order +
+    optimization-barrier chain) and/or ``offload="cold"`` (host tier
+    round-trip; structural on CPU). Returns (ms, analytic device/host
+    state-byte split, offload transport bytes/step)."""
+    from repro.optim import offload as O
+
+    opt = OPTS[name]()
+    params = _params()
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    engine = opt.plan(params)
+    state_sds = jax.eval_shape(opt.init, params)
+    split = O.state_bytes_split(engine, state_sds, offload)
+    transport = O.transport_bytes(engine, state_sds, offload)
+    extras = {}
+    if schedule is not None:
+        extras["schedule"] = schedule
+    if offload is not None:
+        extras["offload"] = offload
+
+    @jax.jit
+    def step(params, state, grads):
+        u, s2 = opt.update(grads, state, params, **extras)
+        return apply_updates(params, u), s2
+
+    params, state = step(params, state, grads)  # compile
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        params, state = step(params, state, grads)
+    jax.block_until_ready(params)
+    return (time.perf_counter() - t0) / iters * 1e3, split, transport
+
+
+# (overlap, offload) grid for the overlapped-step section: the bench gate
+# (tools/bench_compare.py) asserts overlap-on <= overlap-off within
+# tolerance and offload-on device bytes strictly below device-resident
+OVERLAP_GRID = (
+    ("base", None, None),
+    ("overlap", "grad", None),
+    ("offload", None, "cold"),
+    ("overlap+offload", "grad", "cold"),
+)
+
+
 def main(json_path: str | Path | None = None) -> dict:
-    """Print the step-time and dense-fallback tables (with the boundary
-    transport column) and return (optionally write) the machine-readable
-    record."""
+    """Print the step-time, dense-fallback, and overlap/offload tables
+    (with the boundary transport column) and return (optionally write) the
+    machine-readable record."""
     rec: dict = {"transport_axes": TRANSPORT_AXES, "optimizers": {},
-                 "dense": {}}
+                 "dense": {}, "overlap_offload": {}}
     base = None
     launch = {}
     print(f"{'optimizer':18s} {'ms/step':>9s} {'vs adam':>8s} {'launches':>9s} "
@@ -177,6 +232,24 @@ def main(json_path: str | Path | None = None) -> dict:
                               "boundary_bytes": transport["total"]}
         ls = f"{launches:9d}" if launches is not None else f"{'-':>9s}"
         print(f"{name:22s} {ms:9.2f} {ls}")
+
+    print("\noverlapped step / host-offload grid (smmf int8, execution knobs "
+          "of --overlap/--offload):")
+    print(f"{'variant':18s} {'ms/step':>9s} {'dev MB':>8s} {'host MB':>8s} "
+          f"{'offl MB/step':>13s}")
+    for label, schedule, off in OVERLAP_GRID:
+        ms, split, transport = bench_overlap("smmf(int8)", schedule=schedule,
+                                             offload=off)
+        rec["overlap_offload"][label] = {
+            "ms": ms, "schedule": schedule, "offload": off,
+            "device_bytes": split["device"], "host_bytes": split["host"],
+            "offload_transport_bytes": transport,
+        }
+        print(f"{label:18s} {ms:9.2f} {split['device']/2**20:8.3f} "
+              f"{split['host']/2**20:8.3f} {transport/2**20:13.3f}")
+    print("(equal-memory rows: 'overlap' moves no state; offload rows trade "
+          "device HBM for 2x host-link transport per step — analytic split, "
+          "backend-independent; timings are CPU + structural transfers)")
 
     print("\n(paper Table 5: SMMF ~1.2-1.6x Adam end-to-end; optimizer-only "
           "overhead is the bound. CPU timings; TPU uses the fused Pallas kernel.)")

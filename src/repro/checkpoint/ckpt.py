@@ -20,6 +20,13 @@ ordinary leaves, and fp8 payloads are **bit-preserved** — saved as uint8
 views (``np.savez`` cannot round-trip ml_dtypes float8) with the true
 dtype recorded in the manifest, and viewed back on restore. Elastic
 restore re-shards payload and scale leaves like any other state.
+
+Host-offloaded state (``repro.optim.offload``) is checkpoint-transparent:
+cold buckets parked on pinned-host memory save as the same host numpy
+leaves, and the manifest records their non-default memory kinds for
+observability only — restore always materializes on default device memory
+(the training loop's ``place_state`` hook re-parks cold buckets), so the
+checkpoint stays portable across backends with different memory tiers.
 """
 
 from __future__ import annotations
@@ -58,6 +65,24 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     return flat
 
 
+def _memory_kinds(tree: PyTree) -> dict[str, str]:
+    """Non-default memory kinds by leaf name (host-offloaded optimizer
+    state, ``repro.optim.offload``). Recorded in the manifest purely for
+    observability — restore placement is driven by the caller's shardings
+    (plus ``TrainLoop.place_state``), never by the writer's memory tiering,
+    so a checkpoint written with ``--offload cold`` restores cleanly on a
+    host with no host memory kind at all."""
+    from repro.optim.offload import default_memory_kind
+
+    default = default_memory_kind()
+    kinds: dict[str, str] = {}
+    for name, leaf in zip(_flatten(tree), jax.tree_util.tree_leaves(tree)):
+        kind = getattr(getattr(leaf, "sharding", None), "memory_kind", None)
+        if kind is not None and kind != default:
+            kinds[name] = kind
+    return kinds
+
+
 def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = None,
          spec_hash: str | None = None) -> Path:
     """Atomically write checkpoint for `step`. Returns the final directory.
@@ -87,6 +112,9 @@ def save(ckpt_dir: str | Path, step: int, state: PyTree, extra: dict | None = No
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
         "extra": extra or {},
     }
+    kinds = _memory_kinds(state)
+    if kinds:
+        manifest["memory_kinds"] = kinds
     if spec_hash is not None:
         manifest["spec_hash"] = spec_hash
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))

@@ -222,6 +222,55 @@ def build_buckets(
 
 
 # ---------------------------------------------------------------------------
+# bucket schedules (dispatch order of the per-bucket update launches)
+# ---------------------------------------------------------------------------
+
+def grad_ready_rank(bucket: Bucket) -> int:
+    """Reverse-mode readiness key of a bucket: the *minimum* flat-leaf
+    index among its plans.
+
+    A bucket's stacked update can only start once every one of its leaves
+    has a gradient. Reverse-mode AD emits gradients roughly in reverse
+    forward (flatten) order, so the leaf that gates a bucket is its
+    lowest-index one — the earliest in the forward pass, whose gradient
+    arrives **last** in the backward. Buckets with a *high* minimum index
+    are therefore fully ready while the backward is still working through
+    the earlier layers.
+    """
+    return min(p.index for p in bucket.plans)
+
+
+def bucket_schedule(buckets: Sequence[Bucket],
+                    order: str | None = "plan") -> tuple[int, ...]:
+    """Dispatch order (a permutation of bucket positions) for the engine's
+    per-bucket update launches.
+
+    * ``"plan"`` / ``None`` — construction order (the barrier baseline:
+      whatever order :func:`build_buckets` emitted);
+    * ``"grad"`` — reverse-mode gradient-availability order: descending
+      :func:`grad_ready_rank`, ties broken by construction position. Under
+      this order the update chain walks the buckets in the same order the
+      backward finishes their gradients, so a scheduler that interleaves
+      the chained updates with the remaining backward compute
+      (``repro.optim.spec`` emits ``lax.optimization_barrier`` links)
+      always has a ready bucket to overlap — bucket *i*'s scatter
+      transport hides behind bucket *i+1*'s (and the backward's) compute.
+
+    Pure static plan math: same buckets + same order string → the same
+    permutation, so a scheduled update is a deterministic re-emission (and
+    bitwise-identical — see ``tests/test_overlap_offload.py``) of the
+    barrier-order program.
+    """
+    if order in (None, "plan"):
+        return tuple(range(len(buckets)))
+    if order == "grad":
+        return tuple(sorted(range(len(buckets)),
+                            key=lambda i: (-grad_ready_rank(buckets[i]), i)))
+    raise ValueError(f"unknown bucket schedule {order!r} "
+                     "(want 'plan', 'grad', or None)")
+
+
+# ---------------------------------------------------------------------------
 # per-bucket partition wants (mesh placement of the stacked state)
 # ---------------------------------------------------------------------------
 

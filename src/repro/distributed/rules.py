@@ -152,8 +152,17 @@ def param_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTree) -
 # optimizer state shardings
 # ---------------------------------------------------------------------------
 
-def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTree, opt) -> PyTree:
+def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTree, opt,
+                        offload: str | None = None) -> PyTree:
     """Shardings for an optimizer state built by ``opt.init(params)``.
+
+    **Host offload** (``repro.optim.offload``): ``offload="cold"`` re-kinds
+    the cold (quantized) buckets' shardings onto the pinned-host memory
+    tier after the per-kind placement below, so a jitted step's boundary —
+    and an elastic checkpoint restore — put those payloads on host memory
+    directly. Placement-only, like the ``state_sharding`` override: the
+    specs (and therefore the state layout/keys) are unchanged. No-op on
+    backends without a distinct host memory kind.
 
     Bucket-stacked state is **sharded, not replicated** (the PR-1 layout
     replicated every stack axis; docs/sharding.md documents the contract):
@@ -280,7 +289,15 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
 
     from repro.utils.tree import tree_map_with_path
 
-    return tree_map_with_path(_one, state_shape)
+    out = tree_map_with_path(_one, state_shape)
+    if offload is not None:
+        from repro.optim import offload as O
+
+        plan = getattr(opt, "plan", None)
+        if O.check_mode(offload) is not None and plan is not None:
+            out = O.offload_shardings(out, state_shape, plan(params_shape),
+                                      offload)
+    return out
 
 
 def _bucket_key_index(path: str) -> tuple[int | None, list[str]]:
@@ -358,6 +375,54 @@ def sharded_state_bytes_by_group(shardings: PyTree, state_shape: PyTree,
         shard = sh.shard_shape(tuple(leaf.shape))
         out[group] += int(np.prod(shard)) * np.dtype(leaf.dtype).itemsize
     return out
+
+
+# ---------------------------------------------------------------------------
+# XLA concatenate-partitioning miscompile probe (PR 4 boundary guard)
+# ---------------------------------------------------------------------------
+
+# Last jaxlib minor version where the override-axis gather-stack miscompile
+# is known to reproduce (XLA partitions the stack as partial writes +
+# all-reduce and over-counts replicated operands by the replication
+# factor; observed through jaxlib 0.4.x). A jaxlib bump past this gate
+# retires the replicated-boundary pin for override groups — the
+# fully-sharded transport path — and the regression test
+# (tests/test_multiaxis_sharding.py + tests/_concat_probe_child.py)
+# asserts the *actual* behavior still agrees with this version gate, so a
+# bump that fixes XLA flips the test and forces the gate (and the guard)
+# to be updated rather than silently keeping the conservative boundary.
+_CONCAT_MISCOMPILE_LAST_BAD = (0, 4)
+
+
+def xla_concat_miscompile_present() -> bool:
+    """True when the installed XLA (via jaxlib) is a version on which the
+    concatenate-partitioning miscompile reproduces (see
+    ``_CONCAT_MISCOMPILE_LAST_BAD`` and docs/sharding.md). Gates the
+    ``"opt_update_row"`` replicated boundary for ``state_sharding``
+    override groups and its ``boundary_transport_bytes`` pricing."""
+    import jaxlib
+
+    ver = tuple(int(x) for x in jaxlib.__version__.split(".")[:2])
+    return ver <= _CONCAT_MISCOMPILE_LAST_BAD
+
+
+def _override_boundary_needed(stack: int, over, axis_sizes: dict[str, int]) -> bool:
+    """Shared predicate for the ``"opt_update_row"`` rule and its transport
+    pricing: does this bucket's transient gather/scatter row need the
+    replicated boundary pin?
+
+    * stack not sharded over its (possibly overridden) chain → yes (no
+      layout the row↔param reshape can preserve);
+    * stack sharded over a per-group *override* chain → only while the
+      XLA concatenate miscompile is present (the PR 4 guard, retried and
+      version-gated here — PR 6); on fixed XLA the override group keeps
+      the fully-sharded zero-collective transport like the default chain.
+    """
+    from repro.core.plan import DEFAULT_STACK_AXES, stack_axes
+
+    if not stack_axes(stack, axis_sizes, tuple(over) if over else DEFAULT_STACK_AXES):
+        return True
+    return over is not None and xla_concat_miscompile_present()
 
 
 # ---------------------------------------------------------------------------
@@ -454,26 +519,31 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
             #   rematerialization (which CHECK-crashes on stacked-scan
             #   leaves, see docs/sharding.md);
             # * buckets on a per-group ``state_sharding`` OVERRIDE chain
-            #   also take the replicated boundary: partitioning the gather
-            #   stack directly onto an override axis while the other mesh
-            #   axes hold replicas miscompiles in XLA (the stack lowers to
+            #   take the replicated boundary only while the installed XLA
+            #   still miscompiles the partitioned concatenate
+            #   (:func:`xla_concat_miscompile_present`): partitioning the
+            #   gather stack directly onto an override axis while the
+            #   other mesh axes hold replicas lowers the stack to
             #   dynamic-update-slice + all-reduce and over-counts by the
             #   replication factor — locked down by
-            #   tests/_multiaxis_child.py). The persistent state still
-            #   lives sharded on the override axis; only the transient
-            #   gather/scatter rows go through the replicated pin, after
-            #   which the explicit smmf_* constraints slice them out.
+            #   tests/_multiaxis_child.py, reproduced on demand by
+            #   tests/_concat_probe_child.py. On fixed XLA the override
+            #   group keeps the fully-sharded transport. While guarded,
+            #   the persistent state still lives sharded on the override
+            #   axis; only the transient gather/scatter rows go through
+            #   the replicated pin, after which the explicit smmf_*
+            #   constraints slice them out.
             #
-            # Default-chain stack-sharded buckets return None and keep the
-            # fully-sharded, zero-collective path.
-            from repro.core.plan import DEFAULT_STACK_AXES, stack_axes
+            # Stack-sharded buckets otherwise return None and keep the
+            # fully-sharded, zero-collective path. The `no_opt_boundary`
+            # perf flag drops ONLY this pin (state constraints stay) — the
+            # A/B hatch the miscompile probe child uses.
             from repro.models.perf import flags as _pf
 
-            if _pf().smmf_no_constraint:
+            if _pf().smmf_no_constraint or _pf().no_opt_boundary:
                 return None
             stack, over = meta if meta else (1, None)
-            if over is None and stack_axes(stack, mesh_axis_sizes(mesh),
-                                           DEFAULT_STACK_AXES):
+            if not _override_boundary_needed(stack, over, mesh_axis_sizes(mesh)):
                 return None
             return NamedSharding(mesh, P())
         if kind == "qscale" and ndim == 2:
@@ -525,29 +595,32 @@ def boundary_transport_bytes(engine, axis_sizes: dict[str, int]) -> dict:
 
     A bucket whose stack axis is *not* sharded over the default
     ``("pod", "data")`` chain — or that carries a per-group
-    ``state_sharding`` override — routes its transient gather/scatter rows
-    through an explicit replicated pin instead of leaving the SPMD
-    partitioner to invent a grouped sharding. This function prices that
-    choice: per such bucket, the f32 gather row plus the scatter row
-    (``2 × 4 × numel``), and for momentum-SMMF factored buckets
-    (``plan.momentum`` — beta1=None buckets have no sign matrix and never
-    take those boundaries) the two additional sign pack/unpack crossings
-    (another ``2 × 4 × numel``). Stack-sharded default-chain buckets
-    transport 0.
+    ``state_sharding`` override *while the XLA concatenate miscompile is
+    present* (:func:`xla_concat_miscompile_present`; on fixed XLA override
+    groups keep the fully-sharded transport and price 0) — routes its
+    transient gather/scatter rows through an explicit replicated pin
+    instead of leaving the SPMD partitioner to invent a grouped sharding.
+    This function prices that choice: per such bucket, the f32 gather row
+    plus the scatter row (``2 × 4 × numel``), and for momentum-SMMF
+    factored buckets (``plan.momentum`` — beta1=None buckets have no sign
+    matrix and never take those boundaries) the two additional sign
+    pack/unpack crossings (another ``2 × 4 × numel``). Stack-sharded
+    default-chain buckets transport 0.
+
+    Under an overlapped schedule (``make_train_step(overlap=True)``) these
+    bytes are exactly the transport XLA hides behind the remaining
+    backward's matmuls — the ``transport`` column of
+    ``benchmarks/step_time.py`` prices what the interleave overlaps.
 
     Returns ``{"total": bytes, "by_group": {label: bytes}}`` — the
     ``transport`` column of ``benchmarks/step_time.py``. Pure plan math
     over a ``LeafPlanEngine`` (no mesh or arrays needed): ``axis_sizes``
     is the hypothetical mesh, e.g. ``{"data": 4}``.
     """
-    from repro.core.plan import DEFAULT_STACK_AXES, stack_axes
-
     total = 0
     by_group: dict[str, int] = {}
     for bk in engine.buckets:
-        over = bk.state_axes
-        if over is None and stack_axes(bk.stack, axis_sizes,
-                                       DEFAULT_STACK_AXES):
+        if not _override_boundary_needed(bk.stack, bk.state_axes, axis_sizes):
             continue  # fully stack-sharded: zero-collective path
         numel = sum(p.numel for p in bk.plans)
         crossings = 2  # gather row in, scatter row out

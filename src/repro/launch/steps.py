@@ -51,7 +51,8 @@ def optimizer_launch_stats(opt: GradientTransformation, params: PyTree) -> dict 
     return engine_stats(opt, params)
 
 
-def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1):
+def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1,
+                    overlap: bool = False, offload: str | None = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     The returned step is **donation-safe**: the non-finite-loss guard runs
@@ -62,8 +63,28 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
     dim is split into that many sequential microbatches (gradients averaged
     in f32); the accumulation buffer lives inside the jit so gradient
     donation composes with accumulation.
+
+    ``overlap=True`` threads the engine's ``schedule="grad"`` through the
+    optimizer update: per-bucket launches are emitted in reverse-mode
+    gradient-availability order and chained with optimization-barrier
+    links, so XLA's latency-hiding scheduler interleaves bucket
+    gather→update→scatter (and its boundary transport —
+    ``rules.boundary_transport_bytes``) with the remaining backward
+    compute. Bitwise-identical to the barrier step and donation-safe
+    (``docs/architecture.md``). ``offload="cold"`` adds the host tier for
+    quantized buckets (``repro.optim.offload``): double-buffered prefetch
+    one bucket ahead, park after re-encode. Both are execution-only knobs —
+    spec-built (engine) optimizers honor them, plain transforms ignore the
+    extras per the widened update protocol.
     """
     loss_fn = loss_fn_for(cfg)
+    from repro.optim.offload import check_mode
+
+    upd_extras: dict = {}
+    if overlap:
+        upd_extras["schedule"] = "grad"
+    if check_mode(offload) is not None:
+        upd_extras["offload"] = offload
 
     def train_step(params, opt_state, batch):
         def compute(p, b):
@@ -93,7 +114,8 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
         else:
             (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params, batch)
 
-        updates, new_opt_state = opt.update(grads, opt_state, params)
+        updates, new_opt_state = opt.update(grads, opt_state, params,
+                                            **upd_extras)
         new_params = apply_updates(params, updates)
         # in-jit divergence guard (paper Sec. 6 loss spikes): on a
         # non-finite loss keep the previous params/optimizer state. Done
@@ -208,14 +230,17 @@ def assert_donation(lowered, compiled, min_alias_fraction: float = 0.5) -> dict:
 # mesh-aware lowering helpers (used by dryrun + real launchers)
 # ---------------------------------------------------------------------------
 
-def shardings_for_cell(mesh, cfg: ModelConfig, kind: str, opt=None, shape=None):
-    """(in_shardings pytree factory) for each step kind."""
+def shardings_for_cell(mesh, cfg: ModelConfig, kind: str, opt=None, shape=None,
+                       offload: str | None = None):
+    """(in_shardings pytree factory) for each step kind. ``offload`` re-kinds
+    the train cell's cold optimizer-state shardings onto the host memory
+    tier (``rules.opt_state_shardings(offload=...)``)."""
     from repro.launch import specs as S
 
     p_sds = S.params_specs(cfg)
     p_sh = rules.param_shardings(mesh, cfg, p_sds)
     if kind == "train":
-        o_sh = rules.opt_state_shardings(mesh, cfg, p_sds, opt)
+        o_sh = rules.opt_state_shardings(mesh, cfg, p_sds, opt, offload=offload)
         b_sh = rules.batch_shardings(mesh, S.train_batch_specs(cfg, shape))
         return (p_sh, o_sh, b_sh)
     if kind == "prefill":
@@ -227,11 +252,14 @@ def shardings_for_cell(mesh, cfg: ModelConfig, kind: str, opt=None, shape=None):
     return (p_sh, b_sh, c_sh)
 
 
-def lower_cell(mesh, cfg: ModelConfig, shape, opt=None, donate: bool = True):
+def lower_cell(mesh, cfg: ModelConfig, shape, opt=None, donate: bool = True,
+               overlap: bool = False, offload: str | None = None):
     """Lower (not compile) one (arch x shape) cell's step on `mesh`.
 
     Returns the jax.stages.Lowered object. Tracing runs inside the
     activation-rule context so with_sharding_constraint ops are baked in.
+    ``overlap``/``offload`` thread the scheduled/host-tier execution knobs
+    into the train cell (see :func:`make_train_step`).
     """
     from repro.launch import specs as S
 
@@ -243,8 +271,9 @@ def lower_cell(mesh, cfg: ModelConfig, shape, opt=None, donate: bool = True):
     # ambient-mesh context is required
     with sharding_ctx(rule):
         if shape.kind == "train":
-            step = make_train_step(cfg, opt)
-            in_sh = shardings_for_cell(mesh, cfg, "train", opt=opt, shape=shape)
+            step = make_train_step(cfg, opt, overlap=overlap, offload=offload)
+            in_sh = shardings_for_cell(mesh, cfg, "train", opt=opt, shape=shape,
+                                       offload=offload)
             o_sds = jax.eval_shape(opt.init, p_sds)
             b_sds = S.train_batch_specs(cfg, shape)
             fn = jax.jit(

@@ -121,6 +121,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="split the batch into N sequential microbatches "
                          "(gradient accumulation inside the jitted step)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped optimizer step: emit per-bucket updates "
+                         "in reverse-mode gradient-availability order, "
+                         "chained with optimization-barrier links so XLA "
+                         "interleaves them with the remaining backward "
+                         "(bitwise-identical to the barrier order)")
+    ap.add_argument("--offload", default="none", choices=("cold", "none"),
+                    help="host-offload tier for optimizer state: 'cold' "
+                         "parks quantized buckets' payloads on pinned-host "
+                         "memory with double-buffered device prefetch one "
+                         "bucket ahead (structural no-op on backends "
+                         "without a host memory kind, e.g. CPU)")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable params/opt-state buffer donation (debug)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
@@ -156,6 +168,26 @@ def main() -> None:
     opt = build_optimizer(spec, params)
     opt_state = opt.init(params)
 
+    from repro.optim import offload as offload_mod
+
+    offload = offload_mod.check_mode(args.offload)
+    place_state = None
+    if offload is not None:
+        if not hasattr(opt, "plan"):
+            raise SystemExit(f"--offload {args.offload} needs an engine-backed "
+                             f"optimizer (--opt {args.opt} has no bucket plan)")
+        engine = opt.plan(params)
+        place_state = lambda st: offload_mod.place_host(st, engine, offload)
+        opt_state = place_state(opt_state)
+        split = offload_mod.state_bytes_split(
+            engine, jax.eval_shape(lambda s: s, opt_state), offload)
+        cold = offload_mod.cold_keys(engine, offload)
+        mode_note = ("async pinned-host tier" if offload_mod.supported()
+                     else "structural (backend has no host memory kind)")
+        print(f"[train] offload=cold: {len(cold)} cold buckets, "
+              f"device {split['device']/1e6:.3f}MB / host {split['host']/1e6:.3f}MB "
+              f"({mode_note})")
+
     from repro.utils.tree import tree_bytes
 
     print(f"[train] param bytes {tree_bytes(params)/1e6:.2f}MB, "
@@ -187,9 +219,15 @@ def main() -> None:
 
         kernel_launches0 = _kops.KERNEL_LAUNCHES
 
+    if args.overlap:
+        sched = opt.plan(params).schedule("grad") if hasattr(opt, "plan") else None
+        print(f"[train] overlap: bucket updates interleaved with the backward "
+              f"(schedule {sched})")
+
     stream = SyntheticLMStream(cfg, args.batch, args.seq, seed=args.seed)
     donate = () if args.no_donate else (0, 1)
-    step_fn = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum),
+    step_fn = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum,
+                                      overlap=args.overlap, offload=offload),
                       donate_argnums=donate)
     # AOT-compile against the real shapes so the donation contract can be
     # checked (jax.stages args_info + the executable's alias table) before
@@ -207,6 +245,7 @@ def main() -> None:
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir, log_every=10,
                         spec_hash=spec_hash),
+        place_state=place_state,
     )
     out = loop.run()
     if args.use_kernel:

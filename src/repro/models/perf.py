@@ -49,6 +49,12 @@ class PerfFlags:
     # drop the explicit 2-D sharding constraint on the square-matricized
     # momentum (let GSPMD propagate through the reshape instead)
     smmf_no_constraint: bool = False
+    # drop ONLY the "opt_update_row" replicated boundary pin (the smmf_*
+    # state constraints stay): the A/B hatch that reproduces the XLA
+    # concatenate-partitioning miscompile on override-sharded groups
+    # (tests/_concat_probe_child.py) — the behavior probe behind the
+    # version-gated guard retirement in distributed/rules.py
+    no_opt_boundary: bool = False
     # row-parallel matmul partial sums reduced in bf16 (halves the TP
     # all-reduce bytes; numerics note in EXPERIMENTS.md)
     bf16_rowparallel_reduce: bool = False

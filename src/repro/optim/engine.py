@@ -51,7 +51,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import Bucket, LeafPlan, build_buckets
+from repro.core.plan import Bucket, LeafPlan, bucket_schedule, build_buckets
 from repro.distributed.ctx import constrain, constrain_update
 
 PyTree = Any
@@ -168,6 +168,20 @@ class LeafPlanEngine:
             seg = constrain(stacked[k], "opt_update_row",
                             meta=(bucket.stack, bucket.state_axes))
             out_flat[p.index] = constrain_update(seg.reshape(p.shape), p.index)
+
+    # -- scheduling --------------------------------------------------------
+
+    def schedule(self, order: str | None = "plan") -> tuple[int, ...]:
+        """Dispatch order of the per-bucket update launches (a permutation
+        of ``range(len(self.buckets))``; :func:`repro.core.plan.bucket_schedule`).
+
+        ``"plan"``/None is the construction-order barrier baseline;
+        ``"grad"`` orders buckets by reverse-mode gradient availability so
+        the scheduled update chain (``repro.optim.spec``) interleaves with
+        the remaining backward compute. Static plan math — the order is
+        baked in at trace time and never changes values.
+        """
+        return bucket_schedule(self.buckets, order)
 
     # -- introspection -----------------------------------------------------
 

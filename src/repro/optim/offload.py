@@ -1,0 +1,249 @@
+"""Host-offload tier for cold quantized optimizer state.
+
+AdaPM's partial-momentum observation — most optimizer state is *cold*
+most of the step — composes naturally with the qstate codec
+(``repro.optim.qstate``): a quantized bucket's persistent payload is
+1 byte/element, so round-tripping it over PCIe once per step costs far
+less than keeping it resident in HBM. This module implements that tier:
+
+* **cold policy** — a bucket is cold exactly when its group stores
+  quantized state (``Bucket.quant``); opting a group into ``quant`` is the
+  repo's declaration that its state tolerates a storage tier
+  (:func:`is_cold`, mode ``"cold"``; mode ``None`` offloads nothing);
+* **at-rest placement** — cold buckets' state subtrees live on the host
+  memory kind between steps (:func:`place_host` outside jit,
+  :func:`offload_shardings` for jit in/out shardings and elastic
+  checkpoint restore);
+* **in-step round-trip** — the scheduled update loop
+  (``repro.optim.spec``) calls :func:`fetch` (host → device) when a cold
+  bucket's turn comes and :func:`park` (device → host) on its fresh
+  state, emitting the *next* cold bucket's fetch one position ahead
+  (double-buffering): with the async transfer streams of a real
+  accelerator the prefetch of bucket *i+1* hides behind bucket *i*'s
+  update math;
+* **capability probe** — host memory kinds are a backend capability
+  (``pinned_host`` on TPU/GPU jaxlib builds; the CPU backend only exposes
+  its default ``unpinned_host``). :func:`supported` probes once;
+  unsupported backends run the tier *structurally* (placement and
+  transfers are identity, the schedule and double-buffer emission are
+  unchanged), so CPU tests exercise the exact program shape that runs on
+  device. The **accounting** (:func:`state_bytes_split`,
+  :func:`transport_bytes`) is analytic plan math keyed only on the cold
+  policy, so device-HBM numbers are backend-independent.
+
+Donation safety: fetch/park are ``jax.device_put`` ops — every cold
+state array is still consumed exactly once and returned with identical
+shape/dtype, so ``donate_argnums`` keeps aliasing the resident (hot)
+buffers; cold buffers round-trip through the transfer engine instead of
+aliasing in place. Checkpoint transparency: the state pytree is
+unchanged (one logical state — keys, shapes, dtypes identical), so
+``repro.checkpoint.ckpt`` saves and restores it through the ordinary
+path-keyed flow; restoring onto :func:`offload_shardings` re-parks cold
+payloads on the host tier directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import numpy as np
+
+try:  # public alias appears in newer jax; 0.4.x keeps it private
+    from jax.sharding import TransferToMemoryKind  # type: ignore
+except ImportError:  # pragma: no cover - version-dependent import path
+    try:
+        from jax._src.sharding_impls import TransferToMemoryKind
+    except ImportError:
+        TransferToMemoryKind = None
+
+PyTree = Any
+
+MODES = (None, "cold")
+
+# The host-side memory kind this tier parks cold state on. Real
+# accelerator backends expose it as "pinned_host" (DMA-able, required for
+# async device prefetch); the CPU backend's only kind is its default
+# "unpinned_host", which makes every transfer an identity — the
+# structural-fallback case.
+HOST_KIND = "pinned_host"
+
+
+def check_mode(mode: str | None) -> str | None:
+    """Validate an offload mode (``None`` | ``"cold"``; "none" lifts to
+    None so the CLI surface can use a plain string choice)."""
+    if mode == "none":
+        mode = None
+    if mode not in MODES:
+        raise ValueError(f"unknown offload mode {mode!r} (want one of {MODES})")
+    return mode
+
+
+@functools.cache
+def _memory_kinds() -> tuple[str, ...]:
+    try:
+        dev = jax.devices()[0]
+        return tuple(m.kind for m in dev.addressable_memories())
+    except Exception:  # pragma: no cover - exotic backends without memories API
+        return ()
+
+
+@functools.cache
+def default_memory_kind() -> str | None:
+    """The backend's default (device-resident) memory kind — "device" on
+    TPU/GPU, "unpinned_host" on the CPU backend."""
+    try:
+        return jax.devices()[0].default_memory().kind
+    except Exception:  # pragma: no cover
+        return None
+
+
+def supported() -> bool:
+    """True when the backend exposes a distinct pinned-host memory kind
+    (so transfers actually move bytes off HBM). False on the CPU backend:
+    the tier then runs structurally — same program shape, identity
+    placement — while the analytic accounting stays exact."""
+    return TransferToMemoryKind is not None and HOST_KIND in _memory_kinds() \
+        and HOST_KIND != default_memory_kind()
+
+
+# ---------------------------------------------------------------------------
+# cold policy
+# ---------------------------------------------------------------------------
+
+def is_cold(bucket, mode: str | None) -> bool:
+    """True when ``bucket``'s persistent state parks on the host tier:
+    mode ``"cold"`` offloads exactly the quantized buckets (1-byte
+    payloads — cheap to round-trip), ``None`` offloads nothing."""
+    return check_mode(mode) == "cold" and bucket.quant is not None
+
+
+def cold_keys(engine, mode: str | None) -> frozenset[str]:
+    """Bucket keys of the engine's cold buckets under ``mode``."""
+    return frozenset(bk.key for bk in engine.buckets if is_cold(bk, mode))
+
+
+# ---------------------------------------------------------------------------
+# in-step round-trip (traceable; identity on unsupported backends)
+# ---------------------------------------------------------------------------
+
+def fetch(tree: PyTree) -> PyTree:
+    """Host → device transfer of one cold bucket's state subtree (emitted
+    one bucket ahead by the scheduled update loop — the double-buffered
+    prefetch). Traceable inside jit via ``TransferToMemoryKind``."""
+    if not supported():
+        return tree
+    return jax.device_put(tree, TransferToMemoryKind(default_memory_kind()))
+
+
+def park(tree: PyTree) -> PyTree:
+    """Device → host transfer of one cold bucket's fresh state (the write
+    half of the round-trip; the returned arrays are what the step hands
+    back, so the at-rest state stays on the host tier across steps)."""
+    if not supported():
+        return tree
+    return jax.device_put(tree, TransferToMemoryKind(HOST_KIND))
+
+
+# ---------------------------------------------------------------------------
+# at-rest placement (outside jit / for jit boundary shardings)
+# ---------------------------------------------------------------------------
+
+def place_host(state, engine, mode: str | None):
+    """Park the cold buckets' state subtrees on the host memory kind
+    (outside jit — initial placement after ``init`` or checkpoint
+    restore). Identity for mode None or on unsupported backends."""
+    if check_mode(mode) is None or not supported():
+        return state
+    cold = cold_keys(engine, mode)
+    factors = {
+        k: (jax.device_put(v, TransferToMemoryKind(HOST_KIND)) if k in cold
+            else v)
+        for k, v in state.factors.items()
+    }
+    return type(state)(state.step, factors)
+
+
+def offload_shardings(shardings, state_shape, engine, mode: str | None):
+    """Re-kind a state shardings pytree for the offload tier: cold
+    buckets' leaves get ``with_memory_kind(HOST_KIND)`` so a jitted step's
+    in/out shardings — and an elastic checkpoint restore
+    (``repro.checkpoint.ckpt.restore(shardings=...)``) — place them on
+    host directly. ``state_shape``/``shardings`` mirror ``opt.init``'s
+    pytree. Identity for mode None or on unsupported backends.
+    """
+    if check_mode(mode) is None or not supported():
+        return shardings
+    cold = cold_keys(engine, mode)
+
+    def _one(path, sh):
+        if _cold_path(path, cold):
+            return sh.with_memory_kind(HOST_KIND)
+        return sh
+
+    from repro.utils.tree import tree_map_with_path
+
+    del state_shape  # structure mirrors `shardings`; kept for call symmetry
+    return tree_map_with_path(_one, shardings)
+
+
+def _cold_path(path: str, cold: frozenset[str]) -> bool:
+    """True when a '/'-joined state-leaf path belongs to a cold bucket.
+
+    Mirrors ``rules._bucket_key_index``: the bucket key is the last
+    ``fac:``/``dense:`` segment, optionally group-prefixed by the segment
+    before it (group labels cannot contain ':'); containers above it
+    (``factors``) and slot paths below (``.../0/q``) are ignored."""
+    import re
+
+    parts = [p.lstrip(".") for p in path.split("/")]
+    key_i = None
+    for i, p in enumerate(parts):
+        if re.match(r"(fac|dense):", p):
+            key_i = i
+    if key_i is None:
+        return False
+    if parts[key_i] in cold:
+        return True
+    return key_i >= 1 and f"{parts[key_i - 1]}/{parts[key_i]}" in cold
+
+
+# ---------------------------------------------------------------------------
+# analytic accounting (pure plan math; backend-independent)
+# ---------------------------------------------------------------------------
+
+def state_bytes_split(engine, state_shape, mode: str | None,
+                      shardings=None) -> dict[str, int]:
+    """Device-resident vs host-resident optimizer-state bytes under
+    ``mode``: ``{"device": .., "host": ..}`` (their sum is the total state
+    footprint). With ``shardings`` the numbers are **per-device** (each
+    leaf's shard size, spec math like ``rules.sharded_state_bytes``);
+    without, totals. Keyed purely on the cold policy, so the device-HBM
+    claim of the offload tier (``BENCH_opt_memory.json``'s offload rows,
+    asserted by ``tools/bench_compare.py``) holds on any backend.
+    """
+    check_mode(mode)
+    cold = cold_keys(engine, mode)
+    flat = jax.tree_util.tree_flatten_with_path(state_shape)[0]
+    flat_sh = jax.tree.leaves(shardings) if shardings is not None \
+        else [None] * len(flat)
+    out = {"device": 0, "host": 0}
+    for (path, leaf), sh in zip(flat, flat_sh):
+        name = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path)
+        shape = tuple(leaf.shape)
+        if sh is not None:
+            shape = sh.shard_shape(shape)
+        nbytes = int(np.prod(shape)) * np.dtype(leaf.dtype).itemsize
+        out["host" if _cold_path(name, cold) else "device"] += nbytes
+    return out
+
+
+def transport_bytes(engine, state_shape, mode: str | None) -> int:
+    """Host↔device bytes one scheduled step moves for the offload tier:
+    every cold bucket's state subtree crosses twice (prefetch in, park
+    out). The PCIe-side price of the HBM the tier frees — reported next to
+    ``rules.boundary_transport_bytes`` in ``benchmarks/step_time.py``."""
+    split = state_bytes_split(engine, state_shape, mode)
+    return 2 * split["host"]

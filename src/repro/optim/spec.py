@@ -35,12 +35,27 @@ constraints, and donation safety as a single-family one.
 
 The update protocol is the widened extra-args form::
 
-    update(grads, state, params, *, step=None, **extras)
+    update(grads, state, params, *, step=None, schedule=None, offload=None,
+           **extras)
 
 with ONE shared step counter in :class:`EngineState` (instead of a private
 counter per family) — checkpoint-resume, donation, and every group's
 schedule read the same step source; passing ``step=`` explicitly overrides
 it (e.g. to re-line a restored state onto a trusted external counter).
+
+``schedule``/``offload`` are **execution-only** knobs (never part of the
+spec, so :meth:`OptimizerSpec.spec_hash` and the state layout are
+untouched). ``schedule="grad"`` re-emits the per-bucket updates in
+reverse-mode gradient-availability order and chains them with
+``lax.optimization_barrier`` links, so XLA's latency-hiding scheduler can
+interleave each bucket's gather→update→scatter with the still-running
+backward — bitwise-identical to the barrier order (the links are value
+identities and every bucket's math is self-contained).
+``offload="cold"`` routes quantized buckets' state through the host
+tier (``repro.optim.offload``): each cold bucket's subtree is prefetched
+host→device one schedule position ahead (double-buffered) and parked back
+after its re-encode — one logical state, donation- and
+checkpoint-transparent.
 
 Specs round-trip through :meth:`OptimizerSpec.to_json` /
 :meth:`OptimizerSpec.from_json`; :meth:`OptimizerSpec.spec_hash` is stored
@@ -525,8 +540,11 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             factors[bk.key] = raw
         return EngineState(jnp.zeros((), jnp.int32), factors)
 
-    def update(grads, state, params, *, step=None, **extras):
+    def update(grads, state, params, *, step=None, schedule=None,
+               offload=None, **extras):
         del extras  # forward-compat: callers may thread e.g. loss scales
+        from repro.optim import offload as O
+
         engine = _engine(params)
         new_step = state.step + 1 if step is None else jnp.asarray(step, jnp.int32)
         t = new_step.astype(jnp.float32)
@@ -548,12 +566,40 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             if p.freeze:  # no state, zero update
                 out_flat[p.index] = jnp.zeros(p.shape, jnp.float32)
 
+        # dispatch order + interleave links (module docstring): under a
+        # schedule the buckets are emitted in grad-availability order and
+        # chained through lax.optimization_barrier — a value identity that
+        # orders bucket i's update before bucket i+1's gather, giving the
+        # latency-hiding scheduler an overlap-friendly serialization
+        # instead of one flat all-at-the-end update block
+        order = engine.schedule(schedule)
+        chained = schedule is not None
+        cold = O.cold_keys(engine, offload)
+        token = t  # barrier-chain carrier (any tiny already-live scalar)
+
+        # double-buffered host prefetch: emit the fetch for the cold bucket
+        # at schedule position `pos` (one position AHEAD of the bucket
+        # being updated, so the transfer overlaps the current bucket's math)
+        fetched: dict = {}
+
+        def _prefetch(pos: int) -> None:
+            if pos < len(order):
+                nxt = engine.buckets[order[pos]]
+                if nxt.key in cold:
+                    fetched[nxt.key] = O.fetch(state.factors[nxt.key])
+
+        _prefetch(0)
         factors = {}
-        for bk in engine.buckets:
+        for j, pos in enumerate(order):
+            bk = engine.buckets[pos]
             g = _group_of(bk)
             ctx = F.UpdateCtx(step=new_step, t=t, hp=g.hp)
+            st = fetched.pop(bk.key) if bk.key in cold \
+                else state.factors[bk.key]
+            _prefetch(j + 1)
             gm = engine.gather(flat_g, bk)
-            st = state.factors[bk.key]
+            if chained:
+                gm, token = jax.lax.optimization_barrier((gm, token))
             # qstate codec (repro.optim.qstate): dequantize stored slots at
             # gather, run the family math in f32, re-quantize with
             # stochastic rounding at scatter (kernel_deq slots skip the
@@ -566,7 +612,11 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             if slots is not None:
                 new_st = qstate.encode(slots, bk, g.hp, new_st,
                                        qstate.update_key(new_step, bk))
+            if bk.key in cold:
+                new_st = O.park(new_st)
             factors[bk.key] = new_st
+            if chained:
+                u, token = jax.lax.optimization_barrier((u, token))
             engine.scatter(bk, -g.lr_fn(new_step) * u, out_flat)
 
         # decoupled ("adamw" mode, paper Algo 7) weight decay, per group

@@ -13,6 +13,14 @@ Production behaviours implemented (and simulated/tested on CPU):
   optimizer state are kept from the previous step) and is counted —
   the SMMF paper's loss-spike discussion (Sec. 6) motivates this guard.
 
+Host-offload tier (``repro.optim.offload``): the loop is placement-agnostic
+— cold optimizer-state buckets parked on host memory flow through
+checkpoint save (host numpy either way) and the step unchanged. The one
+placement-sensitive moment is **resume**: ``restore`` re-materializes
+state on the default device memory, so a caller running ``--offload``
+passes ``place_state`` (applied to the restored opt state) to re-park the
+cold buckets before the first step.
+
 Donation contract: the loop always adopts whatever (params, opt_state) the
 step function returns and never touches the pre-call buffers again, so
 ``step_fn`` may be jitted with ``donate_argnums=(0, 1)`` (or be an AOT
@@ -63,6 +71,7 @@ class TrainLoop:
         stream,                        # .batch(step) -> dict
         cfg: TrainLoopConfig,
         shardings: tuple | None = None,
+        place_state: Callable | None = None,  # opt_state -> opt_state, post-restore
     ):
         self.step_fn = step_fn
         self.params = params
@@ -70,6 +79,7 @@ class TrainLoop:
         self.stream = stream
         self.cfg = cfg
         self.shardings = shardings
+        self.place_state = place_state
         self.start_step = 0
         self.history: list[dict] = []
         self.straggler_steps = 0
@@ -88,6 +98,10 @@ class TrainLoop:
         state, manifest = restore(self.cfg.ckpt_dir, state, step=last, shardings=sh,
                                   spec_hash=self.cfg.spec_hash)
         self.params, self.opt_state = state["params"], state["opt"]
+        if self.place_state is not None:
+            # re-park offloaded (cold) state on its memory tier: restore
+            # materialized everything on default device memory
+            self.opt_state = self.place_state(self.opt_state)
         self.start_step = manifest["step"]
         print(f"[trainloop] resumed from step {self.start_step}", flush=True)
 

@@ -1,0 +1,42 @@
+"""Subprocess child probing the XLA concatenate-partitioning miscompile.
+
+Re-runs the multi-axis parity child (tests/_multiaxis_child.py — 8 forced
+host devices, a (pod 2, data 2, model 2) mesh, and a spec with a
+``state_sharding=("model",)`` override group) with ONLY the
+"opt_update_row" boundary pin dropped (``perf_flags(no_opt_boundary=True)``
+— the smmf_* state constraints stay). On XLA versions carrying the
+concatenate-partitioning bug the override group's moments come out scaled
+by the replication factor and the parity assertions fire; on fixed XLA the
+fully-sharded path is correct without the pin.
+
+Prints exactly one verdict line:
+
+* ``CONCAT MISCOMPILE REPRODUCED`` — parity failed without the pin; the
+  guard in ``repro.distributed.rules`` is still needed.
+* ``CONCAT MISCOMPILE ABSENT`` — the unpinned path is already correct;
+  the version gate (``rules._CONCAT_MISCOMPILE_LAST_BAD``) should be
+  retired for this jaxlib.
+
+tests/test_multiaxis_sharding.py asserts the verdict agrees with
+``rules.xla_concat_miscompile_present()``, so this child is the regression
+test that *flips* when a jaxlib upgrade fixes the bug: the version gate
+must be retired in the same change, or the test fails loudly.
+"""
+
+import _multiaxis_child  # noqa: F401  (sets XLA_FLAGS before importing jax)
+
+from repro.models.perf import perf_flags
+
+
+def main() -> None:
+    try:
+        with perf_flags(no_opt_boundary=True):
+            _multiaxis_child.main()
+    except AssertionError:
+        print("CONCAT MISCOMPILE REPRODUCED")
+    else:
+        print("CONCAT MISCOMPILE ABSENT")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Subprocess child: offloaded-state checkpoint roundtrip across a mesh change.
+
+Runs under the emulated-mesh harness (8 forced host devices). A quantized
+SMMF group (cold — its state parks on the offload tier) plus a plain adam
+partition (hot — device-resident) train one step on a 2-device mesh with
+``rules.opt_state_shardings(..., offload="cold")`` placement, checkpoint,
+then **restore onto a 4-device mesh** with freshly computed offload-aware
+shardings and train a second step. The full trajectory must match a
+replicated no-offload reference run to float32 resolution, proving the
+offload tier is checkpoint-transparent (one logical state) *and* elastic.
+
+On the CPU backend the host memory kind is structural (identity placement
+— ``offload.supported()`` False), so what this child locks down is the
+placement/restore plumbing and the scheduled round-trip program shape; the
+memory-kind transfers themselves are exercised wherever a real host tier
+exists. Prints "OFFLOAD ELASTIC ROUNDTRIP OK" on success.
+"""
+
+import os
+import tempfile
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.checkpoint import restore, save  # noqa: E402
+from repro.distributed import rules  # noqa: E402
+from repro.optim import offload  # noqa: E402
+from repro.optim.base import apply_updates  # noqa: E402
+from repro.optim.spec import OptimizerSpec, Partition, build_optimizer  # noqa: E402
+
+SHAPES = {
+    # default smmf+int8 group: one factored bucket (stack 4) -> cold
+    "wq": (32, 64), "wk": (32, 64), "wv": (32, 64), "wo": (32, 64),
+    # adam partition without quant: fused dense flat row -> stays hot
+    "b1": (64,), "b2": (64,),
+}
+
+SPEC = OptimizerSpec(
+    family="smmf",
+    hyperparams={"lr": 1e-2, "decay_rate": -0.8, "quant": "int8"},
+    partitions=(
+        # quant=None override: partitions inherit the spec-level quant, and
+        # this child needs a hot (device-resident) bucket next to the cold one
+        Partition(name="norms", match=r"^b\d$", family="adam",
+                  hyperparams={"lr": 1e-2, "quant": None}),
+    ),
+)
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def _n_shards(arr) -> int:
+    return len({str(s.index) for s in arr.addressable_shards})
+
+
+def main() -> None:
+    assert jax.device_count() >= 8, jax.device_count()
+    opt = build_optimizer(SPEC)
+    params = _tree(0)
+    engine = opt.plan(params)
+    cold = offload.cold_keys(engine, "cold")
+    assert cold, "expected the quantized smmf bucket to be cold"
+    assert any(bk.key not in cold for bk in engine.buckets), \
+        "expected the adam bucket to stay hot"
+    spec_hash = SPEC.spec_hash()
+
+    # replicated no-offload reference trajectory (2 steps)
+    ref_params, ref_state = dict(params), opt.init(params)
+    upd_ref = jax.jit(opt.update)
+    for step in range(2):
+        u, ref_state = upd_ref(_tree(100 + step), ref_state, ref_params)
+        ref_params = apply_updates(ref_params, u)
+
+    def sharded_step(params_s, state_s, psh, osh, step):
+        upd = jax.jit(
+            lambda g, s, p: opt.update(g, s, p, schedule="grad", offload="cold"),
+            in_shardings=(psh, osh, psh), out_shardings=(psh, osh))
+        u, state_s = upd(jax.device_put(_tree(100 + step), psh), state_s, params_s)
+        return apply_updates(params_s, u), state_s
+
+    def placements(mesh):
+        psh = rules.param_shardings(mesh, None, params)
+        osh = rules.opt_state_shardings(mesh, None, params, opt, offload="cold")
+        return psh, osh
+
+    # step 0 on the 2-device mesh, offloaded placement, then checkpoint
+    mesh2 = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+    psh2, osh2 = placements(mesh2)
+    params_s = jax.device_put(params, psh2)
+    state_s = jax.device_put(offload.place_host(opt.init(params), engine, "cold"),
+                             osh2)
+    params_s, state_s = sharded_step(params_s, state_s, psh2, osh2, 0)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="offload_ckpt_")
+    save(ckpt_dir, 1, {"params": params_s, "opt": state_s}, spec_hash=spec_hash)
+
+    # elastic restore on a 4-device mesh with offload-aware shardings
+    mesh4 = Mesh(np.asarray(jax.devices()[:4]).reshape(4), ("data",))
+    psh4, osh4 = placements(mesh4)
+    like = {"params": params, "opt": jax.eval_shape(opt.init, params)}
+    state, manifest = restore(ckpt_dir, like, step=1,
+                              shardings={"params": psh4, "opt": osh4},
+                              spec_hash=spec_hash)
+    assert manifest["step"] == 1
+    params_s, state_s = state["params"], state["opt"]
+    # the cold bucket's stacked payload really re-sharded onto 4 devices
+    (ck,) = cold
+    payload = jax.tree.leaves(state_s.factors[ck])[0]
+    assert _n_shards(payload) == 4, f"payload not 4-way after restore: {_n_shards(payload)}"
+
+    # step 1 from the restored state; full trajectory must match reference
+    params_s, state_s = sharded_step(params_s, state_s, psh4, osh4, 1)
+    for k in ref_params:
+        np.testing.assert_allclose(
+            np.asarray(ref_params[k]), np.asarray(params_s[k]),
+            rtol=1e-6, atol=1e-7, err_msg=f"param {k}")
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(ref_state),
+                                   jax.tree.leaves(state_s))):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7,
+            err_msg=f"state leaf {i}")
+    print("OFFLOAD ELASTIC ROUNDTRIP OK")
+
+
+if __name__ == "__main__":
+    main()

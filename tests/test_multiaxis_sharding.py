@@ -238,6 +238,30 @@ def test_parse_rule_state_sharding():
 
 
 @pytest.mark.multidevice
+def test_concat_miscompile_probe_agrees_with_version_gate(emulated_mesh):
+    """Empirical probe vs. the version gate behind the "opt_update_row"
+    boundary pins: rerun the parity child with ONLY the pin dropped
+    (``no_opt_boundary``) and require the observed behavior to match
+    ``rules.xla_concat_miscompile_present()``. This is the test that FLIPS
+    when a jaxlib upgrade fixes the concatenate-partitioning bug — at that
+    point ``rules._CONCAT_MISCOMPILE_LAST_BAD`` must be retired (which also
+    re-enables fully-sharded override transport, priced at 0 by
+    ``boundary_transport_bytes``) or this fails loudly."""
+    out = emulated_mesh.run("_concat_probe_child.py")
+    assert out.returncode == 0, f"probe crashed:\n{out.stdout}\n{out.stderr}"
+    if rules.xla_concat_miscompile_present():
+        assert "CONCAT MISCOMPILE REPRODUCED" in out.stdout, (
+            "version gate says the XLA concatenate miscompile is present "
+            f"(jaxlib <= {rules._CONCAT_MISCOMPILE_LAST_BAD}) but the "
+            "unpinned path is correct — retire the gate:\n" + out.stdout)
+    else:
+        assert "CONCAT MISCOMPILE ABSENT" in out.stdout, (
+            "version gate says this jaxlib is fixed but the miscompile "
+            "still reproduces — raise _CONCAT_MISCOMPILE_LAST_BAD:\n"
+            + out.stdout)
+
+
+@pytest.mark.multidevice
 def test_multiaxis_sharded_vs_replicated_parity(emulated_mesh):
     """Mixed per-group-override spec on the real 8-device emulated mesh:
     placements distribute as planned and the sharded update trajectory

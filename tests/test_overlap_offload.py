@@ -1,0 +1,237 @@
+"""Overlapped optimizer step + host-offload tier (the PR 6 tentpole).
+
+* :func:`repro.core.plan.bucket_schedule`: the "grad" order keys on
+  reverse-mode gradient availability (descending min flat-leaf index),
+  "plan"/None are identity, unknown orders raise;
+* **bitwise parity**: a scheduled (interleaved, optimization-barrier
+  chained) update — with and without the offload round-trip — produces
+  bit-identical updates and state vs the barrier-order baseline, for
+  factored f32, quantized, and momentum-free quantized specs, and for the
+  full transformer_base train step (the acceptance criterion);
+* **donation** still aliases params + optimizer state under ``--overlap``;
+* offload structural behavior on CPU (no host memory kind): identity
+  placement, exact analytic device/host accounting, transport pricing;
+* CPU checkpoint roundtrip with offload enabled; the elastic mesh-change
+  roundtrip runs on the 8-device harness (``_offload_child.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.plan import LeafPlan, bucket_schedule, grad_ready_rank
+from repro.data import SyntheticLMStream
+from repro.launch.steps import assert_donation, make_train_step
+from repro.models import init_encdec, init_lm
+from repro.optim import offload
+from repro.optim.spec import OptimizerSpec, Partition, build_optimizer
+from repro.utils.tree import tree_bytes
+
+SHAPES = {
+    "wq": (32, 64), "wk": (32, 64),
+    "deep/w": (16, 48),
+    "b1": (64,), "b2": (64,),
+}
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in SHAPES.items()}
+
+
+def _spec(**hp):
+    return OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-2, "decay_rate": -0.8, **hp},
+        partitions=(Partition(name="norms", match=r"^b\d$", family="adam",
+                              hyperparams={"lr": 1e-2, "quant": None}),))
+
+
+# ---------------------------------------------------------------------------
+# schedule policy
+# ---------------------------------------------------------------------------
+
+def test_bucket_schedule_orders():
+    from repro.core.plan import build_buckets
+
+    plans = [LeafPlan(i, (8, 8), True, (1, 8, 8)) for i in range(2)] \
+        + [LeafPlan(2, (4, 4), True, (1, 4, 4))] \
+        + [LeafPlan(3, (16,), False, (16,))]
+    buckets = build_buckets(plans)
+    assert bucket_schedule(buckets, "plan") == tuple(range(len(buckets)))
+    assert bucket_schedule(buckets, None) == tuple(range(len(buckets)))
+    # "grad": descending min-leaf-index — later-forward leaves' grads are
+    # emitted first by reverse mode
+    ranks = [grad_ready_rank(b) for b in buckets]
+    got = bucket_schedule(buckets, "grad")
+    assert [ranks[i] for i in got] == sorted(ranks, reverse=True)
+    assert sorted(got) == list(range(len(buckets)))  # a permutation
+    with pytest.raises(ValueError):
+        bucket_schedule(buckets, "alphabetical")
+
+
+def test_engine_schedule_covers_all_buckets():
+    opt = build_optimizer(_spec(quant="int8"))
+    eng = opt.plan(_params())
+    sched = eng.schedule("grad")
+    assert sorted(sched) == list(range(len(eng.buckets)))
+    assert eng.schedule() == tuple(range(len(eng.buckets)))
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: scheduled / offloaded update == barrier update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hp", [
+    {},                              # factored f32 + adam partition
+    {"quant": "int8"},               # qstate codec in the loop
+    {"beta1": None, "quant": "int8"},  # momentum-free quantized
+], ids=["f32", "int8", "int8-nomom"])
+def test_scheduled_update_bitwise_parity(hp):
+    """The optimization-barrier chain and the grad-order reordering are
+    value-exact: bit-identical updates AND state, with and without the
+    offload round-trip (identity transfers on CPU, same program shape)."""
+    opt = build_optimizer(_spec(**hp))
+    params = _params()
+    grads = _params(7)
+    state = opt.init(params)
+
+    base = jax.jit(opt.update)(grads, state, params)
+    for extras in ({"schedule": "grad"}, {"schedule": "grad", "offload": "cold"}):
+        got = jax.jit(lambda g, s, p: opt.update(g, s, p, **extras))(
+            grads, state, params)
+        for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _smoke_setup():
+    cfg = smoke_config("transformer_base")
+    spec = OptimizerSpec(family="smmf",
+                         hyperparams={"lr": 1e-3, "decay_rate": -0.8,
+                                      "quant": "int8"})
+    init = init_encdec if cfg.family == "encdec" else init_lm
+    params = init(jax.random.PRNGKey(0), cfg)
+    opt = build_optimizer(spec, params)
+    batch = SyntheticLMStream(cfg, 2, 16, seed=0).batch(0)
+    return cfg, opt, params, opt.init(params), batch
+
+
+def test_train_step_overlap_bitwise_parity():
+    """Acceptance criterion: the interleaved train step is bit-identical
+    to the barrier step on transformer_base (smoke, quantized state)."""
+    cfg, opt, params, state, batch = _smoke_setup()
+
+    outs = {}
+    for tag, kw in [("barrier", {}),
+                    ("overlap", {"overlap": True}),
+                    ("overlap+offload", {"overlap": True, "offload": "cold"})]:
+        step = jax.jit(make_train_step(cfg, opt, **kw))
+        outs[tag] = step(params, state, batch)
+    for tag in ("overlap", "overlap+offload"):
+        for a, b in zip(jax.tree.leaves(outs["barrier"]),
+                        jax.tree.leaves(outs[tag])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=tag)
+
+
+def test_donation_under_overlap():
+    """`--overlap --offload cold` keeps the donation contract: params and
+    optimizer state still alias in place (fetch/park consume each cold
+    array exactly once — no second use blocks the aliasing)."""
+    cfg, opt, params, state, batch = _smoke_setup()
+    step = jax.jit(make_train_step(cfg, opt, overlap=True, offload="cold"),
+                   donate_argnums=(0, 1))
+    lowered = step.lower(params, state, batch)
+    rep = assert_donation(lowered, lowered.compile())
+    assert rep["donated_args"] > 0
+
+
+# ---------------------------------------------------------------------------
+# offload: structural behavior + analytic accounting (CPU)
+# ---------------------------------------------------------------------------
+
+def test_check_mode_and_cold_policy():
+    assert offload.check_mode(None) is None
+    assert offload.check_mode("none") is None
+    assert offload.check_mode("cold") == "cold"
+    with pytest.raises(ValueError):
+        offload.check_mode("hot")
+    opt = build_optimizer(_spec(quant="int8"))
+    eng = opt.plan(_params())
+    assert offload.cold_keys(eng, None) == frozenset()
+    cold = offload.cold_keys(eng, "cold")
+    # quantized buckets are cold, the adam (quant=None) bucket stays hot
+    assert cold and all(bk.quant for bk in eng.buckets if bk.key in cold)
+    assert any(bk.key not in cold for bk in eng.buckets)
+
+
+def test_offload_structural_on_cpu():
+    """The CPU backend has no pinned-host kind: supported() is False and
+    placement helpers are identity — the tier runs structurally."""
+    assert not offload.supported()  # container is CPU-only
+    opt = build_optimizer(_spec(quant="int8"))
+    params = _params()
+    eng = opt.plan(params)
+    state = opt.init(params)
+    assert offload.place_host(state, eng, "cold") is state
+    assert offload.place_host(state, eng, None) is state
+    sh = {"x": None}
+    assert offload.offload_shardings(sh, None, eng, "cold") is sh
+
+
+def test_offload_accounting_exact():
+    """device + host == total state bytes; host covers exactly the cold
+    (quantized) buckets; transport prices the round-trip at 2x host."""
+    opt = build_optimizer(_spec(quant="int8"))
+    params = _params()
+    eng = opt.plan(params)
+    state_sds = jax.eval_shape(opt.init, params)
+    total = tree_bytes(state_sds)
+
+    off = offload.state_bytes_split(eng, state_sds, None)
+    assert off == {"device": total, "host": 0}
+    on = offload.state_bytes_split(eng, state_sds, "cold")
+    assert on["device"] + on["host"] == total
+    assert on["host"] > 0 and on["device"] > 0  # mixed hot/cold spec
+    assert offload.transport_bytes(eng, state_sds, "cold") == 2 * on["host"]
+    assert offload.transport_bytes(eng, state_sds, None) == 0
+    # the acceptance claim: offload-on device-resident bytes strictly below
+    # the device-resident quantized baseline
+    assert on["device"] < off["device"]
+
+
+def test_offload_ckpt_roundtrip_cpu(tmp_path):
+    """Offload-enabled save → restore → place_state on one CPU device:
+    the state pytree is checkpoint-transparent (one logical state) and the
+    post-restore trajectory matches the never-checkpointed one bitwise."""
+    from repro.checkpoint import restore, save
+
+    opt = build_optimizer(_spec(quant="int8"))
+    params = _params()
+    eng = opt.plan(params)
+    grads = _params(3)
+    state = offload.place_host(opt.init(params), eng, "cold")
+    upd = jax.jit(lambda g, s, p: opt.update(g, s, p, schedule="grad",
+                                             offload="cold"))
+    _, state = upd(grads, state, params)
+    save(tmp_path, 1, {"opt": state}, spec_hash=None)
+    like = {"opt": jax.eval_shape(opt.init, params)}
+    got, _ = restore(tmp_path, like, step=1)
+    restored = offload.place_host(got["opt"], eng, "cold")
+    # continue one more step from both and compare bitwise
+    _, a = upd(_params(4), state, params)
+    _, b = upd(_params(4), restored, params)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.multidevice
+def test_offload_elastic_ckpt_roundtrip_across_mesh_change(emulated_mesh):
+    """2-device offloaded train step → checkpoint → restore on a 4-device
+    mesh with offload-aware shardings → second step matches the replicated
+    no-offload reference (tests/_offload_child.py)."""
+    out = emulated_mesh.run("_offload_child.py")
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "OFFLOAD ELASTIC ROUNDTRIP OK" in out.stdout

@@ -1,0 +1,184 @@
+"""Bench regression gate: candidate BENCH_*.json vs committed baselines.
+
+    PYTHONPATH=src python tools/bench_compare.py \
+        --baseline-dir . --candidate-dir results/bench
+
+The repo root carries the committed perf-trajectory snapshots
+(``BENCH_step_time.json``, ``BENCH_opt_memory.json``); ``benchmarks/run.py``
+writes fresh ones under ``results/bench/``. This tool fails (exit 1, one
+line per violation) when the candidate regresses:
+
+* **bytes** (deterministic spec math — tight tolerance
+  :data:`BYTES_TOL`): per-arch state bytes per optimizer family, the
+  qstate per-device grid, the offload device/host split, and the
+  boundary-transport pricing must not grow;
+* **step time** (noisy CPU wall-clock — generous ratio tolerance
+  :data:`TIME_TOL`): each optimizer's ms/step must stay within the
+  multiplier of its committed baseline;
+* **hard invariants on the candidate alone** (no baseline needed):
+  overlap-on step time <= overlap-off within :data:`OVERLAP_TOL` at equal
+  memory (the interleaved schedule must never cost wall-clock), and
+  offload-on per-device device-resident bytes strictly below the
+  device-resident qstate baseline (the tier's acceptance criterion).
+
+Timing rows compare as ratios so a uniformly slower CI machine passes;
+only a *relative* regression of one variant trips the gate. Bytes rows
+are analytic and must be reproducible to the tolerance on any machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# analytic byte numbers must reproduce; 2% headroom for benign layout
+# drift (e.g. a new tiny leaf in a measured tree)
+BYTES_TOL = 0.02
+# wall-clock per-optimizer multiplier vs baseline (CPU CI noise is real;
+# the ratio normalization below absorbs uniform machine-speed shifts)
+TIME_TOL = 1.75
+# overlap-on vs overlap-off, same run, same machine: near-equal is the
+# claim (on CPU the schedule is a pure reordering), so the tolerance only
+# absorbs timer noise
+OVERLAP_TOL = 0.25
+
+
+def _load(d: Path, name: str) -> dict | None:
+    p = d / name
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def _walk_bytes(base, cand, path, fails):
+    """Recursively compare every *_bytes / 'total'-ish int under matching
+    keys; candidate must not exceed baseline * (1 + BYTES_TOL)."""
+    if isinstance(base, dict) and isinstance(cand, dict):
+        for k in base:
+            if k in cand:
+                _walk_bytes(base[k], cand[k], f"{path}/{k}", fails)
+        return
+    if isinstance(base, list) and isinstance(cand, list):
+        for i, (b, c) in enumerate(zip(base, cand)):
+            _walk_bytes(b, c, f"{path}[{i}]", fails)
+        return
+    key = path.rsplit("/", 1)[-1].split("[")[0]
+    # bytes leaves are *_bytes / total / per_device, plus two records whose
+    # leaves are keyed by family/group NAME: the per-arch state-bytes table
+    # (archs/<arch>/<family>) and the boundary pricing by group
+    named_bytes = "/boundary_by_group/" in path or "/archs/" in path \
+        or "/groups/" in path
+    if not (key.endswith("bytes") or key in ("total", "per_device")
+            or named_bytes):
+        return
+    if not isinstance(base, (int, float)) or not isinstance(cand, (int, float)):
+        return
+    if cand > base * (1 + BYTES_TOL) + 1:
+        fails.append(f"bytes regression at {path}: {base} -> {cand} "
+                     f"(+{(cand / base - 1):.1%} > {BYTES_TOL:.0%})")
+
+
+def _check_times(base: dict, cand: dict, fails: list[str]) -> None:
+    """Per-optimizer ms vs baseline, normalized by the adam row (absorbs a
+    uniformly faster/slower machine), generous TIME_TOL on top."""
+    b_opt, c_opt = base.get("optimizers", {}), cand.get("optimizers", {})
+    b_ref = b_opt.get("adam", {}).get("ms")
+    c_ref = c_opt.get("adam", {}).get("ms")
+    if not b_ref or not c_ref:
+        return
+    for name, b in b_opt.items():
+        c = c_opt.get(name)
+        if c is None or name == "adam":
+            continue
+        b_ratio, c_ratio = b["ms"] / b_ref, c["ms"] / c_ref
+        if c_ratio > b_ratio * TIME_TOL:
+            fails.append(
+                f"step-time regression for {name}: {c_ratio:.2f}x adam vs "
+                f"baseline {b_ratio:.2f}x (tol {TIME_TOL}x)")
+
+
+def _check_overlap_invariants(cand: dict, fails: list[str]) -> None:
+    grid = cand.get("overlap_offload", {})
+    base, over = grid.get("base"), grid.get("overlap")
+    if base and over:
+        # equal memory: the schedule knob moves no state
+        if over["device_bytes"] != base["device_bytes"] or \
+                over["host_bytes"] != base["host_bytes"]:
+            fails.append("overlap row changed the state-byte split "
+                         f"({base} vs {over}) — not an equal-memory compare")
+        if over["ms"] > base["ms"] * (1 + OVERLAP_TOL):
+            fails.append(
+                f"overlap-on step time {over['ms']:.2f}ms exceeds "
+                f"overlap-off {base['ms']:.2f}ms by more than "
+                f"{OVERLAP_TOL:.0%}")
+    off = grid.get("offload")
+    if base and off:
+        if not off["device_bytes"] < base["device_bytes"]:
+            fails.append(
+                f"offload-on device bytes {off['device_bytes']} not strictly "
+                f"below device-resident baseline {base['device_bytes']}")
+        if off["offload_transport_bytes"] != 2 * off["host_bytes"]:
+            fails.append("offload transport pricing inconsistent with the "
+                         "host split (expect 2x host bytes per step)")
+
+
+def _check_offload_memory(cand: dict, fails: list[str]) -> None:
+    dev_base: dict = {}
+    for row in cand.get("offload", []):
+        key = row["variant"]
+        if row["offload"] == "none":
+            dev_base[key] = row["per_device_device_bytes"]
+        elif key in dev_base and \
+                not row["per_device_device_bytes"] < dev_base[key]:
+            fails.append(
+                f"offload memory row {key}: device bytes "
+                f"{row['per_device_device_bytes']} not strictly below "
+                f"device-resident baseline {dev_base[key]}")
+
+
+def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
+    fails: list[str] = []
+    checked = 0
+    for name in ("BENCH_step_time.json", "BENCH_opt_memory.json"):
+        base, cand = _load(baseline_dir, name), _load(candidate_dir, name)
+        if cand is None:
+            fails.append(f"candidate {candidate_dir / name} missing — did "
+                         "benchmarks/run.py run?")
+            continue
+        if name == "BENCH_step_time.json":
+            _check_overlap_invariants(cand, fails)
+        else:
+            _check_offload_memory(cand, fails)
+        if base is None:
+            print(f"[bench_compare] no baseline {baseline_dir / name}; "
+                  "invariant checks only")
+            continue
+        checked += 1
+        _walk_bytes(base, cand, name, fails)
+        if name == "BENCH_step_time.json":
+            _check_times(base, cand, fails)
+    if checked:
+        print(f"[bench_compare] compared {checked} baseline record(s)")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--candidate-dir", default="results/bench",
+                    help="directory holding the freshly measured BENCH_*.json")
+    args = ap.parse_args(argv)
+    fails = compare(Path(args.baseline_dir), Path(args.candidate_dir))
+    for f in fails:
+        print(f"[bench_compare] FAIL: {f}")
+    if fails:
+        return 1
+    print("[bench_compare] OK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
