@@ -5,11 +5,13 @@
 Emits the machine-readable perf trajectory alongside the printed tables:
 ``BENCH_opt_memory.json`` (per-arch state bytes per family, per-group rows
 incl. frozen groups, the qstate quantized grid, and the host-offload
-device/host split) and ``BENCH_step_time.json`` (per-optimizer
+device/host split), ``BENCH_step_time.json`` (per-optimizer
 ms/launches/boundary-transport bytes plus the ``--overlap``/``--offload``
-on/off grid) under ``--json-dir`` (default ``results/bench/``). The CI
+on/off grid), and ``BENCH_serve.json`` (paged-serving tokens/s and
+p50/p99 per-token latency vs the legacy slot-batcher on an open-loop
+trace) under ``--json-dir`` (default ``results/bench/``). The CI
 ``bench`` job gates the fresh records against the committed repo-root
-baselines via ``tools/bench_compare.py`` and uploads both as workflow
+baselines via ``tools/bench_compare.py`` and uploads them as workflow
 artifacts, so every commit carries its measured trajectory.
 """
 
@@ -50,6 +52,11 @@ def main() -> None:
         from benchmarks import convergence
 
         convergence.main()
+
+    _section("Serving: paged continuous batching vs the seed slot-batcher")
+    from benchmarks import serve_bench
+
+    serve_bench.main(json_path=json_dir / "BENCH_serve.json")
 
     _section("Roofline terms from the multi-pod dry-run (EXPERIMENTS.md §Roofline)")
     from benchmarks import roofline

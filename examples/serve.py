@@ -1,8 +1,10 @@
-"""Serving example: batched generation with the slot-based engine.
+"""Serving example: continuous batching on the paged, quantized KV cache.
 
-Eight requests, four decode slots — finished sequences free their slot and
-queued requests prefill into it (continuous batching at decode-step
-granularity).
+Eight requests, four decode slots, int8 KV pages, the paged Pallas decode
+kernel, and mixed sampling: half the requests decode greedy, half sample
+with per-request seeds (a request's stream is identical solo or batched —
+see docs/serving.md). Finished sequences retire mid-flight, return their
+pages to the pool, and queued requests batch-prefill into the free slots.
 
     PYTHONPATH=src python examples/serve.py
 """
@@ -22,24 +24,31 @@ def main():
     cfg = ModelConfig("serve-demo", "dense", n_layers=2, d_model=128, n_heads=4,
                       n_kv_heads=2, d_ff=256, vocab=512, dtype="float32")
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    eng = GenerationEngine(params, cfg, slots=4, max_len=128)
+    eng = GenerationEngine(params, cfg, slots=4, max_len=128, page=16,
+                           kv_quant="int8", use_kernel=True)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, 512, size=8 + i).astype(np.int32),
-                    max_new=16) for i in range(8)]
+                    max_new=16,
+                    # even rids: greedy; odd rids: seeded nucleus sampling
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    top_p=1.0 if i % 2 == 0 else 0.95, seed=i)
+            for i in range(8)]
     for r in reqs:
         eng.submit(r)
 
     t0 = time.time()
-    steps = 0
-    while eng.step():
-        steps += 1
+    done = eng.run()
     dt = time.time() - t0
-    tokens = sum(len(r.out) for r in reqs)
-    print(f"served {len(reqs)} requests / {tokens} tokens in {steps} decode steps "
-          f"({dt:.2f}s, {tokens/dt:.1f} tok/s on CPU)")
+    tokens = sum(len(r.out) for r in done)
+    st = eng.stats
+    print(f"served {len(done)} requests / {tokens} tokens in "
+          f"{st['decode_steps']} decode steps, {st['prefill_batches']} prefill "
+          f"batches ({dt:.2f}s, {tokens/dt:.1f} tok/s on CPU, int8 KV pages)")
     for r in reqs[:3]:
-        print(f"  req {r.rid}: prompt {r.prompt[:6].tolist()}... -> {r.out}")
+        mode = "greedy" if r.temperature == 0.0 else f"sampled(seed={r.seed})"
+        print(f"  req {r.rid} [{mode}]: prompt {r.prompt[:6].tolist()}... "
+              f"-> {r.out}")
 
 
 if __name__ == "__main__":

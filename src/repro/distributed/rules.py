@@ -665,6 +665,41 @@ def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_shape: PyTree) -> PyTree
     return tree_map_with_path(_one, cache_shape)
 
 
+def paged_cache_shardings(mesh: Mesh, cfg: ModelConfig,
+                          pools_shape: PyTree) -> PyTree:
+    """Serving page pools: payload (L, P, page, Hkv, D) and scale
+    (L, P, page, Hkv) leaves go heads-over-"model" when divisible —
+    the same placement :func:`cache_shardings` picks for dense caches,
+    and exactly what the ``shard_map`` decode kernel expects. Pages are
+    never sharded: every slot's block table indexes the whole pool, so
+    a split page axis would turn each decode step into a cross-device
+    gather. Non-divisible head counts replicate (decode still works via
+    the non-shard_map paths)."""
+    kv_ok = cfg.kv_heads % max(1, _axsize(mesh, "model")) == 0
+
+    def _one(leaf):
+        shape = tuple(leaf.shape)
+        if not kv_ok:
+            return NamedSharding(mesh, P())
+        if len(shape) == 5:   # payload (L, P, page, Hkv, D)
+            return NamedSharding(mesh, fit_spec(
+                mesh, shape, (None, None, None, "model", None)))
+        if len(shape) == 4:   # scales (L, P, page, Hkv)
+            return NamedSharding(mesh, fit_spec(
+                mesh, shape, (None, None, None, "model")))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(_one, pools_shape)
+
+
+def paged_enc_sharding(mesh: Mesh, cfg: ModelConfig,
+                       enc_shape: tuple) -> NamedSharding:
+    """Per-slot encoder states (slots, T_enc, D): slots over dp — each
+    decode row reads only its own encoder sequence."""
+    return NamedSharding(mesh, fit_spec(mesh, tuple(enc_shape),
+                                        (dp_axes(mesh), None, None)))
+
+
 def batch_shardings(mesh: Mesh, batch_shape: PyTree) -> PyTree:
     """Token/label/frame inputs: batch dim over dp axes."""
     dp = dp_axes(mesh)

@@ -4,9 +4,19 @@ Single-token decode attention that streams the KV cache through VMEM once
 (online softmax, accumulators resident in VMEM scratch) — the kernel-level
 answer to the §Perf cell-A finding that XLA-level decode attention
 materializes broadcast GEMV products.
+
+The paged variant (``flash_decode_paged``) serves the continuous-batching
+engine: the cache is a pool of fixed-size pages addressed through a
+scalar-prefetched per-row page table, with optional int8/fp8 payloads
+dequantized in-register.
 """
 
-from repro.kernels.flash_decode.ops import flash_decode
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.ops import flash_decode, flash_decode_paged
+from repro.kernels.flash_decode.ref import flash_decode_paged_ref, flash_decode_ref
 
-__all__ = ["flash_decode", "flash_decode_ref"]
+__all__ = [
+    "flash_decode",
+    "flash_decode_paged",
+    "flash_decode_paged_ref",
+    "flash_decode_ref",
+]

@@ -1,12 +1,28 @@
-"""Pallas TPU kernel: flash-decode (single-token attention over a KV cache).
+"""Pallas TPU kernels: flash-decode (single-token attention over a KV cache).
 
-Grid (B, S/bs): for each batch row the KV cache streams through VMEM in
-(bs, Hkv, D) blocks; the online-softmax state (acc (Hkv, grp, D), running
-max m and sum l (Hkv, grp)) lives in VMEM scratch, persisting across the
-sequential S-axis grid steps. HBM traffic = one pass over the row's cache
-+ one (Hq, D) output write — the roofline minimum for decode (the
-XLA-level path additionally materializes an (S, Hkv, D)-sized
-broadcast-product; see EXPERIMENTS.md §Perf cell A).
+Two layouts share the same online-softmax inner loop:
+
+* **Contiguous** (:func:`flash_decode_blocks`) — grid (B, S/bs): each batch
+  row's dense (S, Hkv, D) cache streams through VMEM in (bs, Hkv, D)
+  blocks; the online-softmax state (acc (Hkv, grp, D), running max m and
+  sum l (Hkv, grp)) lives in VMEM scratch, persisting across the
+  sequential S-axis grid steps. HBM traffic = one pass over the row's
+  cache + one (Hq, D) output write — the roofline minimum for decode (the
+  XLA-level path additionally materializes an (S, Hkv, D)-sized
+  broadcast-product; see EXPERIMENTS.md §Perf cell A).
+
+* **Paged** (:func:`flash_decode_pages`) — grid (B, npages): the serving
+  engine's KV cache is a pool of fixed-size pages (P, page, Hkv, D) plus a
+  per-row page table; the table and valid positions arrive via scalar
+  prefetch (``pltpu.PrefetchScalarGridSpec``) so the BlockSpec index maps
+  chase ``tbl[b, j]`` — the j-th page of row b streams straight from its
+  pooled HBM location into VMEM with **no gathered contiguous copy ever
+  materializing** (the XLA reference path pays that gather). This is the
+  same grid generalization PR 1 applied to ``smmf_update`` (bucket×block
+  3D grid): one more grid axis over a table-indirected block dimension.
+  An optional quantized variant carries int8/fp8 page payloads plus
+  per-(token, head) f32 scale pages and dequantizes in-register, so the
+  at-rest cache stays 1 byte/element in HBM end to end.
 
 The per-row valid length (pos) arrives via scalar prefetch (SMEM) and
 masks the tail block; fully masked blocks still stream (static grid) but
@@ -69,6 +85,151 @@ def _kernel(
     @pl.when(j == nsteps - 1)
     def _finalize():
         o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+
+
+def _paged_kernel(
+    tbl_ref,      # scalar-prefetch (B, npages) int32: page ids per row
+    pos_ref,      # scalar-prefetch (B,) int32: last valid position per row
+    q_ref,        # (1, hkv, grp, d)
+    k_ref,        # (1, page, hkv, d) — page tbl[b, j] of the pool
+    v_ref,        # (1, page, hkv, d)
+    o_ref,        # out (1, hkv, grp, d) f32
+    acc_ref,      # scratch (hkv, grp, d) f32
+    m_ref,        # scratch (hkv, grp) f32
+    l_ref,        # scratch (hkv, grp) f32
+    *,
+    page: int,
+    npages: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                  # (hkv, grp, d) f32 (pre-scaled)
+    k = k_ref[0].astype(jnp.float32)              # (page, hkv, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s_blk = jnp.einsum("hgd,shd->hgs", q, k)      # (hkv, grp, page)
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = kpos <= pos_ref[b]
+    s_blk = jnp.where(valid, s_blk, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=-1))
+    p = jnp.exp(s_blk - m_new[..., None])
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * scale[..., None] + jnp.einsum("hgs,shd->hgd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+
+
+def _paged_kernel_quant(
+    tbl_ref,      # scalar-prefetch (B, npages) int32
+    pos_ref,      # scalar-prefetch (B,) int32
+    q_ref,        # (1, hkv, grp, d)
+    k_ref,        # (1, page, hkv, d) int8 / fp8 payload
+    ks_ref,       # (1, page, hkv) f32 per-(token, head) scales
+    v_ref,        # (1, page, hkv, d) payload
+    vs_ref,       # (1, page, hkv) f32
+    o_ref,        # out (1, hkv, grp, d) f32
+    acc_ref, m_ref, l_ref,
+    *,
+    page: int,
+    npages: int,
+):
+    """Quantized-page variant: dequantize in-register so the at-rest cache
+    stays 1 byte/element in HBM (exactly the PR 5 in-kernel-dequant move,
+    applied to KV pages instead of factor rows)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][..., None]   # (page, hkv, d)
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][..., None]
+
+    s_blk = jnp.einsum("hgd,shd->hgs", q, k)
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = kpos <= pos_ref[b]
+    s_blk = jnp.where(valid, s_blk, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=-1))
+    p = jnp.exp(s_blk - m_new[..., None])
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * scale[..., None] + jnp.einsum("hgs,shd->hgd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_pages(q, k_pages, v_pages, pos, tbl, interpret: bool = True,
+                       k_scale=None, v_scale=None):
+    """Paged flash-decode over a pooled KV cache.
+
+    q (B, hkv, grp, d) f32 pre-scaled; k_pages/v_pages (P, page, hkv, d);
+    pos (B,) i32 last valid position; tbl (B, npages) i32 page table
+    (zero-padded — page 0 is the engine's scratch page and masked rows
+    contribute nothing). When ``k_scale``/``v_scale`` (P, page, hkv) f32
+    are given, the payload pools are quantized and dequant happens
+    in-register. Returns o (B, hkv, grp, d) f32.
+    """
+    bsz, hkv, grp, d = q.shape
+    _, page, _, _ = k_pages.shape
+    npages = tbl.shape[1]
+    grid = (bsz, npages)
+    quant = k_scale is not None
+
+    q_spec = pl.BlockSpec((1, hkv, grp, d), lambda b, j, tbl, pos: (b, 0, 0, 0))
+    kv_spec = pl.BlockSpec((1, page, hkv, d),
+                           lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0))
+    if quant:
+        sc_spec = pl.BlockSpec((1, page, hkv),
+                               lambda b, j, tbl, pos: (tbl[b, j], 0, 0))
+        kernel = functools.partial(_paged_kernel_quant, page=page, npages=npages)
+        in_specs = [q_spec, kv_spec, sc_spec, kv_spec, sc_spec]
+        operands = (q, k_pages, k_scale, v_pages, v_scale)
+    else:
+        kernel = functools.partial(_paged_kernel, page=page, npages=npages)
+        in_specs = [q_spec, kv_spec, kv_spec]
+        operands = (q, k_pages, v_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, hkv, grp, d),
+                               lambda b, j, tbl, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, grp, d), jnp.float32),   # acc
+            pltpu.VMEM((hkv, grp), jnp.float32),      # running max
+            pltpu.VMEM((hkv, grp), jnp.float32),      # running sum
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, grp, d), jnp.float32),
+        interpret=interpret,
+    )(tbl, pos, *operands)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))

@@ -6,7 +6,30 @@ import math
 
 import jax.numpy as jnp
 
-from repro.kernels.flash_decode.kernel import DEFAULT_BLOCK_S, flash_decode_blocks
+from repro.kernels.flash_decode.kernel import (
+    DEFAULT_BLOCK_S,
+    flash_decode_blocks,
+    flash_decode_pages,
+)
+
+
+def flash_decode_paged(q, k_pages, v_pages, pos, tbl, interpret: bool = True,
+                       k_scale=None, v_scale=None):
+    """Paged variant: q (B,Hq,D); k/v pools (P,page,Hkv,D); pos (B,);
+    tbl (B,npages) page table (zero-padded) -> o (B,Hq,D) f32.
+
+    Semantics match ref.flash_decode_paged_ref (attend to positions <= pos
+    along the gathered per-row sequence). Optional (P,page,Hkv) f32 scale
+    pools mark quantized payloads (in-register dequant).
+    """
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    grp = hq // hkv
+    qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(b, hkv, grp, d)
+    o = flash_decode_pages(qg, k_pages, v_pages, pos.astype(jnp.int32),
+                           tbl.astype(jnp.int32), interpret=interpret,
+                           k_scale=k_scale, v_scale=v_scale)
+    return o.reshape(b, hq, d)
 
 
 def flash_decode(q, k, v, pos, block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):

@@ -23,3 +23,23 @@ def flash_decode_ref(q, k, v, pos):
     w = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
     return o.reshape(b, hq, d)
+
+
+def flash_decode_paged_ref(q, k_pages, v_pages, pos, tbl,
+                           k_scale=None, v_scale=None):
+    """Paged oracle: gather each row's pages into a dense (B,S,Hkv,D) cache
+    (S = npages * page), dequantize if scale pools are given, and defer to
+    :func:`flash_decode_ref`. This is the XLA-level path the Pallas kernel
+    avoids — it materializes the contiguous gathered copy.
+
+    q (B,Hq,D); k/v pools (P,page,Hkv,D); pos (B,); tbl (B,npages) i32.
+    """
+    k = k_pages[tbl]                       # (B, npages, page, Hkv, D)
+    v = v_pages[tbl]
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[tbl][..., None]
+        v = v.astype(jnp.float32) * v_scale[tbl][..., None]
+    b, npages, page, hkv, d = k.shape
+    k = k.reshape(b, npages * page, hkv, d)
+    v = v.reshape(b, npages * page, hkv, d)
+    return flash_decode_ref(q, k, v, pos)

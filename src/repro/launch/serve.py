@@ -1,7 +1,20 @@
-"""Serving launcher: batched generation with the slot engine.
+"""Serving launcher: continuous batching on the paged, quantized KV cache.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --smoke \
-        --requests 8 --slots 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch transformer_base \
+        --smoke --requests 8 --slots 4 --max-new 16 --kv-quant int8 \
+        --use-kernel
+
+Drives the paged :class:`~repro.serving.engine.GenerationEngine` (or the
+seed slot-batcher via ``--engine legacy``, the bench baseline) over a
+deterministic synthetic request set. Enc-dec archs (transformer_base) are
+served natively: each request carries synthetic encoder frames, run
+through the encoder once at admission. Sampling flags apply to every
+request; the default (temperature 0) is exact greedy, which the smoke
+check relies on: with ``--check`` (implied by ``--smoke``) the launcher
+re-runs each request solo on the dense f32 reference decode step and
+asserts the paged engine's greedy stream matches token for token —
+that is the serving acceptance gate CI runs on transformer_base with
+``--kv-quant int8 --use-kernel``.
 """
 
 from __future__ import annotations
@@ -13,34 +26,111 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.models import init_lm
-from repro.serving import GenerationEngine
+from repro.models import init_encdec, init_lm
+from repro.serving import GenerationEngine, LegacyRequest, LegacySlotEngine
 from repro.serving.engine import Request
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """CLI definition (separate from main so tests/docs can introspect it —
+    every flag here must be documented in docs/cli.md; a parity test
+    enforces that)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-sized config + reference parity check")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--engine", default="paged", choices=["paged", "legacy"],
+                    help="legacy = the seed slot-batcher (bench baseline; "
+                         "dense/moe only, greedy only)")
+    ap.add_argument("--page", type=int, default=16,
+                    help="KV page size in tokens")
+    ap.add_argument("--kv-quant", default=None, choices=["int8", "fp8"],
+                    help="quantized KV-page storage (per-token/head scales)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="flash_decode_paged Pallas kernel on the decode "
+                         "hot path")
+    ap.add_argument("--prefill-budget", type=int, default=4096,
+                    help="max prompt tokens admitted per prefill batch")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (exact argmax)")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = off")
+    ap.add_argument("--top-p", type=float, default=1.0, help="1 = off")
+    ap.add_argument("--check", action="store_true",
+                    help="assert greedy parity vs the solo dense f32 "
+                         "reference for every request (implied by --smoke)")
+    return ap
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family == "encdec":
-        raise SystemExit("enc-dec serving: use the decode step factory directly")
-    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
-    eng = GenerationEngine(params, cfg, slots=args.slots, max_len=args.max_len)
 
+def _requests(cfg, args):
     rng = np.random.default_rng(args.seed)
-    reqs = [
-        Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8 + i % 8).astype(np.int32),
-                max_new=args.max_new)
-        for i in range(args.requests)
-    ]
+    out = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=4 + i % 8).astype(np.int32)
+        frames = None
+        if cfg.family == "encdec":
+            frames = rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        out.append(Request(rid=i, prompt=prompt, max_new=args.max_new,
+                           temperature=args.temperature, top_k=args.top_k,
+                           top_p=args.top_p, seed=args.seed + i,
+                           frames=frames))
+    return out
+
+
+def _solo_reference(params, cfg, req):
+    """Dense f32 unpaged greedy decode of one request (the parity oracle)."""
+    import jax.numpy as jnp
+
+    if cfg.family == "encdec":
+        from repro.models import encdec_decode_step, encode, init_encdec_cache
+
+        enc = encode(params, cfg, jnp.asarray(req.frames)[None])
+        cache = init_encdec_cache(cfg, 1, len(req.prompt) + req.max_new)
+        step = lambda t, c: encdec_decode_step(
+            params, cfg, jnp.asarray([[int(t)]]), c, enc)
+    else:
+        from repro.models import init_cache, lm_decode_step
+
+        cache = init_cache(cfg, 1, len(req.prompt) + req.max_new)
+        step = lambda t, c: lm_decode_step(
+            params, cfg, jnp.asarray([[int(t)]]), c)
+    for t in req.prompt:
+        logits, cache = step(t, cache)
+    out = [int(jnp.argmax(logits[0, 0, : cfg.vocab]))]
+    while len(out) < req.max_new:
+        logits, cache = step(out[-1], cache)
+        out.append(int(jnp.argmax(logits[0, 0, : cfg.vocab])))
+    return out
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    init = init_encdec if cfg.family == "encdec" else init_lm
+    params = init(jax.random.PRNGKey(args.seed), cfg)
+
+    if args.engine == "legacy":
+        if cfg.family not in ("dense", "moe"):
+            raise SystemExit(
+                f"--engine legacy is the seed decoder-only slot-batcher and "
+                f"cannot serve family={cfg.family!r} ({cfg.name}); use the "
+                f"default paged engine")
+        eng = LegacySlotEngine(params, cfg, slots=args.slots,
+                               max_len=args.max_len)
+        reqs = [LegacyRequest(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                for r in _requests(cfg, args)]
+    else:
+        eng = GenerationEngine(params, cfg, slots=args.slots,
+                               max_len=args.max_len, page=args.page,
+                               kv_quant=args.kv_quant,
+                               use_kernel=args.use_kernel,
+                               prefill_budget=args.prefill_budget)
+        reqs = _requests(cfg, args)
     for r in reqs:
         eng.submit(r)
 
@@ -53,6 +143,18 @@ def main() -> None:
     print(f"[serve:{cfg.name}] {len(reqs)} requests, {tokens} tokens, "
           f"{steps} decode steps, {dt:.2f}s ({tokens/max(dt,1e-9):.1f} tok/s)")
     assert all(r.done for r in reqs)
+
+    if (args.check or args.smoke) and args.engine == "paged" \
+            and args.temperature == 0.0:
+        for r in reqs:
+            ref = _solo_reference(params, cfg, r)
+            assert r.out == ref, (
+                f"request {r.rid}: paged stream {r.out} != dense f32 "
+                f"reference {ref}")
+        print(f"[serve:{cfg.name}] parity OK: paged"
+              f"{'+' + args.kv_quant if args.kv_quant else ''}"
+              f"{'+kernel' if args.use_kernel else ''} greedy matches the "
+              f"dense f32 reference on all {len(reqs)} requests")
 
 
 if __name__ == "__main__":

@@ -8,12 +8,14 @@ from repro.models.lm import (
     lm_logits,
     lm_loss,
     lm_prefill,
+    lm_prefill_batch,
     vocab_padded,
 )
 from repro.models.encdec import (
     encdec_decode_step,
     encdec_logits,
     encdec_loss,
+    encdec_prefill_batch,
     encode,
     init_encdec,
     init_encdec_cache,
@@ -28,6 +30,7 @@ __all__ = [
     "lm_logits",
     "lm_loss",
     "lm_prefill",
+    "lm_prefill_batch",
     "lm_decode_step",
     "init_cache",
     "vocab_padded",
@@ -36,6 +39,7 @@ __all__ = [
     "encdec_logits",
     "encdec_loss",
     "encdec_decode_step",
+    "encdec_prefill_batch",
     "init_encdec_cache",
     "init_cnn",
     "cnn_apply",

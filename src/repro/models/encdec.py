@@ -134,6 +134,41 @@ def init_encdec_cache(cfg: ModelConfig, batch: int, s_max: int):
     }
 
 
+def encdec_prefill_batch(params, cfg: ModelConfig, tokens, valid, enc):
+    """Right-padded batched decoder prefill for the paged serving engine.
+
+    tokens (B, S) int32 right-padded; valid (B,) real lengths; enc
+    (B, T_enc, D) encoder states (from :func:`encode` at admission).
+    Returns (last-valid-position logits (B, Vpad), per-layer self-attn K/V
+    (L, B, S, Hkv, D)) — exactly the K/V a step-by-step
+    :func:`encdec_decode_step` would have written (no RoPE; positions enter
+    through the learned ``pos_embed``), so the paged cache is bitwise-equal
+    to the dense one over each row's valid prefix.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_embed"][None, :s]
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    dt = jnp.dtype(cfg.dtype)
+
+    def body(h, p):
+        hn = L.norm(h, p["norm1"], cfg.norm)
+        o, _ = L.attention(p["attn"], hn, cfg, positions, use_rope=False)
+        q, k, v = L._qkv(p["attn"], hn, hn, cfg)
+        h = h + o
+        o, _ = L.attention(p["xattn"], L.norm(h, p["norm_x"], cfg.norm), cfg, positions,
+                           kv_x=enc, use_rope=False)
+        h = h + o
+        h = h + L.ffn(p["ffn"], L.norm(h, p["norm2"], cfg.norm), cfg)
+        return h, {"k": k.astype(dt), "v": v.astype(dt)}
+
+    x, kv = jax.lax.scan(body, x, params["dec_blocks"])
+    last = jnp.take_along_axis(x, (valid - 1)[:, None, None], axis=1)
+    last = L.norm(last, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", last, params["embed"]).astype(jnp.float32)
+    return constrain(logits, "logits")[:, 0], kv
+
+
 def encdec_decode_step(params, cfg: ModelConfig, token, cache, enc):
     """One decoder step with self-attn cache + cross-attn to `enc`."""
     pos = cache["pos"]

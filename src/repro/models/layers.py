@@ -327,10 +327,16 @@ def init_moe(key, cfg: ModelConfig) -> PyTree:
     return p
 
 
-def moe_ffn(p, x, cfg: ModelConfig, n_groups: int = 16):
+def moe_ffn(p, x, cfg: ModelConfig, n_groups: int = 16, token_mask=None):
     """x (B, S, D) -> (out, aux_loss). Tokens are routed in G groups per
     batch row; each group gets its own capacity so the position cumsum stays
-    group-local (no cross-shard cumsum when S is sharded G-way)."""
+    group-local (no cross-shard cumsum when S is sharded G-way).
+
+    ``token_mask`` (B, S) bool marks real tokens in a right-padded batch
+    (serving's batched prefill): padding tokens are dropped from the routing
+    one-hots *before* the capacity cumsum, so they never consume a real
+    token's expert-capacity slot — a padded row routes its valid prefix
+    exactly as the unpadded row would."""
     from repro.models.perf import flags
 
     b, s, d = x.shape
@@ -347,6 +353,8 @@ def moe_ffn(p, x, cfg: ModelConfig, n_groups: int = 16):
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
 
     onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)            # (b,g,sg,k,e)
+    if token_mask is not None:
+        onehot = onehot * token_mask.reshape(b, g, sg, 1, 1).astype(jnp.float32)
     # position of each (token, choice) within its expert queue, group-local
     flat = onehot.reshape(b, g, sg * k, e)
     pos = jnp.cumsum(flat, axis=2) - 1.0

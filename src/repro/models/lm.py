@@ -353,6 +353,45 @@ def lm_decode_step(params, cfg: ModelConfig, token, cache):
     return constrain(logits, "logits"), new_cache
 
 
+def lm_prefill_batch(params, cfg: ModelConfig, tokens, valid):
+    """Right-padded batched prefill for the paged serving engine.
+
+    tokens (B, S) int32 right-padded to a shared bucket length; valid (B,)
+    int32 real prompt lengths. Returns (last-valid-position logits
+    (B, Vpad), per-layer rope'd K/V (L, B, S, Hkv, D)) — the caller
+    scatters the K/V prefix into its paged pool. Dense + MoE families only
+    (causal masking makes each row's valid prefix independent of the
+    padding; MoE additionally threads ``token_mask`` so pads don't consume
+    expert capacity).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"lm_prefill_batch: unsupported family {cfg.family}")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    tmask = jnp.arange(s, dtype=jnp.int32)[None] < valid[:, None]
+    dt = jnp.dtype(cfg.dtype)
+
+    def body(h, p):
+        hn = L.norm(h, p["norm1"], cfg.norm)
+        o, _ = L.attention(p["attn"], hn, cfg, positions, window=cfg.attn_window)
+        q, k, v = L._qkv(p["attn"], hn, hn, cfg)
+        k = L.rope(k, positions, cfg.rope_theta)
+        h = h + o
+        hn2 = L.norm(h, p["norm2"], cfg.norm)
+        if cfg.family == "moe":
+            f, _ = L.moe_ffn(p["moe"], hn2, cfg, token_mask=tmask)
+        else:
+            f = L.ffn(p["ffn"], hn2, cfg)
+        return h + f, {"k": k.astype(dt), "v": v.astype(dt)}
+
+    x, kv = jax.lax.scan(body, x, params["blocks"])
+    last = jnp.take_along_axis(x, (valid - 1)[:, None, None], axis=1)  # (B,1,D)
+    logits = _head_logits(params, cfg, last)
+    return constrain(logits, "logits")[:, 0], kv
+
+
 def lm_prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None):
     """Full-sequence prefill: returns (last-position logits, filled cache).
 

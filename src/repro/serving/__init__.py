@@ -1,3 +1,26 @@
-from repro.serving.engine import GenerationEngine
+from repro.serving.engine import GenerationEngine, Request
+from repro.serving.legacy import LegacyRequest, LegacySlotEngine
+from repro.serving.pages import (
+    RESERVED_PAGES,
+    PageAllocator,
+    PagedKV,
+    gather_pages,
+    init_paged_kv,
+    pages_needed,
+)
+from repro.serving.sampling import SampleParams, sample_tokens
 
-__all__ = ["GenerationEngine"]
+__all__ = [
+    "GenerationEngine",
+    "Request",
+    "LegacyRequest",
+    "LegacySlotEngine",
+    "RESERVED_PAGES",
+    "PageAllocator",
+    "PagedKV",
+    "gather_pages",
+    "init_paged_kv",
+    "pages_needed",
+    "SampleParams",
+    "sample_tokens",
+]

@@ -1,0 +1,214 @@
+"""Jittable paged prefill / decode steps for the serving engine.
+
+Pure functions over (params, device arrays); the engine jits them once per
+static shape bucket. Three orthogonal axes, all resolved at trace time:
+
+* **family** — decoder-only (dense / MoE, RoPE positions) or enc-dec
+  (learned positions, per-layer cross-attention to the slot's encoder
+  states, which stay dense — they are written once at admission and read
+  every step, so paging buys nothing there);
+* **KV quantization** — ``kv_quant in ("int8", "fp8")`` stores page
+  payloads through ``core.quant`` with one f32 scale per (token, head);
+  the cache is write-once, so plain round-to-nearest is exact enough and
+  no stochastic rounding key is threaded (unlike the optimizer's
+  re-quantize-every-step loop);
+* **attention path** — ``use_kernel`` routes decode through the
+  ``flash_decode_paged`` Pallas kernel (scalar-prefetched block table,
+  in-register dequant, no gathered copy); otherwise the XLA reference
+  path gathers pages densely. Under a mesh with a divisible ``model``
+  axis the kernel runs inside ``shard_map`` split over KV heads — the
+  same heads-over-model placement ``rules.cache_shardings`` uses.
+
+Decode threads the whole pool through the layer scan as a carry (the
+PR 6 ``cache_as_carry`` pattern): each layer scatters its one new K/V
+token in place instead of rewriting a full slice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quant import qmax, quantize
+from repro.distributed.ctx import constrain
+from repro.kernels.flash_decode import flash_decode_paged, flash_decode_paged_ref
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.models.config import ModelConfig
+from repro.serving.sampling import sample_tokens
+
+PyTree = Any
+_SCALE_FLOOR = 1e-30
+
+
+def _quant_token(x, mode: str):
+    """x (..., Hkv, D) f32-ish -> (payload, scale (..., Hkv) f32): one
+    absmax scale per (token, head) — the page fills append-only, so each
+    arriving token carries its own exact range."""
+    sc = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / qmax(mode)
+    sc = jnp.maximum(sc, _SCALE_FLOOR)
+    return quantize(x, sc[..., None], mode), sc
+
+
+def scatter_prefill(pools: dict, kv: dict, tbl, valid, page: int,
+                    kv_quant: str | None) -> dict:
+    """Scatter per-layer prefill K/V (L, B, S, Hkv, D) into the pools.
+
+    Position ``s`` of row ``b`` lands on page ``tbl[b, s // page]`` at
+    offset ``s % page``; positions past ``valid[b]`` are redirected to the
+    reserved scratch page 0 (their payload is garbage and never attended).
+    """
+    kl, bsz, s, hkv, d = kv["k"].shape
+    sidx = jnp.arange(s, dtype=jnp.int32)
+    pid = jnp.take_along_axis(tbl, jnp.broadcast_to(sidx[None, :] // page,
+                                                    (bsz, s)), axis=1)
+    pid = jnp.where(sidx[None, :] < valid[:, None], pid, 0).reshape(-1)
+    off = jnp.broadcast_to(sidx[None, :] % page, (bsz, s)).reshape(-1)
+    out = dict(pools)
+    for name in ("k", "v"):
+        flat = kv[name].reshape(kl, bsz * s, hkv, d)
+        if kv_quant:
+            payload, sc = _quant_token(flat, kv_quant)
+            out[name] = out[name].at[:, pid, off].set(payload)
+            out[f"{name}_scale"] = out[f"{name}_scale"].at[:, pid, off].set(sc)
+        else:
+            out[name] = out[name].at[:, pid, off].set(flat.astype(out[name].dtype))
+    return out
+
+
+def _paged_attn(q, kp, vp, ks, vs, pos, tbl, *, use_kernel: bool, mesh):
+    """One layer's paged decode attention. q (B, Hq, D); per-layer pools
+    kp/vp (P, page, Hkv, D) (+ scales (P, page, Hkv) when quantized).
+    Returns (B, Hq, D) f32."""
+    if not use_kernel:
+        return flash_decode_paged_ref(q, kp, vp, pos, tbl,
+                                      k_scale=ks, v_scale=vs)
+    hkv = kp.shape[2]
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    if mesh is None or msize <= 1 or hkv % msize or q.shape[1] % msize:
+        return flash_decode_paged(q, kp, vp, pos, tbl,
+                                  k_scale=ks, v_scale=vs)
+    # heads-over-model shard_map: q's Hq axis is h-major (head = h*grp+g),
+    # so an Hq/m chunk holds exactly Hkv/m complete GQA groups — each shard
+    # runs the kernel on its own heads with zero collectives.
+    from jax.experimental.shard_map import shard_map
+
+    qspec = P(None, "model", None)
+    pool = P(None, None, "model", None)
+    scale = P(None, None, "model")
+    if ks is not None:
+        fn = shard_map(
+            lambda q_, k_, v_, ks_, vs_, pos_, tbl_: flash_decode_paged(
+                q_, k_, v_, pos_, tbl_, k_scale=ks_, v_scale=vs_),
+            mesh=mesh,
+            in_specs=(qspec, pool, pool, scale, scale, P(None), P(None, None)),
+            out_specs=qspec, check_rep=False)
+        return fn(q, kp, vp, ks, vs, pos, tbl)
+    fn = shard_map(
+        lambda q_, k_, v_, pos_, tbl_: flash_decode_paged(q_, k_, v_, pos_, tbl_),
+        mesh=mesh,
+        in_specs=(qspec, pool, pool, P(None), P(None, None)),
+        out_specs=qspec, check_rep=False)
+    return fn(q, kp, vp, pos, tbl)
+
+
+def _append_token(pools_kv, scales, l, pid, off, token_kv, kv_quant):
+    """Scatter one decode token (B, Hkv, D) into layer ``l`` of a pool."""
+    if kv_quant:
+        payload, sc = _quant_token(token_kv, kv_quant)
+        return (pools_kv.at[l, pid, off].set(payload),
+                scales.at[l, pid, off].set(sc))
+    return pools_kv.at[l, pid, off].set(token_kv.astype(pools_kv.dtype)), scales
+
+
+def paged_prefill(params, tokens, valid, tbl, pools, samp, frames=None, *,
+                  cfg: ModelConfig, page: int, kv_quant: str | None):
+    """Batched admission: model prefill + page scatter + first-token sample.
+
+    tokens (B, S) right-padded; valid (B,); tbl (B, S/page); samp = the
+    5-tuple of per-row sampling arrays (count = 0 for the first token).
+    Returns (token (B,), logits (B, Vpad), pools, enc|None).
+    """
+    if cfg.family == "encdec":
+        enc = E.encode(params, cfg, frames)
+        logits, kv = E.encdec_prefill_batch(params, cfg, tokens, valid, enc)
+    else:
+        enc = None
+        logits, kv = LM.lm_prefill_batch(params, cfg, tokens, valid)
+    pools = scatter_prefill(pools, kv, tbl, valid, page, kv_quant)
+    tok = sample_tokens(logits, *samp, vocab=cfg.vocab)
+    return tok, logits, pools, enc
+
+
+def paged_decode(params, token, counts, tbl, pools, samp, enc=None, *,
+                 cfg: ModelConfig, page: int, kv_quant: str | None,
+                 use_kernel: bool, mesh=None):
+    """One decode step over every slot. token (B,) last sampled tokens;
+    counts (B,) tokens already resident (the new token writes at index
+    ``counts`` and attention covers ``<= counts``); tbl (B, npages_bucket).
+    Returns (next token (B,), updated pools dict)."""
+    pos = counts.astype(jnp.int32)
+    positions = pos[:, None]
+    pid = jnp.take_along_axis(tbl, (pos // page)[:, None], axis=1)[:, 0]
+    off = pos % page
+
+    x = jnp.take(params["embed"], token[:, None], axis=0)       # (B, 1, D)
+    if cfg.family == "encdec":
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)
+        blocks = params["dec_blocks"]
+    else:
+        blocks = params["blocks"]
+    x = constrain(x, "residual")
+
+    kc, vc = pools["k"], pools["v"]
+    ks, vs = pools.get("k_scale"), pools.get("v_scale")
+    attn = functools.partial(_paged_attn, use_kernel=use_kernel, mesh=mesh)
+
+    def body(carry, scanned):
+        h, kc, vc, ks, vs = carry
+        p, l = scanned
+        hn = L.norm(h, p["norm1"], cfg.norm)
+        q, k1, v1 = L._qkv(p["attn"], hn, hn, cfg)
+        if cfg.family != "encdec":
+            q = L.rope(q, positions, cfg.rope_theta)
+            k1 = L.rope(k1, positions, cfg.rope_theta)
+        kc, ks = _append_token(kc, ks, l, pid, off, k1[:, 0], kv_quant)
+        vc, vs = _append_token(vc, vs, l, pid, off, v1[:, 0], kv_quant)
+        o = attn(q[:, 0], kc[l], vc[l],
+                 ks[l] if ks is not None else None,
+                 vs[l] if vs is not None else None, pos, tbl)
+        out = jnp.einsum("bhk,hkd->bd", o.astype(h.dtype), p["attn"]["wo"])
+        h = constrain(h + out[:, None], "residual")
+        if cfg.family == "encdec":
+            o, _ = L.attention(p["xattn"], L.norm(h, p["norm_x"], cfg.norm),
+                               cfg, positions, kv_x=enc, use_rope=False)
+            h = h + o
+        hn2 = L.norm(h, p["norm2"], cfg.norm)
+        if cfg.family == "moe":
+            f, _ = L.moe_ffn(p["moe"], hn2, cfg)
+        else:
+            f = L.ffn(p["ffn"], hn2, cfg)
+        return (h + f, kc, vc, ks, vs), None
+
+    (x, kc, vc, ks, vs), _ = jax.lax.scan(
+        body, (x, kc, vc, ks, vs),
+        (blocks, jnp.arange(cfg.n_layers)))
+
+    if cfg.family == "encdec":
+        xn = L.norm(x, params["final_norm"], cfg.norm)
+        logits = jnp.einsum("bsd,vd->bsv", xn, params["embed"]).astype(jnp.float32)
+        logits = constrain(logits, "logits")
+    else:
+        logits = constrain(LM._head_logits(params, cfg, x), "logits")
+
+    out = dict(pools)
+    out["k"], out["v"] = kc, vc
+    if ks is not None:
+        out["k_scale"], out["v_scale"] = ks, vs
+    tok = sample_tokens(logits[:, 0], *samp, vocab=cfg.vocab)
+    return tok, out

@@ -1,25 +1,70 @@
-"""Batched serving engine: prefill + decode with a slot-based batch.
+"""Continuous-batching serving engine on a paged, optionally quantized KV
+cache.
 
-A fixed-capacity decode batch ("slots"); finished sequences free their slot
-and queued requests are prefilling into it (continuous batching at the
-granularity of the decode step). Greedy sampling; EOS or max-new-tokens
-terminates a sequence. Pure JAX steps are jitted once per (batch, cache)
-shape.
+What replaced the seed slot-batcher (kept as ``repro.serving.legacy``):
+
+* **Paged memory** — one pooled cache of fixed-size pages + a slot→page
+  block table (``repro.serving.pages``). A request holds exactly
+  ``ceil((prompt + max_new) / page)`` pages for its lifetime; long and
+  short sequences share the pool and nothing is padded to ``max_len``.
+* **Batched prefill admission** — queued requests are admitted together
+  under a token budget, right-padded to a shared pow2-bucketed length
+  (pow2 batch rows too, so jit keys stay few), run through one batched
+  prefill, and their K/V prefixes scattered straight into their pages.
+* **Paged decode** — every step decodes all slots over the smallest pow2
+  page-table bucket that covers the longest active row; the hot path is
+  the ``flash_decode_paged`` Pallas kernel (``use_kernel=True``) with the
+  block table scalar-prefetched into its index maps.
+* **Sampling** — per-request temperature / top-k / top-p with a
+  per-request seed (``repro.serving.sampling``); token ``t`` of a request
+  draws from ``fold_in(PRNGKey(seed), t)`` regardless of slot or batch
+  company. ``temperature=0`` (default) is exact greedy.
+* **Quantized KV** — ``kv_quant="int8" | "fp8"`` stores pages through
+  ``core.quant`` with per-(token, head) scales; attention dequantizes
+  in-register on the kernel path.
+* **Mesh decode** — pass ``mesh=`` to install the PR 4 ``rules``
+  activation constraints in "decode" mode, place the pools heads-over-
+  model, and run the kernel under ``shard_map``.
+
+Admission policy (documented in docs/serving.md): FIFO, head-of-line
+blocking — the queue head is admitted as soon as a slot AND its full page
+allowance are free, then more requests join the same prefill batch until
+the token budget or resources run out. Upfront full-lifetime page grants
+mean an admitted request can never be starved mid-decode, so there is no
+preemption machinery to get wrong.
+
+``run()`` returns the requests that actually finished during the call —
+the seed version returned a snapshot of the *queue* taken before the loop
+(dropping anything admitted earlier or submitted mid-run); the regression
+test pins the fix.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import init_cache, lm_decode_step, lm_prefill
 from repro.models.config import ModelConfig
+from repro.serving import decode as D
+from repro.serving.pages import (
+    PageAllocator,
+    PagedKV,
+    init_paged_kv,
+    pages_needed,
+)
+from repro.serving.sampling import SampleParams
 
 PyTree = Any
+
+SUPPORTED_FAMILIES = ("dense", "moe", "encdec")
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -29,80 +74,255 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # sampling (defaults = exact greedy, matching the seed engine)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    # enc-dec: stub-frontend frames (T_enc, D); zeros when omitted
+    frames: np.ndarray | None = None
 
 
 class GenerationEngine:
-    def __init__(self, params, cfg: ModelConfig, slots: int = 4, max_len: int = 512, eos_id: int = -1):
+    def __init__(self, params, cfg: ModelConfig, slots: int = 4,
+                 max_len: int = 512, eos_id: int = -1, *, page: int = 16,
+                 npages: int | None = None, kv_quant: str | None = None,
+                 use_kernel: bool = False, prefill_budget: int = 4096,
+                 mesh=None):
+        if cfg.family not in SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"paged serving supports {SUPPORTED_FAMILIES}, not "
+                f"{cfg.family!r}; use repro.serving.legacy.LegacySlotEngine "
+                "for recurrent-state families")
         self.params = params
         self.cfg = cfg
         self.slots = slots
-        self.max_len = max_len
+        self.page = page
+        self.maxp = pages_needed(max_len, page)
+        self.max_len = self.maxp * page
         self.eos_id = eos_id
-        self.cache = init_cache(cfg, slots, max_len)
-        self.slot_req: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
-        self._decode = jax.jit(lambda p, t, c: lm_decode_step(p, cfg, t, c))
-        self._prefill = jax.jit(lambda p, t: lm_prefill(p, cfg, t))
+        self.kv_quant = kv_quant
+        self.use_kernel = use_kernel
+        self.prefill_budget = max(1, prefill_budget)
+        self.mesh = mesh
 
-    def submit(self, req: Request):
+        npages = npages or (1 + slots * self.maxp)
+        self.allocator = PageAllocator(npages)
+        self.kv: PagedKV = init_paged_kv(cfg, npages, page, kv_quant)
+        self.tbl = np.zeros((slots, self.maxp), np.int32)
+        self.counts = np.zeros((slots,), np.int32)   # tokens resident per slot
+        self.samp = SampleParams.zeros(slots)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_pages: list[list[int] | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.stats = {"prefill_batches": 0, "prefill_tokens": 0,
+                      "prefill_rows": 0, "decode_steps": 0,
+                      "max_admit_tokens": 0, "deferred_admissions": 0}
+        self._finished: list[Request] = []
+        self._jits: dict[tuple, Any] = {}
+
+        self.enc = None
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            self.enc = jnp.zeros((slots, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        if mesh is not None:
+            from repro.distributed import rules
+
+            sh = rules.paged_cache_shardings(mesh, cfg, self.kv.tree())
+            pools = {k: jax.device_put(v, sh[k])
+                     for k, v in self.kv.tree().items()}
+            self._set_pools(pools)
+            if self.enc is not None:
+                self.enc = jax.device_put(
+                    self.enc, rules.paged_enc_sharding(mesh, cfg,
+                                                       self.enc.shape))
+
+    # -- jit plumbing -------------------------------------------------------
+
+    def _ctx(self):
+        if self.mesh is None:
+            import contextlib
+
+            return contextlib.nullcontext()
+        from repro.distributed import rules
+        from repro.distributed.ctx import sharding_ctx
+
+        return sharding_ctx(rules.activation_rules(self.mesh, self.cfg, "decode"))
+
+    def _prefill_fn(self, bp: int, sp: int):
+        key = ("prefill", bp, sp)
+        if key not in self._jits:
+            fn = functools.partial(D.paged_prefill, cfg=self.cfg,
+                                   page=self.page, kv_quant=self.kv_quant)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
+
+    def _decode_fn(self, npb: int):
+        key = ("decode", npb)
+        if key not in self._jits:
+            fn = functools.partial(D.paged_decode, cfg=self.cfg,
+                                   page=self.page, kv_quant=self.kv_quant,
+                                   use_kernel=self.use_kernel, mesh=self.mesh)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
+
+    def _set_pools(self, pools: dict) -> None:
+        self.kv.k, self.kv.v = pools["k"], pools["v"]
+        if self.kv.quantized:
+            self.kv.k_scale = pools["k_scale"]
+            self.kv.v_scale = pools["v_scale"]
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if pages_needed(plen + req.max_new, self.page) > min(
+                self.maxp, self.allocator.capacity):
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
+                f"exceeds per-slot capacity {self.max_len} "
+                f"(pool {self.allocator.capacity} pages of {self.page})")
         self.queue.append(req)
 
-    def _admit(self):
-        """Fill free slots by prefilling queued requests one at a time."""
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                logits, pcache = self._prefill(self.params, req.prompt[None, :])
-                tok = int(jax.device_get(jnp.argmax(logits[0, -1, : self.cfg.vocab])))
-                req.out.append(tok)
-                self._install(s, pcache, len(req.prompt))
-                self.slot_req[s] = req
-
-    def _install(self, slot: int, pcache, plen: int):
-        """Copy a single-sequence prefill cache into batch slot `slot`."""
-        # attention caches: (L, B, S, H, D); prefill cache has S=plen
-        new = {}
-        for key in self.cache:
-            if key == "pos":
-                new[key] = self.cache[key].at[slot].set(plen)
-            elif isinstance(self.cache[key], dict):
-                sub = {}
-                for k2, dst in self.cache[key].items():
-                    src = pcache[key][k2]
-                    if dst.ndim == 5:  # (L, 1, S_p, H, D) -> pad to S_max
-                        pad = dst.shape[2] - src.shape[2]
-                        srcp = jnp.pad(src, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-                        sub[k2] = dst.at[:, slot].set(srcp[:, 0])
-                    else:
-                        sub[k2] = dst.at[:, slot].set(src[:, 0])
-                new[key] = sub
-            else:
-                new[key] = self.cache[key]
-        self.cache = new
-
-    def step(self):
-        """One decode step across all active slots."""
+    def step(self) -> bool:
+        """Admit what fits, then run one decode step. False = fully idle."""
         self._admit()
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return False
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s in active:
-            toks[s, 0] = self.slot_req[s].out[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(toks), self.cache)
-        nxt = jax.device_get(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
-        for s in active:
-            req = self.slot_req[s]
-            tok = int(nxt[s])
-            req.out.append(tok)
-            if tok == self.eos_id or len(req.out) >= req.max_new:
-                req.done = True
-                self.slot_req[s] = None
+        self._decode_step(active)
         return True
 
     def run(self) -> list[Request]:
+        """Drive to completion; returns the requests that finished during
+        this call (admitted-before-call and submitted-mid-run included)."""
         finished: list[Request] = []
-        pending = list(self.queue)
-        while self.step() or self.queue:
-            pass
-        return pending
+        while self.step():
+            finished.extend(self._finished)
+            self._finished.clear()
+        finished.extend(self._finished)
+        self._finished.clear()
+        return finished
+
+    # -- admission ----------------------------------------------------------
+
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.slots) if self.slot_req[s] is None]
+
+    def _admit(self) -> None:
+        import jax.numpy as jnp
+
+        free = self._free_slots()
+        admits: list[tuple[int, Request, list[int]]] = []
+        tokens = 0
+        while self.queue and free:
+            req = self.queue[0]
+            plen = len(req.prompt)
+            if admits and tokens + plen > self.prefill_budget:
+                break
+            need = pages_needed(plen + req.max_new, self.page)
+            pages = self.allocator.alloc(need)
+            if pages is None:
+                self.stats["deferred_admissions"] += 1
+                break   # FIFO head-of-line: wait for pages to free up
+            self.queue.pop(0)
+            admits.append((free.pop(0), req, pages))
+            tokens += plen
+
+        if not admits:
+            return
+
+        bp = _pow2(len(admits))
+        sp = self.page * _pow2(pages_needed(
+            max(len(r.prompt) for _, r, _ in admits), self.page))
+        spp = sp // self.page
+        tok_b = np.zeros((bp, sp), np.int32)
+        valid = np.ones((bp,), np.int32)
+        tbl_b = np.zeros((bp, spp), np.int32)
+        samp = SampleParams.zeros(bp)
+        frames = None
+        if self.cfg.family == "encdec":
+            frames = np.zeros((bp, self.cfg.encoder_seq, self.cfg.d_model),
+                              np.float32)
+        for i, (slot, req, pages) in enumerate(admits):
+            plen = len(req.prompt)
+            tok_b[i, :plen] = np.asarray(req.prompt, np.int32)
+            valid[i] = plen
+            row = np.zeros((self.maxp,), np.int32)
+            row[: len(pages)] = pages
+            self.tbl[slot] = row
+            tbl_b[i] = row[:spp]
+            samp.set_slot(i, temperature=req.temperature, top_k=req.top_k,
+                          top_p=req.top_p, seed=req.seed, count=0)
+            if frames is not None and req.frames is not None:
+                frames[i] = np.asarray(req.frames, np.float32)
+
+        with self._ctx():
+            tok, _logits, pools, enc = self._prefill_fn(bp, sp)(
+                self.params, jnp.asarray(tok_b), jnp.asarray(valid),
+                jnp.asarray(tbl_b), self.kv.tree(), samp.arrays(),
+                jnp.asarray(frames) if frames is not None else None)
+        self._set_pools(pools)
+        tok_h = np.asarray(jax.device_get(tok))
+        if enc is not None:
+            rows = jnp.asarray([slot for slot, _, _ in admits])
+            take = jnp.arange(len(admits))
+            self.enc = self.enc.at[rows].set(enc[take].astype(self.enc.dtype))
+
+        self.stats["prefill_batches"] += 1
+        self.stats["prefill_tokens"] += tokens
+        self.stats["prefill_rows"] += len(admits)
+        self.stats["max_admit_tokens"] = max(self.stats["max_admit_tokens"],
+                                             tokens)
+        for i, (slot, req, pages) in enumerate(admits):
+            first = int(tok_h[i])
+            req.out.append(first)
+            self.counts[slot] = len(req.prompt)
+            self.samp.set_slot(slot, temperature=req.temperature,
+                               top_k=req.top_k, top_p=req.top_p,
+                               seed=req.seed, count=1)
+            self.slot_req[slot] = req
+            self.slot_pages[slot] = pages
+            if first == self.eos_id or len(req.out) >= req.max_new:
+                self._retire(slot)
+
+    # -- decode -------------------------------------------------------------
+
+    def _decode_step(self, active: list[int]) -> None:
+        import jax.numpy as jnp
+
+        npb = min(self.maxp, _pow2(max(
+            pages_needed(int(self.counts[s]) + 1, self.page) for s in active)))
+        toks = np.zeros((self.slots,), np.int32)
+        for s in active:
+            toks[s] = self.slot_req[s].out[-1]
+        with self._ctx():
+            tok, pools = self._decode_fn(npb)(
+                self.params, jnp.asarray(toks), jnp.asarray(self.counts),
+                jnp.asarray(self.tbl[:, :npb]), self.kv.tree(),
+                self.samp.arrays(), self.enc)
+        self._set_pools(pools)
+        tok_h = np.asarray(jax.device_get(tok))
+        self.stats["decode_steps"] += 1
+        for s in active:
+            req = self.slot_req[s]
+            t = int(tok_h[s])
+            req.out.append(t)
+            self.counts[s] += 1
+            self.samp.count[s] += 1
+            if t == self.eos_id or len(req.out) >= req.max_new:
+                self._retire(s)
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        self.allocator.free(self.slot_pages[slot])
+        self.slot_pages[slot] = None
+        self.slot_req[slot] = None
+        self.tbl[slot] = 0
+        self.counts[slot] = 0
+        self.samp.set_slot(slot)
+        req.done = True
+        self._finished.append(req)

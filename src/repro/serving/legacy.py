@@ -1,0 +1,101 @@
+"""The seed slot-batcher, kept verbatim as the serving bench baseline.
+
+This is the engine the paged rebuild (``repro.serving.engine``) replaces:
+one-at-a-time prefill admission (a fresh jit per distinct prompt length),
+every cache padded to ``max_len``, greedy-only host argmax. It exists so
+``benchmarks/serve_bench.py`` can price the rebuild against the exact seed
+behavior on the same trace — do not grow features here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache, lm_decode_step, lm_prefill
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LegacyRequest:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class LegacySlotEngine:
+    """Fixed-capacity decode batch; finished sequences free their slot and
+    queued requests prefill into it one at a time."""
+
+    def __init__(self, params, cfg: ModelConfig, slots: int = 4,
+                 max_len: int = 512, eos_id: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, slots, max_len)
+        self.slot_req: list[LegacyRequest | None] = [None] * slots
+        self.queue: list[LegacyRequest] = []
+        self._decode = jax.jit(lambda p, t, c: lm_decode_step(p, cfg, t, c))
+        self._prefill = jax.jit(lambda p, t: lm_prefill(p, cfg, t))
+
+    def submit(self, req: LegacyRequest):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, pcache = self._prefill(self.params, req.prompt[None, :])
+                tok = int(jax.device_get(jnp.argmax(logits[0, -1, : self.cfg.vocab])))
+                req.out.append(tok)
+                self._install(s, pcache, len(req.prompt))
+                self.slot_req[s] = req
+
+    def _install(self, slot: int, pcache, plen: int):
+        new = {}
+        for key in self.cache:
+            if key == "pos":
+                new[key] = self.cache[key].at[slot].set(plen)
+            elif isinstance(self.cache[key], dict):
+                sub = {}
+                for k2, dst in self.cache[key].items():
+                    src = pcache[key][k2]
+                    if dst.ndim == 5:  # (L, 1, S_p, H, D) -> pad to S_max
+                        pad = dst.shape[2] - src.shape[2]
+                        srcp = jnp.pad(src, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                        sub[k2] = dst.at[:, slot].set(srcp[:, 0])
+                    else:
+                        sub[k2] = dst.at[:, slot].set(src[:, 0])
+                new[key] = sub
+            else:
+                new[key] = self.cache[key]
+        self.cache = new
+
+    def step(self):
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.slot_req[s].out[-1]
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks), self.cache)
+        nxt = jax.device_get(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                req.done = True
+                self.slot_req[s] = None
+        return True

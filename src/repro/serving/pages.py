@@ -1,0 +1,157 @@
+"""Paged KV-cache bookkeeping: the page allocator and the pooled arrays.
+
+The serving engine's KV cache is a **pool of fixed-size pages** shared by
+every slot — long and short sequences co-exist without anyone paying
+``max_len`` padding. Layout:
+
+* payload pools ``k`` / ``v``: ``(L, P, page, Hkv, D)`` — page ``p`` of
+  layer ``l`` holds ``page`` consecutive tokens of exactly one sequence
+  (or scratch). Payload dtype is the model dtype, or the 1-byte
+  ``core.quant`` payload dtype under ``kv_quant``;
+* scale pools ``k_scale`` / ``v_scale``: ``(L, P, page, Hkv)`` f32,
+  present only under quantization — one scale per **(token, head)**,
+  because pages fill append-only (a single per-page scalar would have to
+  re-quantize every resident token when a new absmax arrives; per-token
+  scales make the write-once append exact and cheap);
+* a host-side **block table** ``(slots, max_pages_per_slot)`` int32 mapping
+  each slot's j-th logical page to a pool page id, zero-padded.
+
+**Page 0 is reserved scratch**: the allocator never hands it out, so a
+zero-padded table row is always safe to address — dummy prefill rows,
+inactive decode slots, and positions past a row's valid length all land on
+(or read) page 0 and are masked out by ``pos`` downstream.
+
+:class:`PageAllocator` is deliberately plain host Python (allocation
+happens once per request admission/retirement, never on the hot path) with
+invariants the hypothesis suite in ``tests/test_serving.py`` hammers: no
+page is ever double-owned, freeing returns exactly what was allocated, and
+the reserved page can neither be allocated nor freed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.quant import payload_dtype
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+RESERVED_PAGES = 1  # page 0: scratch target for padded / inactive rows
+
+
+class PageAllocator:
+    """Free-list allocator over pool pages ``[RESERVED_PAGES, npages)``.
+
+    ``alloc(n)`` returns ``n`` distinct page ids or ``None`` when fewer
+    than ``n`` are free (the engine defers admission — never a partial
+    grant). ``free(pages)`` returns them; freeing a page that is not
+    currently allocated (double-free, foreign id, the reserved page)
+    raises ``ValueError``.
+    """
+
+    def __init__(self, npages: int):
+        if npages <= RESERVED_PAGES:
+            raise ValueError(f"need > {RESERVED_PAGES} pages, got {npages}")
+        self.npages = npages
+        self._free: list[int] = list(range(npages - 1, RESERVED_PAGES - 1, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        return self.npages - RESERVED_PAGES
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated(self) -> frozenset[int]:
+        return frozenset(self._allocated)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        pages = list(pages)
+        bad = [p for p in pages if p not in self._allocated]
+        if bad or len(set(pages)) != len(pages):
+            raise ValueError(f"free of unallocated/duplicate pages: {pages}")
+        for p in pages:
+            self._allocated.remove(p)
+            self._free.append(p)
+
+    def check_invariants(self) -> None:
+        """Every page is exactly one of {reserved, free, allocated}."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (free & self._allocated), "page both free and allocated"
+        assert free | self._allocated == set(range(RESERVED_PAGES, self.npages))
+        assert all(p >= RESERVED_PAGES for p in free | self._allocated)
+
+
+@dataclasses.dataclass
+class PagedKV:
+    """Device-side pooled KV cache (+ per-token scales under quantization)."""
+
+    k: jnp.ndarray                       # (L, P, page, Hkv, D) payload
+    v: jnp.ndarray
+    k_scale: jnp.ndarray | None = None   # (L, P, page, Hkv) f32 when quantized
+    v_scale: jnp.ndarray | None = None
+
+    @property
+    def page(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def npages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    def tree(self) -> dict:
+        out = {"k": self.k, "v": self.v}
+        if self.quantized:
+            out["k_scale"] = self.k_scale
+            out["v_scale"] = self.v_scale
+        return out
+
+
+def init_paged_kv(cfg: ModelConfig, npages: int, page: int,
+                  kv_quant: str | None = None) -> PagedKV:
+    """Zeroed pools for ``cfg.n_layers`` decoder layers."""
+    shape = (cfg.n_layers, npages, page, cfg.kv_heads, cfg.hd)
+    dt = payload_dtype(kv_quant) if kv_quant else jnp.dtype(cfg.dtype)
+    kv = PagedKV(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))
+    if kv_quant:
+        sc = jnp.ones(shape[:-1], jnp.float32)
+        kv.k_scale, kv.v_scale = sc, sc
+    return kv
+
+
+def pages_needed(tokens: int, page: int) -> int:
+    return -(-tokens // page)
+
+
+def gather_pages(pool: jnp.ndarray, tbl: jnp.ndarray,
+                 scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Reassemble a dense (B, npages*page, Hkv, D) cache from per-layer
+    pool (P, page, Hkv, D) + table (B, npages); dequantizes when ``scale``
+    (P, page, Hkv) is given. Test/oracle utility — the kernel path never
+    materializes this."""
+    g = pool[tbl]                        # (B, npages, page, Hkv, D)
+    if scale is not None:
+        g = g.astype(jnp.float32) * scale[tbl][..., None]
+    b, n, p, h, d = g.shape
+    return g.reshape(b, n * p, h, d)

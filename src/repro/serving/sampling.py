@@ -1,0 +1,103 @@
+"""Per-request seeded sampling: greedy / temperature / top-k / top-p.
+
+Every request carries its own ``(seed, token index)`` RNG state; the key
+for token ``t`` of a request is ``fold_in(PRNGKey(seed), t)``, computed
+*inside* the jitted step via vmap. Consequences the test suite locks down:
+
+* the stream is a pure function of ``(seed, t)`` — the same request
+  produces the same tokens whether it runs solo or packed next to others
+  (no cross-slot RNG bleed: no batch-level key is ever split by position);
+* jit / no-jit and any batch padding produce identical tokens (threefry
+  is deterministic and each row's key is derived from row data only);
+* ``temperature == 0`` short-circuits to exact ``argmax`` — bitwise the
+  greedy reference, no RNG draw involved.
+
+Filters compose OpenAI-style: logits / temperature → top-k cut → top-p
+(nucleus) cut over the renormalized distribution → Gumbel-argmax draw.
+``top_k <= 0`` and ``top_p >= 1`` disable the respective filter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+@dataclasses.dataclass
+class SampleParams:
+    """Host-side per-slot sampling state, mirrored to device each step."""
+
+    temperature: np.ndarray   # (slots,) f32; 0 = greedy
+    top_k: np.ndarray         # (slots,) i32; 0 = off
+    top_p: np.ndarray         # (slots,) f32; 1 = off
+    seed: np.ndarray          # (slots,) u32
+    count: np.ndarray         # (slots,) i32: tokens sampled so far
+
+    @classmethod
+    def zeros(cls, slots: int) -> "SampleParams":
+        return cls(
+            temperature=np.zeros((slots,), np.float32),
+            top_k=np.zeros((slots,), np.int32),
+            top_p=np.ones((slots,), np.float32),
+            seed=np.zeros((slots,), np.uint32),
+            count=np.zeros((slots,), np.int32),
+        )
+
+    def set_slot(self, s: int, *, temperature=0.0, top_k=0, top_p=1.0,
+                 seed=0, count=0) -> None:
+        self.temperature[s] = temperature
+        self.top_k[s] = top_k
+        self.top_p[s] = top_p
+        self.seed[s] = seed
+        self.count[s] = count
+
+    def arrays(self) -> tuple:
+        return (jnp.asarray(self.temperature), jnp.asarray(self.top_k),
+                jnp.asarray(self.top_p), jnp.asarray(self.seed),
+                jnp.asarray(self.count))
+
+
+def _sample_row(logits, temperature, top_k, top_p, seed, count):
+    """One row: logits (V,) f32 (already vocab-masked) -> token i32."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+
+    t = jnp.maximum(temperature, 1e-6)
+    l = logits / t
+    # top-k: threshold at the k-th largest value (k<=0 keeps everything)
+    desc = jnp.sort(l)[::-1]
+    kth = desc[jnp.clip(top_k - 1, 0, v - 1)]
+    l = jnp.where((top_k > 0) & (l < kth), NEG, l)
+    # top-p: keep the smallest prefix of the sorted distribution whose mass
+    # reaches p (the token crossing the boundary is kept)
+    probs = jax.nn.softmax(l)
+    sp = jnp.sort(probs)[::-1]
+    cum = jnp.cumsum(sp)
+    kept = jnp.where(cum - sp < top_p, sp, jnp.inf)
+    thresh = jnp.min(kept)            # smallest kept probability
+    l = jnp.where(probs >= thresh, l, NEG)
+
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+    g = jax.random.gumbel(key, (v,), jnp.float32)
+    sampled = jnp.argmax(l + g).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, count,
+                  vocab: int):
+    """Batched sampler. logits (B, Vpad) f32; per-row parameter vectors
+    (B,). Columns ``>= vocab`` are masked before any filter. Returns (B,)
+    int32 tokens."""
+    vp = logits.shape[-1]
+    if vp != vocab:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, :] < vocab, logits, NEG)
+    return jax.vmap(_sample_row)(
+        logits, temperature.astype(jnp.float32), top_k.astype(jnp.int32),
+        top_p.astype(jnp.float32), seed.astype(jnp.uint32),
+        count.astype(jnp.int32))

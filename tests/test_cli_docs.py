@@ -12,6 +12,7 @@ from pathlib import Path
 import pytest
 
 from repro.launch.dryrun import build_parser as dryrun_parser
+from repro.launch.serve import build_parser as serve_parser
 from repro.launch.train import build_parser as train_parser
 
 CLI_MD = Path(__file__).resolve().parents[1] / "docs" / "cli.md"
@@ -19,6 +20,7 @@ CLI_MD = Path(__file__).resolve().parents[1] / "docs" / "cli.md"
 SECTIONS = {
     "repro.launch.train": train_parser,
     "repro.launch.dryrun": dryrun_parser,
+    "repro.launch.serve": serve_parser,
 }
 
 

@@ -17,9 +17,14 @@ line per violation) when the candidate regresses:
   multiplier of its committed baseline;
 * **hard invariants on the candidate alone** (no baseline needed):
   overlap-on step time <= overlap-off within :data:`OVERLAP_TOL` at equal
-  memory (the interleaved schedule must never cost wall-clock), and
-  offload-on per-device device-resident bytes strictly below the
-  device-resident qstate baseline (the tier's acceptance criterion).
+  memory (the interleaved schedule must never cost wall-clock), offload-on
+  per-device device-resident bytes strictly below the device-resident
+  qstate baseline (the tier's acceptance criterion), and the paged serving
+  engine (``BENCH_serve.json``) at least :data:`SERVE_SPEEDUP_MIN` x the
+  legacy slot-batcher's tokens/s on the same trace — both engines run in
+  the same process, so the ratio needs no baseline;
+* **serving trajectory** vs baseline: legacy-normalized tokens/s and p99
+  per-token latency ratios within :data:`TIME_TOL`.
 
 Timing rows compare as ratios so a uniformly slower CI machine passes;
 only a *relative* regression of one variant trips the gate. Bytes rows
@@ -43,6 +48,10 @@ TIME_TOL = 1.75
 # claim (on CPU the schedule is a pure reordering), so the tolerance only
 # absorbs timer noise
 OVERLAP_TOL = 0.25
+# paged serving vs the seed slot-batcher on the same trace, same machine:
+# the continuous-batching engine must clear this throughput multiple (the
+# PR's acceptance criterion — a hard invariant on the candidate alone)
+SERVE_SPEEDUP_MIN = 2.0
 
 
 def _load(d: Path, name: str) -> dict | None:
@@ -138,10 +147,57 @@ def _check_offload_memory(cand: dict, fails: list[str]) -> None:
                 f"device-resident baseline {dev_base[key]}")
 
 
+def _check_serve_invariants(cand: dict, fails: list[str]) -> None:
+    """Hard floor on the candidate alone: paged engine tokens/s must be at
+    least SERVE_SPEEDUP_MIN x the legacy slot-batcher on the same trace.
+    Both engines run in the same process on the same machine, so the ratio
+    is machine-independent — no baseline needed."""
+    leg = cand.get("legacy", {}).get("tokens_per_s")
+    for variant in ("paged", "paged_kernel", "paged_kernel_int8"):
+        row = cand.get(variant)
+        if not leg or not row:
+            continue
+        speedup = row["tokens_per_s"] / leg
+        if speedup < SERVE_SPEEDUP_MIN:
+            fails.append(
+                f"serving speedup for {variant}: {speedup:.2f}x legacy "
+                f"tokens/s, below the {SERVE_SPEEDUP_MIN}x floor")
+
+
+def _check_serve_baseline(base: dict, cand: dict, fails: list[str]) -> None:
+    """Candidate speedup ratios vs the committed baseline's, with the same
+    generous multiplier as step times (both are legacy-normalized, so a
+    uniformly slower machine cancels out)."""
+    b_leg = base.get("legacy", {}).get("tokens_per_s")
+    c_leg = cand.get("legacy", {}).get("tokens_per_s")
+    if not b_leg or not c_leg:
+        return
+    for variant in ("paged", "paged_kernel", "paged_kernel_int8"):
+        b, c = base.get(variant), cand.get(variant)
+        if not b or not c:
+            continue
+        b_ratio = b["tokens_per_s"] / b_leg
+        c_ratio = c["tokens_per_s"] / c_leg
+        if c_ratio < b_ratio / TIME_TOL:
+            fails.append(
+                f"serving throughput regression for {variant}: "
+                f"{c_ratio:.2f}x legacy vs baseline {b_ratio:.2f}x "
+                f"(tol {TIME_TOL}x)")
+        b_p99, c_p99 = b.get("p99_ms"), c.get("p99_ms")
+        b_lp99, c_lp99 = base["legacy"].get("p99_ms"), cand["legacy"].get("p99_ms")
+        if b_p99 and c_p99 and b_lp99 and c_lp99:
+            if c_p99 / c_lp99 > (b_p99 / b_lp99) * TIME_TOL:
+                fails.append(
+                    f"serving p99 latency regression for {variant}: "
+                    f"{c_p99 / c_lp99:.2f}x legacy vs baseline "
+                    f"{b_p99 / b_lp99:.2f}x (tol {TIME_TOL}x)")
+
+
 def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
     fails: list[str] = []
     checked = 0
-    for name in ("BENCH_step_time.json", "BENCH_opt_memory.json"):
+    for name in ("BENCH_step_time.json", "BENCH_opt_memory.json",
+                 "BENCH_serve.json"):
         base, cand = _load(baseline_dir, name), _load(candidate_dir, name)
         if cand is None:
             fails.append(f"candidate {candidate_dir / name} missing — did "
@@ -149,13 +205,18 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
             continue
         if name == "BENCH_step_time.json":
             _check_overlap_invariants(cand, fails)
-        else:
+        elif name == "BENCH_opt_memory.json":
             _check_offload_memory(cand, fails)
+        else:
+            _check_serve_invariants(cand, fails)
         if base is None:
             print(f"[bench_compare] no baseline {baseline_dir / name}; "
                   "invariant checks only")
             continue
         checked += 1
+        if name == "BENCH_serve.json":
+            _check_serve_baseline(base, cand, fails)
+            continue
         _walk_bytes(base, cand, name, fails)
         if name == "BENCH_step_time.json":
             _check_times(base, cand, fails)
