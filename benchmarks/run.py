@@ -7,9 +7,11 @@ Emits the machine-readable perf trajectory alongside the printed tables:
 incl. frozen groups, the qstate quantized grid, and the host-offload
 device/host split), ``BENCH_step_time.json`` (per-optimizer
 ms/launches/boundary-transport bytes plus the ``--overlap``/``--offload``
-on/off grid), and ``BENCH_serve.json`` (paged-serving tokens/s and
-p50/p99 per-token latency vs the legacy slot-batcher on an open-loop
-trace) under ``--json-dir`` (default ``results/bench/``). The CI
+on/off grid), ``BENCH_transport.json`` (gradient-boundary bytes per
+transport mode + the compressed-vs-dense convergence parity), and
+``BENCH_serve.json`` (paged-serving tokens/s and p50/p99 per-token
+latency vs the legacy slot-batcher on an open-loop trace) under
+``--json-dir`` (default ``results/bench/``). The CI
 ``bench`` job gates the fresh records against the committed repo-root
 baselines via ``tools/bench_compare.py`` and uploads them as workflow
 artifacts, so every commit carries its measured trajectory.
@@ -52,6 +54,12 @@ def main() -> None:
         from benchmarks import convergence
 
         convergence.main()
+
+    _section("Gradient transport: boundary pricing + convergence parity")
+    from benchmarks import transport_bench
+
+    transport_bench.main(json_path=json_dir / "BENCH_transport.json",
+                         fast=args.fast)
 
     _section("Serving: paged continuous batching vs the seed slot-batcher")
     from benchmarks import serve_bench

@@ -1,0 +1,167 @@
+"""Gradient-transport trajectory — pricing, convergence parity, step time.
+
+Three sections, one committed+gated record (``BENCH_transport.json``):
+
+* **pricing** — analytic gradient-boundary bytes/step on the *full*
+  ``transformer_base`` param tree under every transport mode
+  (``rules.boundary_transport_bytes``'s ``grad`` column). ASSERTS the
+  acceptance ratios: rank1 <= 35% and int8 <= 30% of dense f32.
+* **convergence** — the transformer_base smoke config trained from the
+  same init/stream under ``transport=none|int8|rank1``; ASSERTS the
+  compressed final losses match dense transport within 0.5% (run is
+  deterministic: seeded SR, synthetic stream).
+* **opt_ms** — optimizer-only step time per mode on the transformer-block
+  param set (``benchmarks/step_time._params``), the trajectory rows
+  ``tools/bench_compare.py`` tracks ratio-normalized.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data import SyntheticLMStream
+from repro.distributed.rules import boundary_transport_bytes
+from repro.launch.specs import params_specs
+from repro.launch.steps import make_train_step
+from repro.models import init_encdec, init_lm
+from repro.optim import OptimizerSpec, build_optimizer
+
+MODES = ("none", "int8", "rank1")
+RANK1_MAX_RATIO = 0.35   # acceptance: rank1 bytes vs dense f32
+INT8_MAX_RATIO = 0.30
+PARITY_TOL = 0.005       # acceptance: compressed vs dense final loss
+
+TRANSPORT_AXES = {"data": 4}
+
+
+def _spec(mode: str, lr=1e-3):
+    hp = {"lr": lr, "decay_rate": -0.8}
+    if mode != "none":
+        hp.update(transport=mode, transport_flush_every=8)
+    return OptimizerSpec(family="smmf", hyperparams=hp)
+
+
+def bench_pricing(arch: str = "transformer_base") -> dict:
+    """Per-mode gradient-boundary bytes on the full arch param tree."""
+    psds = params_specs(get_config(arch))
+    opt = build_optimizer(_spec("rank1"))
+    grad = boundary_transport_bytes(opt.plan(psds), TRANSPORT_AXES)["grad"]
+    dense = grad["by_mode"]["none"]
+    out = {"arch": arch,
+           "modes": {m: {"bytes": grad["by_mode"][m],
+                         "ratio_vs_dense": grad["by_mode"][m] / dense}
+                     for m in MODES}}
+    assert out["modes"]["rank1"]["ratio_vs_dense"] <= RANK1_MAX_RATIO, out
+    assert out["modes"]["int8"]["ratio_vs_dense"] <= INT8_MAX_RATIO, out
+    return out
+
+
+def bench_convergence(steps: int = 120, batch: int = 4, seq: int = 32,
+                      window: int = 20) -> dict:
+    """transformer_base smoke: same init + stream per mode, final-loss
+    parity (mean of the last ``window`` steps). 120 steps / 20-step tail
+    because transport SR perturbs the *trajectory* (unbiased, not a drift):
+    shorter smokes compare two noisy snapshots and the 0.5% bar is then
+    dominated by when you stop, not by the compression."""
+    cfg = smoke_config("transformer_base")
+    out = {}
+    for mode in MODES:
+        opt = build_optimizer(_spec(mode))
+        init = init_encdec if cfg.family == "encdec" else init_lm
+        params = init(jax.random.PRNGKey(0), cfg)
+        state = opt.init(params)
+        stream = SyntheticLMStream(cfg, batch, seq, seed=0)
+        step = jax.jit(make_train_step(cfg, opt))
+        hist = []
+        for t in range(steps):
+            b = jax.tree.map(jnp.asarray, stream.batch(t))
+            params, state, m = step(params, state, b)
+            hist.append(float(m["loss"]))
+        out[mode] = {"final_loss": float(np.mean(hist[-window:])),
+                     "first_loss": hist[0]}
+    dense = out["none"]["final_loss"]
+    for mode in ("int8", "rank1"):
+        rel = abs(out[mode]["final_loss"] - dense) / abs(dense)
+        out[mode]["rel_vs_dense"] = rel
+        assert rel <= PARITY_TOL, (
+            f"transport={mode} final loss {out[mode]['final_loss']:.5f} "
+            f"vs dense {dense:.5f}: {100 * rel:.3f}% > "
+            f"{100 * PARITY_TOL}%")
+    return out
+
+
+def bench_opt_ms(iters: int = 20) -> dict:
+    """Optimizer-only step time per mode (transformer-block param set)."""
+    from benchmarks.step_time import _params
+    from repro.optim.base import apply_updates
+
+    out = {}
+    for mode in MODES:
+        opt = build_optimizer(_spec(mode))
+        params = _params()
+        state = opt.init(params)
+        grads = jax.tree.map(lambda p: p * 0.01, params)
+
+        @jax.jit
+        def step(params, state, grads):
+            u, s2 = opt.update(grads, state, params)
+            return apply_updates(params, u), s2
+
+        params, state = step(params, state, grads)  # compile
+        jax.block_until_ready(params)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            params, state = step(params, state, grads)
+        jax.block_until_ready(params)
+        out[mode] = {"ms": (time.perf_counter() - t0) / iters * 1e3}
+    return out
+
+
+def main(json_path: str | Path | None = None, fast: bool = False) -> dict:
+    """Print the three transport tables, assert the acceptance ratios, and
+    return (optionally write) the machine-readable record. ``fast=True``
+    skips the convergence smoke (kept for ``run.py --fast``; the committed
+    baseline and the CI bench job always run it)."""
+    rec: dict = {"transport_axes": TRANSPORT_AXES,
+                 "flush_every": 8, "pricing": {}, "opt_ms": {}}
+
+    print("== gradient-boundary bytes/step (transformer_base, full size) ==")
+    rec["pricing"] = bench_pricing()
+    for m, row in rec["pricing"]["modes"].items():
+        print(f"{m:6s} {row['bytes'] / 1e6:9.2f} MB/step  "
+              f"{100 * row['ratio_vs_dense']:6.2f}% of dense")
+    print(f"acceptance OK: rank1 <= {100 * RANK1_MAX_RATIO:.0f}%, "
+          f"int8 <= {100 * INT8_MAX_RATIO:.0f}% of dense f32")
+
+    print("\n== optimizer-only step time per mode ==")
+    rec["opt_ms"] = bench_opt_ms()
+    base = rec["opt_ms"]["none"]["ms"]
+    for m, row in rec["opt_ms"].items():
+        print(f"{m:6s} {row['ms']:7.2f} ms  ({row['ms'] / base:4.2f}x dense)")
+
+    if not fast:
+        print("\n== transformer_base smoke convergence parity ==")
+        rec["convergence"] = bench_convergence()
+        for m, row in rec["convergence"].items():
+            extra = f"  ({100 * row['rel_vs_dense']:.3f}% vs dense)" \
+                if "rel_vs_dense" in row else ""
+            print(f"{m:6s} final {row['final_loss']:8.5f}{extra}")
+        print(f"parity OK: int8/rank1 within {100 * PARITY_TOL}% of dense")
+
+    if json_path is not None:
+        path = Path(json_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+        print(f"\n[transport_bench] wrote {path}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -84,6 +84,8 @@ class LeafPlan:
     fuse: bool = False              # dense leaf eligible for flat fusion
     state_axes: tuple[str, ...] | None = None  # per-group stack-axis override
     quant: str | None = None        # qstate storage mode (int8/fp8/None)
+    transport: str | None = None    # gradient transport (int8/rank1/None)
+    transport_flush_every: int = 8  # rank1 dense-residual-flush period
     momentum: bool = True           # SMMF: first-moment factors + signs exist
 
     @property
@@ -176,6 +178,17 @@ class Bucket:
         """The partition group's qstate storage mode (buckets never span
         groups, so every plan agrees; None = full-precision f32 state)."""
         return self.plans[0].quant
+
+    @property
+    def transport(self) -> str | None:
+        """The partition group's gradient-transport mode (buckets never
+        span groups, so every plan agrees; None = dense f32 traffic)."""
+        return self.plans[0].transport
+
+    @property
+    def transport_flush_every(self) -> int:
+        """rank1 transport's dense-residual-flush period (steps)."""
+        return self.plans[0].transport_flush_every
 
 
 def build_buckets(

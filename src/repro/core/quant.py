@@ -18,8 +18,17 @@ adds uniform noise to the low ``23 - 3`` f32 mantissa bits and truncates,
 which is unbiased for values in e4m3's normal range (the sub-normal tail
 falls back to round-to-nearest granularity). Stochastic rounding is what
 lets the optimizer *re-quantize its own state every step* without the
-quantization bias accumulating — no error-feedback buffer needed, unlike
-the gradient-traffic compressor (``repro.distributed.compress``).
+quantization bias accumulating — no error-feedback buffer needed, and the
+same property is what lets ``repro.distributed.transport`` compress
+gradient traffic EF-free.
+
+Scale granularities: per leading-stack row (:func:`row_scale`), per
+contained-leaf segment of a fused flat row (:func:`segment_scale`), and
+per contiguous sub-row *block* along the last axis (:func:`block_scale`) —
+the blockwise form keeps quantization tight on very long factor rows
+(e.g. the rank-1 transport sketches of a fused ``dense:flat`` bucket,
+where one absmax across tens of thousands of elements from different
+leaves would swamp the small ones).
 
 Everything here is shape-polymorphic math over arrays; the bucket-aware
 codec that decides *which* state tensors quantize (and threads sharding
@@ -76,6 +85,45 @@ def segment_scale(x: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
                                  num_segments=num_segments,
                                  indices_are_sorted=True)
     return jnp.maximum(absmax.astype(jnp.float32) / qmax(mode), _SCALE_FLOOR)
+
+
+def block_count(length: int, block: int) -> int:
+    """Number of sub-row blocks covering a ``length``-wide last axis:
+    ``ceil(length / block)`` (the tail block may be short)."""
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    return -(-length // block)
+
+
+def block_scale(x: jnp.ndarray, block: int, mode: str) -> jnp.ndarray:
+    """Per-(row, block) absmax scale along the **last** axis.
+
+    ``x`` of shape ``(..., L)`` yields scales of shape
+    ``(..., ceil(L / block))``: one f32 scale per contiguous ``block``-wide
+    slice (zero-padded tail), so a single huge element only loosens its own
+    block instead of the whole row. ``block >= L`` degenerates to one scale
+    per row. Use :func:`block_expand` to broadcast back for
+    :func:`quantize` / :func:`dequantize`.
+    """
+    check_mode(mode)
+    length = x.shape[-1]
+    nb = block_count(length, block)
+    pad = nb * block - length
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    absmax = jnp.max(jnp.abs(x.reshape(*x.shape[:-1], nb, block)), axis=-1)
+    s = absmax.astype(jnp.float32) / qmax(mode)
+    return jnp.maximum(s, _SCALE_FLOOR)
+
+
+def block_expand(scale: jnp.ndarray, block: int, length: int) -> jnp.ndarray:
+    """Broadcast blockwise scales ``(..., nblocks)`` back to ``(..., length)``
+    so they align elementwise with the quantized payload."""
+    if scale.shape[-1] != block_count(length, block):
+        raise ValueError(
+            f"scale last axis {scale.shape[-1]} != "
+            f"block_count({length}, {block}) = {block_count(length, block)}")
+    return jnp.repeat(scale, block, axis=-1)[..., :length]
 
 
 def _sr_fp8(y: jnp.ndarray, key) -> jnp.ndarray:

@@ -1,62 +1,77 @@
-"""int8 gradient compression with error feedback (beyond-paper DP trick).
+"""DEPRECATED shim — gradient-traffic compression moved to
+``repro.distributed.transport``.
 
-Wraps any optimizer: gradients are quantized to int8 (per-tensor absmax
-scaling) before the (simulated) cross-replica reduction, with the
-quantization residual carried in an error-feedback buffer so the bias
-vanishes over steps (Seide et al. 2014; Karimireddy et al. 2019). On a real
-pod the all-reduce then moves 4x fewer bytes; composed with SMMF the whole
-optimizer pipeline (state AND traffic) is compressed.
+The seed-era wrapper here quantized per-tensor and carried a **full-size
+f32 error-feedback buffer** per parameter — the opposite memory/traffic
+trade to everything SMMF stands for. The transport subsystem retires both
+choices: seeded stochastic rounding is exactly unbiased per step, so no
+residual needs feeding back (zero persistent state), and it operates per
+bucket-row on the engine plan with an optional rank-1 factored mode. Use
+the ``transport="int8"|"rank1"`` spec hyperparam (``--transport`` on the
+train CLI, per-group via ``--optim-rule '...,transport=rank1'``).
 
-Note the EF buffer costs a full-size f32 tensor per parameter — this is a
-*bandwidth* trick, intentionally opposite in the memory/traffic trade to
-SMMF itself; enable it on links-bound meshes only. (Recorded as such in
-DESIGN.md / EXPERIMENTS.md.)
-
-The **state-side counterpart** is the qstate codec
-(``repro.optim.qstate`` + ``repro.core.quant``, docs/memory.md): it
-quantizes the *stored* optimizer state (int8/fp8 payloads + per-row
-scales) and needs NO error-feedback buffer — the re-quantization uses
-stochastic rounding in-state, so its only overhead is the small scale
-arrays. Use this module when the mesh is links-bound, qstate when it is
-memory-bound; they compose.
+:func:`int8_compress` remains as a DeprecationWarning shim so old call
+sites keep converging: it wraps ``inner`` with the transport subsystem's
+EF-free per-tensor int8 round-trip (``transport.int8_roundtrip``, seeded
+by ``(step, leaf-index)``). Its state is ``(count, inner_state)`` — the
+f32 EF buffers are gone. Tier-1 errors on this warning (pytest.ini), so
+in-repo callers must build through OptimizerSpec instead.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import transport as T
 from repro.optim._multimap import multimap
 from repro.optim.base import GradientTransformation
 
+_MSG = ("int8_compress is deprecated. build via repro.optim.spec."
+        "OptimizerSpec with the transport='int8'|'rank1' hyperparam "
+        "(repro.distributed.transport) — EF-free, per bucket-row, "
+        "stateless")
+
 
 class EFState(NamedTuple):
+    """Legacy name kept importable; the shim no longer creates EF buffers."""
+
     err: dict
 
 
 def int8_compress(inner: GradientTransformation) -> GradientTransformation:
-    """Wrap ``inner`` with int8 gradient quantization + error feedback: the
-    EF residual keeps the quantization bias out of the long-run trajectory."""
+    """Deprecated: delegate to the EF-free transport int8 round-trip.
+
+    Emits ``DeprecationWarning`` (an *error* under tier-1, pytest.ini) and
+    wraps ``inner`` with ``transport.int8_roundtrip`` per tensor — same
+    wire bytes as the old shim, no error-feedback state.
+    """
+    warnings.warn(_MSG, DeprecationWarning, stacklevel=2)
+
     class State(NamedTuple):
-        ef: dict
+        count: jnp.ndarray
         inner: object
 
     def init(params):
-        (ef,) = multimap(lambda p: (jnp.zeros(p.shape, jnp.float32),), params, nout=1)
-        return State(ef, inner.init(params))
+        return State(jnp.zeros((), jnp.int32), inner.init(params))
 
     def update(grads, state, params, **extras):
-        def q(g, e):
-            g = g.astype(jnp.float32) + e
-            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-            qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-            deq = qi.astype(jnp.float32) * scale
-            return deq, g - deq
+        step = state.count + 1
 
-        deq, ef = multimap(q, grads, state.ef, nout=2)
+        leaves = list(range(len(jax.tree_util.tree_leaves(grads))))
+        it = iter(leaves)
+
+        def q(g):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(T._BASE_KEY), step),
+                next(it))
+            return (T.int8_roundtrip(g, key),)
+
+        (deq,) = multimap(q, grads, nout=1)
         updates, inner_state = inner.update(deq, state.inner, params, **extras)
-        return updates, State(ef, inner_state)
+        return updates, State(step, inner_state)
 
     return GradientTransformation(init, update)

@@ -616,7 +616,18 @@ def boundary_transport_bytes(engine, axis_sizes: dict[str, int]) -> dict:
     ``transport`` column of ``benchmarks/step_time.py``. Pure plan math
     over a ``LeafPlanEngine`` (no mesh or arrays needed): ``axis_sizes``
     is the hypothetical mesh, e.g. ``{"data": 4}``.
+
+    The ``"grad"`` sub-dict additionally prices the **gradient transport**
+    boundary (``repro.distributed.transport``) — the data-parallel
+    all-reduce traffic, orthogonal to the replicated-pin rows above:
+    ``grad["total"]`` / ``grad["by_group"]`` use each bucket's *planned*
+    mode (``LeafPlan.transport``, amortizing rank1's dense flush), and
+    ``grad["by_mode"]`` prices the whole engine under each of
+    ``none`` / ``int8`` / ``rank1`` for comparison (the
+    ``BENCH_transport.json`` acceptance column).
     """
+    from repro.distributed import transport as _transport
+
     total = 0
     by_group: dict[str, int] = {}
     for bk in engine.buckets:
@@ -631,7 +642,12 @@ def boundary_transport_bytes(engine, axis_sizes: dict[str, int]) -> dict:
         total += b
         label = bk.plans[0].group or "default"
         by_group[label] = by_group.get(label, 0) + b
-    return {"total": total, "by_group": by_group}
+    grad = _transport.grad_transport_bytes(engine)
+    grad["by_mode"] = {
+        mode: _transport.grad_transport_bytes(engine, mode)["total"]
+        for mode in ("none",) + _transport.TRANSPORT_MODES
+    }
+    return {"total": total, "by_group": by_group, "grad": grad}
 
 
 # ---------------------------------------------------------------------------

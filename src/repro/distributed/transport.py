@@ -1,0 +1,263 @@
+"""EF-free factored gradient transport (ROADMAP item 2).
+
+What crosses the links during data-parallel training is the gradient, and
+SMMF's square-matricization argument applies to it exactly as it does to
+the momenta: most of the signal in each bucket's gradient stack lives in
+rank-1 row/col statistics plus a sign plane (Adafactor's factored second
+moment and Adapprox's randomized low-rank analysis are the grounding, see
+PAPERS.md). This module compresses that traffic through the *same*
+numerics stack the qstate codec built for stored state — ``core/quant.py``
+stochastic rounding, ``core/matricize.py`` square-matricization,
+``core/signpack.py`` bit-packed signs — so state AND traffic share one
+compression story.
+
+Modes (the ``transport`` spec hyperparam, per-group overridable):
+
+* ``"none"`` — dense f32 gradients on the wire (4 bytes/element).
+* ``"int8"`` — symmetric absmax int8 per **bucket-row** (the engine plan's
+  stacked-leaf axis; per contained-leaf segment for fused flat rows),
+  stochastically rounded. SR is exactly unbiased per element, which is
+  what retires the full-size f32 error-feedback buffer the seed-era
+  ``compress.py`` carried: there is no bias to feed back, so transport
+  keeps **zero persistent state**.
+* ``"rank1"`` — square-matricize each bucket row to its nearest-square
+  ``(n_hat, m_hat)`` matrix, all-reduce only the row/col sketches of the
+  magnitude plane (paper Algo 4, int8-SR with blockwise sub-row scales)
+  plus the bit-packed sign plane, and deliver their outer product. Every
+  ``transport_flush_every``-th step ships the exact dense gradient
+  instead (the *residual flush*), so the per-step rank-1 approximation
+  error is bounded and never accumulates across steps — again with zero
+  carried state.
+
+Determinism: the SR stream is a pure function of ``(step, bucket-crc,
+slot)`` — the same scheme as ``qstate.update_key`` under a different base
+key — so runs are bit-reproducible and every data-parallel replica draws
+identical rounding noise (a real deployment must agree on the rounding;
+seeding by step achieves that with no extra communication).
+
+This repo runs single-program, so the all-reduce itself is modeled: the
+compress→deliver round-trip on the gathered bucket gradient is the wire
+format, applied in ``spec.py``'s update loop right after ``gather`` (hence
+composing with ``--overlap`` / ``--offload`` untouched), and the bytes a
+mesh would move are priced analytically by :func:`bucket_grad_bytes` /
+``rules.boundary_transport_bytes`` and gated in ``BENCH_transport.json``.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.matricize import effective_shape
+from repro.core.plan import Bucket
+from repro.core.signpack import pack_signs, packed_width, unpack_signs
+
+TRANSPORT_MODES = ("int8", "rank1")
+
+# Distinct from qstate's 0x5317: transport and state re-quantization must
+# never share an SR stream (same step + bucket would correlate the noise).
+_BASE_KEY = 0x7A41
+
+# Blockwise sub-row scale width for the rank-1 sketches: one f32 scale per
+# 256 int8 sketch elements (1.6% overhead). Long fused dense:flat rows
+# matricize to sketches spanning many leaves; per-block absmax keeps the
+# small leaves' quantization tight (see core/quant.py block_scale).
+SKETCH_BLOCK = 256
+
+_SLOT_PAYLOAD, _SLOT_ROW, _SLOT_COL = 0, 1, 2
+
+DEFAULT_FLUSH_EVERY = 8
+
+
+def check_mode(mode) -> str | None:
+    """Validate a transport mode; ``None``/``"none"`` normalize to None."""
+    if mode is None or mode == "none":
+        return None
+    if mode not in TRANSPORT_MODES:
+        raise ValueError(f"unknown transport mode {mode!r}; "
+                         f"supported: {('none',) + TRANSPORT_MODES}")
+    return mode
+
+
+def check_flush_every(k) -> int:
+    """Validate the rank-1 dense-residual-flush period (positive int)."""
+    if not isinstance(k, int) or isinstance(k, bool) or k < 1:
+        raise ValueError(
+            f"transport_flush_every must be a positive int, got {k!r}")
+    return k
+
+
+def transport_key(step, bucket: Bucket):
+    """Deterministic per-(step, bucket) PRNG key for transport SR;
+    callers fold in a slot index per quantized plane (payload/row/col)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(_BASE_KEY), step)
+    return jax.random.fold_in(key, zlib.crc32(bucket.key.encode()) & 0x7FFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# int8 mode: per-bucket-row absmax + stochastic rounding, no EF
+# ---------------------------------------------------------------------------
+
+
+def _int8_deliver(bucket: Bucket, gm: jnp.ndarray, key) -> jnp.ndarray:
+    x = gm.astype(jnp.float32)
+    if bucket.fused and bucket.size > 1:
+        seg = bucket.segment_ids()
+        scale = Q.segment_scale(x, seg, bucket.size, "int8")
+        row = scale[seg].reshape(x.shape)
+    else:
+        row = Q.row_scale(x, "int8")
+    q = Q.quantize(x, row, "int8", key=jax.random.fold_in(key, _SLOT_PAYLOAD))
+    return Q.dequantize(q, row).astype(gm.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rank1 mode: sketches + packed signs, dense residual flush every k steps
+# ---------------------------------------------------------------------------
+
+
+def _row_matrix_shape(bucket: Bucket) -> tuple[int, int]:
+    """Square-matricized shape of one bucket row's gradient (Algo 2 over
+    the row's element count — transport picks its own matricization, the
+    family's state geometry is irrelevant on the wire)."""
+    if bucket.fused:  # one flat row concatenating every contained leaf
+        numel = sum(p.numel for p in bucket.plans)
+    else:  # stacked rows share one geometry
+        numel = bucket.plans[0].numel
+    return effective_shape(numel)
+
+
+def _q_sketch(v: jnp.ndarray, key) -> jnp.ndarray:
+    """Int8-SR round-trip of a non-negative sketch ``(K, L)`` with blockwise
+    sub-row scales (`SKETCH_BLOCK`); returns the f32 delivered sketch."""
+    length = v.shape[-1]
+    scale = Q.block_scale(v, SKETCH_BLOCK, "int8")
+    row = Q.block_expand(scale, SKETCH_BLOCK, length)
+    q = Q.quantize(v, row, "int8", key=key)
+    return jnp.maximum(Q.dequantize(q, row), 0.0)
+
+
+def _rank1_deliver(bucket: Bucket, gm: jnp.ndarray, step, flush_every: int,
+                   key) -> jnp.ndarray:
+    n_hat, m_hat = _row_matrix_shape(bucket)
+    stack = gm.shape[0]
+    g = gm.astype(jnp.float32).reshape(stack, n_hat, m_hat)
+
+    # 1-bit sign plane, honestly through the packed wire format
+    packed = pack_signs((g >= 0).reshape(stack * n_hat, m_hat))
+    signs = unpack_signs(packed, m_hat).reshape(stack, n_hat, m_hat)
+
+    # rank-1 magnitude sketches (paper Algo 4, batched over the stack),
+    # int8-SR'd with blockwise scales — these are the only dense-rank-free
+    # payloads on the wire between flushes
+    a = jnp.abs(g)
+    r = jnp.sum(a, axis=2)
+    c = jnp.sum(a, axis=1)
+    if n_hat <= m_hat:
+        tot = jnp.sum(r, axis=1, keepdims=True)
+        r = jnp.where(tot > 0, r / tot, r)
+    else:
+        tot = jnp.sum(c, axis=1, keepdims=True)
+        c = jnp.where(tot > 0, c / tot, c)
+    r = _q_sketch(r, jax.random.fold_in(key, _SLOT_ROW))
+    c = _q_sketch(c, jax.random.fold_in(key, _SLOT_COL))
+
+    approx = signs * r[:, :, None] * c[:, None, :]
+
+    # dense residual flush: every k-th step the wire carries the exact
+    # gradient, so between-flush approximation error cannot accumulate
+    flush = (step % flush_every) == 0
+    out = jnp.where(flush, g, approx)
+    return out.reshape(gm.shape).astype(gm.dtype)
+
+
+# ---------------------------------------------------------------------------
+# entry point (spec.py update loop) + per-tensor legacy helper
+# ---------------------------------------------------------------------------
+
+
+def compress_bucket(mode: str, bucket: Bucket, gm: jnp.ndarray, step,
+                    flush_every: int = DEFAULT_FLUSH_EVERY) -> jnp.ndarray:
+    """Round-trip one bucket's gathered gradient through the transport wire
+    format. Stateless: the delivered array has ``gm``'s shape/dtype and is
+    unbiased (int8) or flush-bounded (rank1); nothing is carried to the
+    next step."""
+    mode = check_mode(mode)
+    if mode is None:
+        return gm
+    key = transport_key(step, bucket)
+    if mode == "int8":
+        return _int8_deliver(bucket, gm, key)
+    return _rank1_deliver(bucket, gm, step, check_flush_every(flush_every),
+                          key)
+
+
+def int8_roundtrip(x: jnp.ndarray, key) -> jnp.ndarray:
+    """Per-tensor int8-SR round-trip (one absmax scale for the whole
+    tensor) — the EF-free replacement for the legacy ``compress.py``
+    granularity; the deprecation shim delegates here."""
+    row = x.astype(jnp.float32).reshape(1, -1)
+    scale = Q.row_scale(row, "int8")
+    q = Q.quantize(row, scale, "int8", key=key)
+    return Q.dequantize(q, scale).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# honest pricing: bytes per step on the gradient boundary
+# ---------------------------------------------------------------------------
+
+
+def bucket_grad_bytes(bucket: Bucket, mode,
+                      flush_every: int = DEFAULT_FLUSH_EVERY) -> int:
+    """Analytic per-step wire bytes for one bucket's gradient under
+    ``mode`` (amortizing rank1's dense flush over ``flush_every`` steps).
+
+    Convention: one f32 gradient crossing = ``4 * numel`` bytes — the same
+    per-crossing unit ``rules.boundary_transport_bytes`` uses, so ratios
+    between modes are crossing-count-free.
+    """
+    mode = check_mode(mode)
+    numel = sum(p.numel for p in bucket.plans)
+    dense = 4 * numel
+    if mode is None:
+        return dense
+    if mode == "int8":
+        nscales = bucket.size if (bucket.fused and bucket.size > 1) \
+            else bucket.stack
+        return numel + 4 * nscales
+    flush_every = check_flush_every(flush_every)
+    n_hat, m_hat = _row_matrix_shape(bucket)
+    stack = bucket.stack
+    sketch = stack * (n_hat + m_hat)                       # int8 payloads
+    sketch += 4 * stack * (Q.block_count(n_hat, SKETCH_BLOCK)
+                           + Q.block_count(m_hat, SKETCH_BLOCK))  # scales
+    sign = stack * n_hat * packed_width(m_hat)             # packed bits
+    # k-step cycle: one dense flush + (k-1) sketch steps
+    return (dense + (flush_every - 1) * (sketch + sign)) // flush_every
+
+
+def grad_transport_bytes(engine, mode: str = "plan",
+                         flush_every=None) -> dict:
+    """Engine-wide gradient-boundary pricing.
+
+    ``mode="plan"`` prices each bucket under its *own* planned transport
+    (``LeafPlan.transport``); a concrete mode string prices the whole
+    engine as if every bucket used it (the per-mode comparison column).
+    Returns ``{"total", "by_group"}`` in bytes/step.
+    """
+    total, by_group = 0, {}
+    for bk in engine.buckets:
+        if mode == "plan":
+            bmode = bk.transport
+            bflush = bk.transport_flush_every
+        else:
+            bmode = mode
+            bflush = flush_every or DEFAULT_FLUSH_EVERY
+        b = bucket_grad_bytes(bk, bmode, bflush)
+        total += b
+        grp = bk.plans[0].group
+        by_group[grp] = by_group.get(grp, 0) + b
+    return {"total": int(total), "by_group": by_group}

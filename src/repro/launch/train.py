@@ -60,10 +60,12 @@ def spec_from_args(args, family: str) -> OptimizerSpec:
     ``--optim-rule`` partitions append to either base spec in order.
     """
     if args.optim:
-        if args.blocks or args.use_kernel or args.no_bucket or args.quant:
+        if args.blocks or args.use_kernel or args.no_bucket or args.quant \
+                or args.transport:
             raise SystemExit("--optim FILE cannot be combined with "
-                             "--blocks/--use-kernel/--no-bucket/--quant; put "
-                             "the knobs in the spec's hyperparams")
+                             "--blocks/--use-kernel/--no-bucket/--quant/"
+                             "--transport; put the knobs in the spec's "
+                             "hyperparams")
         spec = OptimizerSpec.from_json(Path(args.optim).read_text())
     else:
         from repro.configs import recommended_decay_rate
@@ -81,6 +83,9 @@ def spec_from_args(args, family: str) -> OptimizerSpec:
             hp.update(bucket=not args.no_bucket)
         if args.quant:
             hp["quant"] = args.quant  # sm3 rejects it at spec validation
+        if args.transport:
+            hp["transport"] = args.transport
+            hp["transport_flush_every"] = args.transport_flush_every
         spec = OptimizerSpec(family=name, hyperparams=hp)
     for rule in args.optim_rule:
         spec = spec.with_rule(rule)
@@ -116,6 +121,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="store the default group's optimizer state "
                          "quantized (qstate codec: 1-byte payloads + "
                          "per-row scales, stochastic-rounding requant)")
+    ap.add_argument("--transport", default=None, choices=("int8", "rank1"),
+                    help="gradient-transport compression for the default "
+                         "group (repro.distributed.transport): int8 = "
+                         "per-bucket-row absmax + stochastic rounding "
+                         "(EF-free); rank1 = square-matricized row/col "
+                         "sketches + packed sign plane with a dense "
+                         "residual flush. Per-group form: --optim-rule "
+                         "'ffn/=smmf,transport=rank1'")
+    ap.add_argument("--transport-flush-every", type=int, default=8,
+                    help="rank1 transport: ship the exact dense gradient "
+                         "every K-th step so approximation error cannot "
+                         "accumulate (priced into the boundary bytes)")
     ap.add_argument("--no-bucket", action="store_true",
                     help="per-leaf baseline (disable geometry bucketing)")
     ap.add_argument("--grad-accum", type=int, default=1,
@@ -203,7 +220,8 @@ def main() -> None:
               f"{stats['update_launches']} launches/step "
               f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
               f"{stats['kernel_buckets']} kernel, {stats['quantized_buckets']} "
-              f"quantized, {stats['groups']} groups, "
+              f"quantized, {stats['transport_buckets']} transported, "
+              f"{stats['groups']} groups, "
               f"{stats['frozen_leaves']} frozen)")
     if args.use_kernel:
         # static half of the no-silent-fallback assertion: every factored

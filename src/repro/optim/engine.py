@@ -214,6 +214,7 @@ class LeafPlanEngine:
             # qstate codec coverage (repro.optim.qstate): buckets whose
             # persistent state stores as 1-byte payloads + scale rows
             "quantized_buckets": sum(1 for b in self.buckets if b.quant),
+            "transport_buckets": sum(1 for b in self.buckets if b.transport),
         }
 
 

@@ -389,6 +389,7 @@ register(Family(
         growth_rate=0.999, vector_reshape=True, weight_decay_mode="adamw",
         blocks=1, use_kernel=False, kernel_block=DEFAULT_KERNEL_BLOCK,
         interpret=None, bucket=True, fuse_dense=True, quant=None,
+        transport=None, transport_flush_every=8,
     ),
     make_plan_fn=_smmf_plan_fn,
     init_bucket=_smmf_init,
@@ -467,7 +468,7 @@ register(Family(
     defaults=dict(
         lr=1e-3, beta1=0.9, decay_rate=-0.8, eps1=1e-30, eps2=1e-3,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
-        quant=None,
+        quant=None, transport=None, transport_flush_every=8,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_adafactor_init,
@@ -553,7 +554,7 @@ _CAME = register(Family(
     defaults=dict(
         lr=1e-3, beta1=0.9, beta2=0.999, beta3=0.9999, eps1=1e-30, eps2=1e-16,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
-        quant=None,
+        quant=None, transport=None, transport_flush_every=8,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_came_init,
@@ -624,7 +625,7 @@ def _sm3_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
 register(Family(
     name="sm3",
     defaults=dict(lr=1e-3, beta1=0.9, eps=1e-30, weight_decay=0.0, bucket=True,
-                  fuse_dense=False),
+                  fuse_dense=False, transport=None, transport_flush_every=8),
     make_plan_fn=lambda hp: axiscover_planner(),
     init_bucket=_sm3_init,
     update_bucket=_sm3_update,
@@ -664,7 +665,7 @@ register(Family(
     defaults=dict(
         lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
         bias_correction=True, weight_decay_mode="adam", bucket=True,
-        fuse_dense=True, quant=None,
+        fuse_dense=True, quant=None, transport=None, transport_flush_every=8,
     ),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_adam_init,
@@ -701,7 +702,8 @@ def _sgd_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
 register(Family(
     name="sgd",
     defaults=dict(lr=1e-2, momentum=0.0, weight_decay=0.0, bucket=True,
-                  fuse_dense=True, quant=None),
+                  fuse_dense=True, quant=None, transport=None,
+                  transport_flush_every=8),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_sgd_init,
     update_bucket=_sgd_update,

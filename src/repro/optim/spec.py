@@ -73,6 +73,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import transport as _T
 from repro.optim import families as F
 from repro.optim import qstate
 from repro.optim.base import (
@@ -263,7 +264,11 @@ class OptimizerSpec:
         payloads+scales are a different checkpoint layout than f32) is
         covered.
         """
-        skip = ("use_kernel", "kernel_block", "interpret", "lr")
+        # transport is execution-only too: it round-trips the *gradient*
+        # through the wire format inside the step and carries zero state,
+        # so toggling it never changes the checkpoint layout
+        skip = ("use_kernel", "kernel_block", "interpret", "lr",
+                "transport", "transport_flush_every")
         d = dataclasses.asdict(self)
         d.pop("schedule", None)
 
@@ -403,6 +408,16 @@ def _check_quant(entry: F.Family, hp: dict) -> None:
             f"family {entry.name!r} has no quantizable state (quant={mode!r})")
 
 
+def _check_transport(hp: dict) -> None:
+    """Validate a group's gradient-transport hyperparams (every family
+    accepts them — transport is engine-level, family-math-agnostic)."""
+    from repro.distributed.transport import check_flush_every, check_mode
+
+    mode = check_mode(hp.get("transport"))
+    if mode is not None:
+        check_flush_every(hp.get("transport_flush_every", 8))
+
+
 def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
     """[default group] + one group per partition, hyperparams validated."""
     base = F.get_family(spec.family)
@@ -412,6 +427,7 @@ def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
     if base.validate:
         base.validate(base_hp)
     _check_quant(base, base_hp)
+    _check_transport(base_hp)
     groups = [_Group("", DEFAULT_GROUP, base, base_hp,
                      resolve_schedule(spec.schedule, base_hp))]
     for p in spec.partitions:
@@ -427,6 +443,7 @@ def _resolve_groups(spec: OptimizerSpec) -> list[_Group]:
         if entry.validate:
             entry.validate(hp)
         _check_quant(entry, hp)
+        _check_transport(hp)
         # schedule precedence: the partition's own schedule wins; a partition
         # that overrides "lr" (without a schedule) means that lr — it must
         # NOT be shadowed by the spec-level schedule; otherwise inherit
@@ -514,6 +531,8 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
                 fuse=(not p.factorized) and bool(g.hp.get("fuse_dense", False)),
                 state_axes=g.state_axes,
                 quant=g.hp.get("quant"),
+                transport=_T.check_mode(g.hp.get("transport")),
+                transport_flush_every=g.hp.get("transport_flush_every", 8),
             )
 
         return LeafPlanEngine(params, plan_fn)
@@ -600,6 +619,12 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             gm = engine.gather(flat_g, bk)
             if chained:
                 gm, token = jax.lax.optimization_barrier((gm, token))
+            # gradient transport (repro.distributed.transport): round-trip
+            # the gathered gradient through the wire format — stateless,
+            # seeded SR, so there is no EF buffer and nothing to checkpoint
+            if bk.transport:
+                gm = _T.compress_bucket(bk.transport, bk, gm, new_step,
+                                        bk.transport_flush_every)
             # qstate codec (repro.optim.qstate): dequantize stored slots at
             # gather, run the family math in f32, re-quantize with
             # stochastic rounding at scatter (kernel_deq slots skip the

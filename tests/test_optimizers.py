@@ -92,15 +92,23 @@ def test_warmup_cosine_schedule():
     assert float(sched(5)) == pytest.approx(0.5)
 
 
-def test_int8_compress_error_feedback():
+def test_int8_compress_shim_is_ef_free_and_converges():
+    """The retired compressor: warns, carries NO error-feedback buffers
+    (transport SR is unbiased per step), and still trains to convergence."""
     loss, p = _quadratic()
-    opt = int8_compress(adam(5e-2))
+    with pytest.warns(DeprecationWarning, match="repro.distributed.transport"):
+        opt = int8_compress(adam(5e-2))
     s = opt.init(p)
+    # zero full-size f32 EF buffers: state is (count, inner) — the only
+    # leaves are the scalar counter and adam's own moments
+    assert not hasattr(s, "ef")
+    n_inner = len(jax.tree.leaves(adam(5e-2).init(p)))
+    assert len(jax.tree.leaves(s)) == n_inner + 1
     for _ in range(300):
         g = jax.grad(loss)(p)
         u, s = opt.update(g, s, p)
         p = apply_updates(p, u)
-    assert float(loss(p)) < 0.5  # EF keeps quantized training convergent
+    assert float(loss(p)) < 0.5  # SR keeps quantized training convergent
 
 
 def test_regret_sublinear_smmf_vs_adam():

@@ -1,0 +1,459 @@
+"""Gradient-transport subsystem (repro.distributed.transport).
+
+Property suite runs twice: deterministically over a fixed case grid
+(always — the CI container may not have hypothesis), and fuzzed under
+hypothesis when it is importable. Covers: per-bucket-row SR unbiasedness,
+rank1 dense-residual-flush exactness at step k, sign-plane roundtrip,
+blockwise sub-row scales, spec-level wiring (hash neutrality, zero added
+state, per-group overrides, validation), pricing, and the deprecated
+``compress.py`` shim's delegation. The 4-device sharded-vs-replicated
+convergence parity lives in ``_transport_child.py`` (MeshHarness).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.core.matricize import effective_shape
+from repro.core.signpack import pack_signs, unpack_signs
+from repro.distributed import rules
+from repro.distributed import transport as T
+from repro.optim.spec import OptimizerSpec, build_optimizer
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback only: the fuzz twins are
+    HAVE_HYPOTHESIS = False  # skipped, but their decorators must import
+
+    def given(**kw):
+        return lambda fn: fn
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a tiny engine with one factored bucket + one fused dense bucket
+# ---------------------------------------------------------------------------
+
+PARAMS = {
+    "wq": jnp.ones((24, 48)), "wk": jnp.ones((24, 48)),
+    "b1": jnp.zeros((48,)), "b2": jnp.zeros((48,)), "s": jnp.ones(()),
+}
+
+
+def _spec(**hp):
+    # vector_reshape=False keeps the biases dense, so the engine has a
+    # genuine multi-leaf fused flat bucket (b1+b2+s -> one 97-wide row:
+    # segment int8 scales, a prime-width rank1 matricization)
+    return OptimizerSpec(family="smmf", hyperparams={
+        "lr": 1e-2, "decay_rate": -0.8, "vector_reshape": False, **hp})
+
+
+def _engine(**hp):
+    return build_optimizer(_spec(**hp)).plan(PARAMS)
+
+
+def _rand_gm(bucket, seed):
+    rng = np.random.default_rng(seed)
+    shape = (bucket.stack, *bucket.geometry) if not bucket.fused \
+        else (1, sum(p.numel for p in bucket.plans))
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mode validation
+# ---------------------------------------------------------------------------
+
+def test_check_mode_normalizes_and_rejects():
+    assert T.check_mode(None) is None
+    assert T.check_mode("none") is None
+    assert T.check_mode("int8") == "int8"
+    assert T.check_mode("rank1") == "rank1"
+    with pytest.raises(ValueError, match="unknown transport mode"):
+        T.check_mode("fp8")
+
+
+def test_check_flush_every_rejects_nonpositive_and_nonint():
+    assert T.check_flush_every(1) == 1
+    for bad in (0, -3, 2.5, "8", True):
+        with pytest.raises(ValueError, match="transport_flush_every"):
+            T.check_flush_every(bad)
+
+
+def test_spec_validation_rejects_bad_transport():
+    with pytest.raises(ValueError, match="unknown transport mode"):
+        build_optimizer(_spec(transport="bogus"))
+    with pytest.raises(ValueError, match="transport_flush_every"):
+        build_optimizer(_spec(transport="rank1", transport_flush_every=0))
+    with pytest.raises(ValueError, match="unknown hyperparams"):
+        build_optimizer(OptimizerSpec(family="smmf",
+                                      hyperparams={"transprot": "int8"}))
+
+
+# ---------------------------------------------------------------------------
+# property: int8 SR unbiasedness per bucket-row
+# ---------------------------------------------------------------------------
+
+def _check_sr_unbiased(bucket, seed, draws=192):
+    gm = _rand_gm(bucket, seed)
+    outs = jnp.stack([T.compress_bucket("int8", bucket, gm, jnp.int32(s))
+                      for s in range(draws)])
+    # per-row absmax scale bounds a single draw's error by one code and
+    # the mean's deviation by ~ scale / sqrt(draws)
+    scale = float(jnp.max(jnp.abs(gm))) / 127.0
+    bias = float(jnp.max(jnp.abs(outs.mean(0) - gm)))
+    assert bias <= 5.0 * scale / np.sqrt(draws), (bias, scale)
+    # and any single draw never strays more than one code
+    worst = float(jnp.max(jnp.abs(outs[0] - gm)))
+    assert worst <= scale * 1.0001, (worst, scale)
+
+
+@pytest.mark.parametrize("which,seed", [(0, 0), (0, 3), (1, 1)])
+def test_int8_sr_unbiased_per_bucket_row(which, seed):
+    eng = _engine(transport="int8")
+    bucket = [b for b in eng.buckets if b.factorized][0] if which == 0 \
+        else [b for b in eng.buckets if b.fused][0]
+    _check_sr_unbiased(bucket, seed)
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), which=st.integers(0, 1))
+def test_int8_sr_unbiased_fuzz(seed, which):
+    eng = _engine(transport="int8")
+    bucket = [b for b in eng.buckets if b.factorized][0] if which == 0 \
+        else [b for b in eng.buckets if b.fused][0]
+    _check_sr_unbiased(bucket, seed, draws=96)
+
+
+# ---------------------------------------------------------------------------
+# property: rank1 residual flush is exact at step k, approximate elsewhere
+# ---------------------------------------------------------------------------
+
+def _check_flush_exact(bucket, seed, k):
+    gm = _rand_gm(bucket, seed)
+    for mult in (1, 2, 5):
+        out = T.compress_bucket("rank1", bucket, gm, jnp.int32(mult * k), k)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(gm),
+                                      err_msg=f"flush step {mult * k}")
+    if k == 1:
+        return  # every step flushes: the wire is always dense-exact
+    # a non-flush step of iid noise is genuinely rank-1-approximated
+    out = T.compress_bucket("rank1", bucket, gm, jnp.int32(k + 1), k)
+    assert float(jnp.max(jnp.abs(out - gm))) > 0.0
+    # but the sign plane is carried losslessly (zero counts as +)
+    assert bool(jnp.all(jnp.sign(out) * jnp.sign(gm) >= 0.0))
+
+
+@pytest.mark.parametrize("which,seed,k", [(0, 0, 4), (0, 2, 1), (1, 1, 8)])
+def test_rank1_flush_exact_at_step_k(which, seed, k):
+    eng = _engine(transport="rank1")
+    bucket = [b for b in eng.buckets if b.factorized][0] if which == 0 \
+        else [b for b in eng.buckets if b.fused][0]
+    _check_flush_exact(bucket, seed, k)
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 16),
+       which=st.integers(0, 1))
+def test_rank1_flush_exact_fuzz(seed, k, which):
+    eng = _engine(transport="rank1")
+    bucket = [b for b in eng.buckets if b.factorized][0] if which == 0 \
+        else [b for b in eng.buckets if b.fused][0]
+    _check_flush_exact(bucket, seed, k)
+
+
+def test_rank1_reconstructs_exact_rank1_between_flushes():
+    """A gradient that IS sign*rank-1 survives the wire almost exactly
+    (only sketch int8 SR noise — bounded by the blockwise scales)."""
+    eng = _engine(transport="rank1")
+    bucket = [b for b in eng.buckets if b.factorized][0]
+    n, m = effective_shape(bucket.plans[0].numel)
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(np.abs(rng.standard_normal((bucket.stack, n, 1))) + 0.1)
+    c = jnp.asarray(np.abs(rng.standard_normal((bucket.stack, 1, m))) + 0.1)
+    sgn = jnp.asarray(np.where(rng.random((bucket.stack, n, m)) < 0.5, -1, 1))
+    gm = (r * c * sgn).astype(jnp.float32).reshape(
+        bucket.stack, *bucket.geometry)
+    out = T.compress_bucket("rank1", bucket, gm, jnp.int32(3), 8)
+    # int8 sketches: ~1/127 relative error per factor
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gm),
+                               rtol=0.12, atol=0.06)
+
+
+# ---------------------------------------------------------------------------
+# property: sign-plane roundtrip
+# ---------------------------------------------------------------------------
+
+def _check_sign_roundtrip(arr):
+    nonneg = arr >= 0
+    signs = unpack_signs(pack_signs(nonneg), arr.shape[1])
+    expect = np.where(np.asarray(nonneg), 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(signs), expect)
+
+
+@pytest.mark.parametrize("shape,seed", [((3, 8), 0), ((5, 7), 1),
+                                        ((1, 1), 2), ((4, 17), 3)])
+def test_sign_plane_roundtrip(shape, seed):
+    rng = np.random.default_rng(seed)
+    _check_sign_roundtrip(jnp.asarray(rng.standard_normal(shape)))
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 9), m=st.integers(1, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_sign_plane_roundtrip_fuzz(n, m, seed):
+    rng = np.random.default_rng(seed)
+    _check_sign_roundtrip(jnp.asarray(rng.standard_normal((n, m))))
+
+
+# ---------------------------------------------------------------------------
+# blockwise sub-row scales (core/quant.py)
+# ---------------------------------------------------------------------------
+
+def _check_block_scale(x, block):
+    scale = Q.block_scale(x, block, "int8")
+    assert scale.shape == (*x.shape[:-1], Q.block_count(x.shape[-1], block))
+    row = Q.block_expand(scale, block, x.shape[-1])
+    assert row.shape == x.shape
+    deq = Q.dequantize(Q.quantize(x, row, "int8"), row)
+    # round-to-nearest error bounded by half a code of the LOCAL block
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = 0.5 * np.asarray(row) * 1.0001 + 1e-12
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+@pytest.mark.parametrize("length,block,seed", [
+    (10, 4, 0), (256, 256, 1), (300, 256, 2), (1, 8, 3), (512, 16, 4)])
+def test_block_scale_quantize_roundtrip(length, block, seed):
+    rng = np.random.default_rng(seed)
+    _check_block_scale(jnp.asarray(rng.standard_normal((3, length)),
+                                   jnp.float32), block)
+
+
+def test_block_scale_localizes_outliers():
+    """One huge element must not wreck quantization of far-away blocks."""
+    x = jnp.ones((1, 512)) * 0.01
+    x = x.at[0, 0].set(1000.0)
+    row = Q.block_expand(Q.block_scale(x, 64, "int8"), 64, 512)
+    deq = Q.dequantize(Q.quantize(x, row, "int8"), row)
+    # blocks beyond the first see only the 0.01s: relative error < 1%
+    np.testing.assert_allclose(np.asarray(deq[0, 64:]), 0.01, rtol=0.01)
+    # one row-wide scale would have flattened them to zero
+    flat = Q.row_scale(x, "int8")
+    deq_flat = Q.dequantize(Q.quantize(x, flat, "int8"), flat)
+    assert float(jnp.max(jnp.abs(deq_flat[0, 64:]))) == 0.0
+
+
+def test_block_scale_validation():
+    with pytest.raises(ValueError, match="block must be >= 1"):
+        Q.block_count(16, 0)
+    with pytest.raises(ValueError, match="scale last axis"):
+        Q.block_expand(jnp.ones((2, 3)), 4, 100)
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(length=st.integers(1, 600), block=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_block_scale_roundtrip_fuzz(length, block, seed):
+    rng = np.random.default_rng(seed)
+    _check_block_scale(jnp.asarray(rng.standard_normal((2, length)),
+                                   jnp.float32), block)
+
+
+# ---------------------------------------------------------------------------
+# determinism / seeding
+# ---------------------------------------------------------------------------
+
+def test_transport_bit_reproducible_and_step_dependent():
+    eng = _engine(transport="int8")
+    bucket = [b for b in eng.buckets if b.factorized][0]
+    gm = _rand_gm(bucket, 0)
+    for mode in ("int8", "rank1"):
+        a = T.compress_bucket(mode, bucket, gm, jnp.int32(3), 4)
+        b = T.compress_bucket(mode, bucket, gm, jnp.int32(3), 4)
+        c = T.compress_bucket(mode, bucket, gm, jnp.int32(5), 4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{mode} not reproducible")
+        assert bool(jnp.any(a != c)), f"{mode} ignores the step seed"
+
+
+def test_transport_key_distinct_from_qstate():
+    from repro.optim import qstate
+    eng = _engine()
+    bucket = eng.buckets[0]
+    tk = T.transport_key(jnp.int32(3), bucket)
+    qk = qstate.update_key(jnp.int32(3), bucket)
+    assert not bool(jnp.all(tk == qk))
+
+
+# ---------------------------------------------------------------------------
+# spec wiring: hash neutrality, zero added state, per-group overrides
+# ---------------------------------------------------------------------------
+
+def test_spec_hash_untouched_by_transport():
+    base = _spec().spec_hash()
+    assert _spec(transport="int8").spec_hash() == base
+    assert _spec(transport="rank1", transport_flush_every=3).spec_hash() == base
+
+
+def test_transport_adds_zero_state():
+    """Structural EF-free acceptance: the optimizer state under transport
+    is shape-identical to the dense-transport state — no residual, no EF
+    buffer, nothing full-size beyond what the family itself stores."""
+    for mode in ("int8", "rank1"):
+        a = jax.eval_shape(build_optimizer(_spec()).init, PARAMS)
+        b = jax.eval_shape(build_optimizer(_spec(transport=mode)).init, PARAMS)
+        assert jax.tree.structure(a) == jax.tree.structure(b)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert (x.shape, x.dtype) == (y.shape, y.dtype)
+
+
+def test_transport_buckets_stat_and_plan_fields():
+    eng = _engine(transport="rank1", transport_flush_every=5)
+    st_ = eng.stats()
+    assert st_["transport_buckets"] == st_["buckets"] > 0
+    for bk in eng.buckets:
+        assert bk.transport == "rank1"
+        assert bk.transport_flush_every == 5
+    assert _engine().stats()["transport_buckets"] == 0
+
+
+def test_per_group_transport_override_via_rule():
+    spec = _spec().with_rule("b=adam,transport=int8")
+    opt = build_optimizer(spec)
+    eng = opt.plan(PARAMS)
+    by_group = {bk.plans[0].group: bk.transport for bk in eng.buckets}
+    assert by_group["adam0"] == "int8"  # auto-named first rule group
+    assert by_group[""] is None
+    # and the override group actually trains
+    g = jax.tree.map(jnp.ones_like, PARAMS)
+    st_ = opt.init(PARAMS)
+    u, _ = opt.update(g, st_, PARAMS)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(u))
+
+
+def test_transport_composes_with_quant_and_overlap():
+    spec = _spec(transport="rank1", quant="int8")
+    opt = build_optimizer(spec)
+    st_ = opt.init(PARAMS)
+    g = jax.tree.map(jnp.ones_like, PARAMS)
+    u1, s1 = opt.update(g, st_, PARAMS)
+    u2, s2 = opt.update(g, st_, PARAMS, schedule="grad")
+    for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_update_differs_from_dense_transport_on_generic_grads():
+    """Transport must actually round-trip the gradient (a no-op wire would
+    pass every parity test vacuously)."""
+    rng = np.random.default_rng(0)
+    g = {k: jnp.asarray(rng.standard_normal(v.shape), jnp.float32)
+         for k, v in PARAMS.items()}
+    u0, _ = build_optimizer(_spec()).update(
+        g, build_optimizer(_spec()).init(PARAMS), PARAMS)
+    for mode in ("int8", "rank1"):
+        opt = build_optimizer(_spec(transport=mode))
+        u, _ = opt.update(g, opt.init(PARAMS), PARAMS)
+        diff = max(float(jnp.max(jnp.abs(a - b)))
+                   for a, b in zip(jax.tree.leaves(u0), jax.tree.leaves(u)))
+        assert diff > 0.0, f"{mode} transport was a no-op"
+
+
+# ---------------------------------------------------------------------------
+# pricing
+# ---------------------------------------------------------------------------
+
+def test_bucket_grad_bytes_formulas():
+    eng = _engine()
+    for bk in eng.buckets:
+        numel = sum(p.numel for p in bk.plans)
+        assert T.bucket_grad_bytes(bk, None) == 4 * numel
+        nscales = bk.size if (bk.fused and bk.size > 1) else bk.stack
+        assert T.bucket_grad_bytes(bk, "int8") == numel + 4 * nscales
+        n, m = effective_shape(numel if bk.fused else bk.plans[0].numel)
+        from repro.core.signpack import packed_width
+        sketch = bk.stack * (n + m) + 4 * bk.stack * (
+            Q.block_count(n, T.SKETCH_BLOCK) + Q.block_count(m, T.SKETCH_BLOCK))
+        sign = bk.stack * n * packed_width(m)
+        k = 8
+        expect = (4 * numel + (k - 1) * (sketch + sign)) // k
+        assert T.bucket_grad_bytes(bk, "rank1", k) == expect
+
+
+def test_boundary_transport_bytes_prices_all_three_modes():
+    eng = _engine(transport="rank1")
+    out = rules.boundary_transport_bytes(eng, {"data": 4})
+    grad = out["grad"]
+    assert set(grad["by_mode"]) == {"none", "int8", "rank1"}
+    dense = grad["by_mode"]["none"]
+    assert grad["by_mode"]["rank1"] < grad["by_mode"]["int8"] < dense
+    # planned mode = rank1 everywhere -> actual equals the rank1 column
+    assert grad["total"] == grad["by_mode"]["rank1"]
+    assert sum(grad["by_group"].values()) == grad["total"]
+    # the acceptance ratio, on the test engine too
+    assert grad["by_mode"]["rank1"] <= 0.35 * dense
+    assert grad["by_mode"]["int8"] <= 0.30 * dense
+
+
+def test_grad_bytes_decrease_with_flush_period():
+    eng = _engine()
+    bk = [b for b in eng.buckets if b.factorized][0]
+    b1 = T.bucket_grad_bytes(bk, "rank1", 1)
+    b4 = T.bucket_grad_bytes(bk, "rank1", 4)
+    b16 = T.bucket_grad_bytes(bk, "rank1", 16)
+    assert b1 == 4 * sum(p.numel for p in bk.plans)  # k=1: always dense
+    assert b16 < b4 < b1
+
+
+# ---------------------------------------------------------------------------
+# multi-device: sharded-vs-replicated convergence parity (emulated mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_transport_sharded_parity(emulated_mesh):
+    out = emulated_mesh.run("_transport_child.py", devices=4)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "TRANSPORT PARITY OK int8" in out.stdout
+    assert "TRANSPORT PARITY OK rank1" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# deprecated compress.py shim
+# ---------------------------------------------------------------------------
+
+def test_compress_shim_warns_and_delegates():
+    from repro.distributed.compress import int8_compress
+    from repro.optim import adam
+
+    with pytest.warns(DeprecationWarning,
+                      match="is deprecated. build via repro.optim.spec"):
+        with pytest.warns(DeprecationWarning,
+                          match="repro.distributed.transport"):
+            opt = int8_compress(adam(1e-2))
+    p = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                          jnp.float32)}
+    s = opt.init(p)
+    # state = (count, inner): no EF tree, nothing param-shaped outside adam
+    assert not hasattr(s, "ef")
+    g = jax.tree.map(jnp.ones_like, p)
+    u, s2 = opt.update(g, s, p)
+    assert int(s2.count) == 1
+    assert np.isfinite(np.asarray(u["w"])).all()

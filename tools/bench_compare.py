@@ -4,7 +4,8 @@
         --baseline-dir . --candidate-dir results/bench
 
 The repo root carries the committed perf-trajectory snapshots
-(``BENCH_step_time.json``, ``BENCH_opt_memory.json``); ``benchmarks/run.py``
+(``BENCH_step_time.json``, ``BENCH_opt_memory.json``,
+``BENCH_transport.json``, ``BENCH_serve.json``); ``benchmarks/run.py``
 writes fresh ones under ``results/bench/``. This tool fails (exit 1, one
 line per violation) when the candidate regresses:
 
@@ -19,10 +20,14 @@ line per violation) when the candidate regresses:
   overlap-on step time <= overlap-off within :data:`OVERLAP_TOL` at equal
   memory (the interleaved schedule must never cost wall-clock), offload-on
   per-device device-resident bytes strictly below the device-resident
-  qstate baseline (the tier's acceptance criterion), and the paged serving
+  qstate baseline (the tier's acceptance criterion), the paged serving
   engine (``BENCH_serve.json``) at least :data:`SERVE_SPEEDUP_MIN` x the
   legacy slot-batcher's tokens/s on the same trace — both engines run in
-  the same process, so the ratio needs no baseline;
+  the same process, so the ratio needs no baseline — and the gradient
+  transport record (``BENCH_transport.json``): rank1/int8 boundary bytes
+  within :data:`TRANSPORT_RANK1_MAX` / :data:`TRANSPORT_INT8_MAX` of
+  dense f32 and compressed-vs-dense convergence parity within
+  :data:`TRANSPORT_PARITY_TOL` (seeded smoke, machine-independent);
 * **serving trajectory** vs baseline: legacy-normalized tokens/s and p99
   per-token latency ratios within :data:`TIME_TOL`.
 
@@ -52,6 +57,14 @@ OVERLAP_TOL = 0.25
 # the continuous-batching engine must clear this throughput multiple (the
 # PR's acceptance criterion — a hard invariant on the candidate alone)
 SERVE_SPEEDUP_MIN = 2.0
+# gradient transport (BENCH_transport.json) — hard invariants on the
+# candidate alone: rank1/int8 gradient-boundary bytes as a fraction of
+# dense f32, and compressed-vs-dense final-loss parity on the
+# transformer_base smoke (the run is seeded + synthetic, so the losses
+# are reproducible on a pinned jax version)
+TRANSPORT_RANK1_MAX = 0.35
+TRANSPORT_INT8_MAX = 0.30
+TRANSPORT_PARITY_TOL = 0.005
 
 
 def _load(d: Path, name: str) -> dict | None:
@@ -164,6 +177,51 @@ def _check_serve_invariants(cand: dict, fails: list[str]) -> None:
                 f"tokens/s, below the {SERVE_SPEEDUP_MIN}x floor")
 
 
+def _check_transport_invariants(cand: dict, fails: list[str]) -> None:
+    """Hard floors on the candidate alone (analytic pricing + a seeded
+    deterministic convergence smoke — no baseline or machine normalization
+    needed)."""
+    modes = cand.get("pricing", {}).get("modes", {})
+    for mode, cap in (("rank1", TRANSPORT_RANK1_MAX),
+                      ("int8", TRANSPORT_INT8_MAX)):
+        row = modes.get(mode)
+        if row and row["ratio_vs_dense"] > cap:
+            fails.append(
+                f"transport pricing for {mode}: "
+                f"{row['ratio_vs_dense']:.1%} of dense gradient bytes, "
+                f"above the {cap:.0%} ceiling")
+    conv = cand.get("convergence")
+    if conv is None:
+        return  # --fast run: pricing-only record
+    for mode in ("int8", "rank1"):
+        row = conv.get(mode)
+        if row and row["rel_vs_dense"] > TRANSPORT_PARITY_TOL:
+            fails.append(
+                f"transport convergence parity for {mode}: final loss "
+                f"{row['rel_vs_dense']:.2%} off dense transport "
+                f"(tol {TRANSPORT_PARITY_TOL:.1%})")
+
+
+def _check_transport_baseline(base: dict, cand: dict, fails: list[str]) -> None:
+    """Per-mode optimizer step time vs baseline, normalized by the dense
+    row (same ratio scheme as _check_times)."""
+    b_ms, c_ms = base.get("opt_ms", {}), cand.get("opt_ms", {})
+    b_ref = b_ms.get("none", {}).get("ms")
+    c_ref = c_ms.get("none", {}).get("ms")
+    if not b_ref or not c_ref:
+        return
+    for mode, b in b_ms.items():
+        c = c_ms.get(mode)
+        if c is None or mode == "none":
+            continue
+        b_ratio, c_ratio = b["ms"] / b_ref, c["ms"] / c_ref
+        if c_ratio > b_ratio * TIME_TOL:
+            fails.append(
+                f"transport step-time regression for {mode}: "
+                f"{c_ratio:.2f}x dense vs baseline {b_ratio:.2f}x "
+                f"(tol {TIME_TOL}x)")
+
+
 def _check_serve_baseline(base: dict, cand: dict, fails: list[str]) -> None:
     """Candidate speedup ratios vs the committed baseline's, with the same
     generous multiplier as step times (both are legacy-normalized, so a
@@ -197,7 +255,7 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
     fails: list[str] = []
     checked = 0
     for name in ("BENCH_step_time.json", "BENCH_opt_memory.json",
-                 "BENCH_serve.json"):
+                 "BENCH_transport.json", "BENCH_serve.json"):
         base, cand = _load(baseline_dir, name), _load(candidate_dir, name)
         if cand is None:
             fails.append(f"candidate {candidate_dir / name} missing — did "
@@ -207,6 +265,8 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
             _check_overlap_invariants(cand, fails)
         elif name == "BENCH_opt_memory.json":
             _check_offload_memory(cand, fails)
+        elif name == "BENCH_transport.json":
+            _check_transport_invariants(cand, fails)
         else:
             _check_serve_invariants(cand, fails)
         if base is None:
@@ -220,6 +280,8 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
         _walk_bytes(base, cand, name, fails)
         if name == "BENCH_step_time.json":
             _check_times(base, cand, fails)
+        elif name == "BENCH_transport.json":
+            _check_transport_baseline(base, cand, fails)
     if checked:
         print(f"[bench_compare] compared {checked} baseline record(s)")
     return fails
