@@ -21,12 +21,16 @@ from repro.data import SyntheticImageStream, SyntheticLMStream
 from repro.launch.steps import make_train_step
 from repro.models import cnn_loss, init_cnn, init_lm
 from repro.models.config import ModelConfig
-from repro.optim import OptimizerSpec, build_optimizer
+from repro.optim import OptimizerSpec, Partition, build_optimizer
 from repro.optim.base import apply_updates
 from repro.utils.tree import tree_bytes
 
+# final-loss parity tolerance for every assertion below (quantized-vs-f32
+# and zoo-family-vs-dense-reference alike)
+PARITY_TOL = 0.05
 
-def _opts(lr, family, quant=False):
+
+def _opts(lr, family, quant=False, zoo=False):
     gamma = -0.5 if family == "cnn" else -0.8
     out = {
         "adam": build_optimizer(OptimizerSpec(family="adam", hyperparams={"lr": lr})),
@@ -41,6 +45,20 @@ def _opts(lr, family, quant=False):
             out[f"smmf({mode})"] = build_optimizer(OptimizerSpec(
                 family="smmf",
                 hyperparams={"lr": lr, "decay_rate": gamma, "quant": mode}))
+    if zoo:
+        # the optimizer zoo's parity rows: each new family vs its dense
+        # reference (asserted in main) — adapprox vs adam (rank-k second
+        # moment), hfac vs adafactor (factorized stats), and the
+        # AdaPM-style partial-momentum recipe vs full-momentum smmf
+        out["adapprox(r2)"] = build_optimizer(OptimizerSpec(
+            family="adapprox",
+            hyperparams={"lr": lr, "decay_rate": gamma, "rank": 2}))
+        out["hfac"] = build_optimizer(OptimizerSpec(
+            family="hfac", hyperparams={"lr": lr}))
+        out["adapm"] = build_optimizer(OptimizerSpec(
+            family="smmf", hyperparams={"lr": lr, "decay_rate": gamma},
+            partitions=(Partition(name="nomom", match=r"attn/|ffn/",
+                                  hyperparams={"beta1": None}),)))
     return out
 
 
@@ -74,7 +92,7 @@ def bench_lm(steps=60, lr=1e-3) -> dict:
     cfg = ModelConfig("bench-lm", "dense", 2, 64, 4, 128, 512, n_kv_heads=2, dtype="float32")
     stream = SyntheticLMStream(cfg, 8, 64, seed=0)
     out = {}
-    for name, opt in _opts(lr, "transformer", quant=True).items():
+    for name, opt in _opts(lr, "transformer", quant=True, zoo=True).items():
         params = init_lm(jax.random.PRNGKey(0), cfg)
         state = opt.init(params)
         step = jax.jit(make_train_step(cfg, opt))
@@ -104,10 +122,18 @@ def main() -> None:
     f32 = res["smmf"]["final_loss"]
     for mode in ("int8", "fp8"):
         q = res[f"smmf({mode})"]["final_loss"]
-        assert abs(q - f32) <= 0.05 * abs(f32), (
+        assert abs(q - f32) <= PARITY_TOL * abs(f32), (
             f"quantized-vs-f32 parity broken: smmf({mode}) {q:.4f} vs "
             f"smmf {f32:.4f}")
     print("quantized parity OK: smmf(int8/fp8) final losses within 5% of f32 smmf")
+    # optimizer-zoo parity: each new family vs its dense reference
+    for name, ref in (("adapprox(r2)", "adam"), ("hfac", "adafactor"),
+                      ("adapm", "smmf")):
+        z, r = res[name]["final_loss"], res[ref]["final_loss"]
+        assert abs(z - r) <= PARITY_TOL * abs(r), (
+            f"zoo parity broken: {name} {z:.4f} vs {ref} {r:.4f}")
+    print("zoo parity OK: adapprox/hfac/adapm final losses within 5% of "
+          "their dense references (adam/adafactor/smmf)")
 
 
 if __name__ == "__main__":

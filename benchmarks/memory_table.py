@@ -49,11 +49,16 @@ from repro.utils.tree import tree_bytes
 
 # acceptance bound for the quantized momentum-free row (scales included)
 QUANT_ACCEPT_FRACTION = 0.30
+# acceptance bound for fully-quantized Adafactor/CAME (momentum slot now
+# rides blockwise sub-row scales, so every full-size f32 slot is covered;
+# payloads are 1/4 of f32, scales add ~1/128 per momentum block)
+MOMENTUM_QUANT_ACCEPT_FRACTION = 0.30
 
 OPTS = {
     name: (lambda n=name: build_optimizer(OptimizerSpec(family=n,
                                                         hyperparams={"lr": 1e-3})))
-    for name in ("adam", "adafactor", "sm3", "came", "smmf")
+    for name in ("adam", "adafactor", "sm3", "came", "smmf",
+                 "adapprox", "hfac")
 }
 
 # mixed partition-aware spec tracked in the perf trajectory: SMMF on the
@@ -133,6 +138,22 @@ def quant_rows(arch: str = "transformer_base"):
                 "total": tree_bytes(state_shape),
                 "per_device": rules.sharded_state_bytes(sh, state_shape),
             })
+    # Adafactor/CAME under full quantization: the momentum slot (the one
+    # remaining full-size f32 slot pre-blockwise-scales) now quantizes with
+    # sub-row block scales, so int8 covers the whole state tuple
+    for fam in ("adafactor", "came"):
+        for quant in (None, "int8"):
+            hp = {"lr": 1e-3}
+            if quant:
+                hp["quant"] = quant
+            opt = build_optimizer(OptimizerSpec(family=fam, hyperparams=hp))
+            state_shape = jax.eval_shape(opt.init, psds)
+            sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+            out.append({
+                "variant": fam, "quant": quant or "f32",
+                "total": tree_bytes(state_shape),
+                "per_device": rules.sharded_state_bytes(sh, state_shape),
+            })
     return out
 
 
@@ -199,6 +220,7 @@ def main(json_path: str | Path | None = None) -> dict:
           f"{'vs f32':>7s}")
     base = {}
     frac_accept = None
+    mom_frac: dict = {}
     for row in quant_rows():
         rec["qstate"].append(row)
         key = row["variant"]
@@ -207,6 +229,8 @@ def main(json_path: str | Path | None = None) -> dict:
         frac = row["per_device"] / base[key]
         if key == "smmf(beta1=None)" and row["quant"] == "int8":
             frac_accept = frac
+        if key in ("adafactor", "came") and row["quant"] == "int8":
+            mom_frac[key] = frac
         print(f"{key:20s} {row['quant']:>5s} {row['total']/2**20:9.3f} "
               f"{row['per_device']/2**20:11.3f} {frac:6.1%}")
     assert frac_accept is not None and frac_accept <= QUANT_ACCEPT_FRACTION, (
@@ -215,6 +239,19 @@ def main(json_path: str | Path | None = None) -> dict:
     print(f"\nqstate acceptance OK: smmf(beta1=None),quant=int8 = "
           f"{frac_accept:.1%} of f32 (<= {QUANT_ACCEPT_FRACTION:.0%}, scales "
           f"included; the momentum variant is sign-bound — docs/memory.md)")
+    # full-size momentum on blockwise sub-row scales: with the last f32
+    # slot quantized, Adafactor/CAME int8 must land near the 1-byte payload
+    # ratio (scales included) — the carried-forward ROADMAP follow-up
+    for fam in ("adafactor", "came"):
+        assert fam in mom_frac and \
+            mom_frac[fam] <= MOMENTUM_QUANT_ACCEPT_FRACTION, (
+                f"momentum-quant acceptance: {fam},quant=int8 per-device "
+                f"bytes are {mom_frac.get(fam, 1.0):.1%} of f32 "
+                f"(bound {MOMENTUM_QUANT_ACCEPT_FRACTION:.0%})")
+    print(f"momentum-quant acceptance OK: adafactor/came int8 = "
+          + "/".join(f"{mom_frac[f]:.1%}" for f in ("adafactor", "came"))
+          + f" of f32 (<= {MOMENTUM_QUANT_ACCEPT_FRACTION:.0%}; the "
+          f"momentum slot rides blockwise sub-row scales)")
 
     print(f"\nhost-offload tier (--offload cold), transformer_base int8, "
           f"4-way fsdp, per device:")

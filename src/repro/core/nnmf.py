@@ -1,16 +1,32 @@
-"""One-shot rank-1 NNMF (paper Algorithm 4/5, after Shazeer & Stern 2018).
+"""One-shot factorizers for non-negative momentum matrices.
+
+Rank-1 (paper Algorithm 4/5, after Shazeer & Stern 2018):
 
 compress:  r = M @ 1, c = 1^T @ M, then normalize the *smaller* vector
            (paper Algo 4: normalize r if n_hat <= m_hat else c) so the outer
            product has the right scale with one division.
 decompress: M_hat = r (outer) c.
 
-All in f32. The factorization is exact for rank-1 non-negative matrices and
-is the I-divergence-optimal rank-1 approximation otherwise.
+Rank-k (Adapprox-style, Zhao et al. 2024): the positive rank-1
+Algorithm-4 baseline plus a one-shot randomized range-finder sketch of
+the *residual* — project ``M - r1 c1^T`` onto a fixed Gaussian test
+matrix, take an orthonormal range basis Q, and append ``(Q, resid^T Q)``
+as the remaining k-1 factor columns. ``R @ C^T`` is then
+``r1 c1^T + Q Q^T resid``: every row/column with mass keeps a strictly
+positive baseline (the property denominator-side consumers rely on — a
+pure signed sketch can reconstruct a low-traffic row as ~0 and turn
+``m / (sqrt(v) + eps)`` into a 1/eps blow-up), while the signed
+correction refines the dominant structure. Consumers still clamp the
+reconstruction at 0. The ``rank=1`` path delegates to
+:func:`nnmf_compress` and is bitwise-identical to it.
+
+All in f32. The rank-1 factorization is exact for rank-1 non-negative
+matrices and is the I-divergence-optimal rank-1 approximation otherwise.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -19,15 +35,62 @@ def nnmf_compress(mat: jnp.ndarray, eps: float = 0.0) -> tuple[jnp.ndarray, jnp.
     n, m = mat.shape
     r = jnp.sum(mat, axis=1)
     c = jnp.sum(mat, axis=0)
+    # Guard the denominator: an all-zero moment (step-1 state, frozen
+    # groups) would otherwise evaluate 0/0 in the discarded where-branch
+    # and trip jax_debug_nans.
     if n <= m:
         total = jnp.sum(r)
-        r = jnp.where(total > 0, r / total, r)
+        r = r / jnp.where(total > 0, total, 1.0)
     else:
         total = jnp.sum(c)
-        c = jnp.where(total > 0, c / total, c)
+        c = c / jnp.where(total > 0, total, 1.0)
     return r, c
 
 
 def nnmf_decompress(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     """Outer product reconstruction (paper Algorithm 3)."""
     return jnp.outer(r, c)
+
+
+def _sketch_matrix(m: int, rank: int) -> jnp.ndarray:
+    """Fixed Gaussian test matrix (m, rank), deterministic in the shape.
+
+    The seed depends only on the static geometry so recompression at every
+    step reuses one projection — no per-step randomness, no state.
+    """
+    key = jax.random.PRNGKey(m * 1000003 + rank)
+    return jax.random.normal(key, (m, rank), dtype=jnp.float32)
+
+
+def nnmf_compress_k(
+    mat: jnp.ndarray, rank: int, eps: float = 0.0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank-k factorization of a batched (B, n, m) stack.
+
+    Returns ``(R: (B, n, k), C: (B, m, k))`` with ``R @ C^T`` the rank-k
+    range-finder approximation. ``rank=1`` delegates to the batched
+    Algorithm-4 path so it stays bitwise-identical to the paper layout.
+    """
+    if mat.ndim != 3:
+        raise ValueError(f"nnmf_compress_k wants a (B, n, m) stack, got {mat.shape}")
+    _, n, m = mat.shape
+    r1, c1 = jax.vmap(nnmf_compress)(mat)
+    if rank <= 1:
+        return r1[:, :, None], c1[:, :, None]
+    resid = mat - r1[:, :, None] * c1[:, None, :]
+    omega = _sketch_matrix(m, rank - 1)
+    y = resid @ omega                    # (B, n, k-1)
+    q, _ = jnp.linalg.qr(y)              # (B, n, k-1) orthonormal range basis
+    coeff = jnp.einsum("bnm,bnk->bmk", resid, q)
+    r = jnp.concatenate([r1[:, :, None], q], axis=2)
+    c = jnp.concatenate([c1[:, :, None], coeff], axis=2)
+    return r, c
+
+
+def nnmf_decompress_k(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Batched rank-k reconstruction ``R @ C^T`` → (B, n, m).
+
+    The range-finder factors are signed, so denominator-side consumers
+    clamp (``jnp.maximum(..., 0)``) before taking square roots.
+    """
+    return jnp.einsum("bnk,bmk->bnm", r, c)

@@ -25,6 +25,13 @@ from typing import Callable, Sequence
 from repro.core.matricize import effective_shape
 from repro.core.signpack import packed_width
 
+# Default Pallas tile of the fused SMMF update kernel. This module is the
+# single source: kernels/smmf_update/kernel.py, repro.optim.families,
+# repro.optim.engine and repro.core.smmf all import it from here (plan.py
+# sits below every one of them in the import graph, so no cycle), and
+# tests/test_kernel_block_sync.py asserts all surfaces agree.
+DEFAULT_KERNEL_BLOCK = (256, 512)
+
 
 def block_shape(numel: int, blocks: int) -> tuple[int, int, int]:
     """(B, rows_per_block, cols) for the blockwise SMMF factorization.
@@ -87,6 +94,7 @@ class LeafPlan:
     transport: str | None = None    # gradient transport (int8/rank1/None)
     transport_flush_every: int = 8  # rank1 dense-residual-flush period
     momentum: bool = True           # SMMF: first-moment factors + signs exist
+    rank: int = 1                   # factor rank k (1 = the paper's vectors)
 
     @property
     def numel(self) -> int:
@@ -102,9 +110,15 @@ class LeafPlan:
     @property
     def bucket_key(self) -> str:
         """Deterministic state-dict key prefix:
-        ``[<group>/]fac:GEOM`` / ``[<group>/]dense:GEOM``."""
+        ``[<group>/]fac:GEOM`` / ``[<group>/]dense:GEOM``. Rank-k factored
+        plans (``rank > 1``) suffix the geometry with ``xr<k>`` — state
+        shapes carry an extra trailing factor axis, so the key must differ;
+        rank-1 keys are byte-identical to the pre-rank layout."""
         kind = "fac" if self.factorized else "dense"
-        return f"{self.group_prefix}{kind}:" + "x".join(map(str, self.geometry))
+        key = f"{self.group_prefix}{kind}:" + "x".join(map(str, self.geometry))
+        if self.factorized and self.rank > 1:
+            key += f"xr{self.rank}"
+        return key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +203,12 @@ class Bucket:
     def transport_flush_every(self) -> int:
         """rank1 transport's dense-residual-flush period (steps)."""
         return self.plans[0].transport_flush_every
+
+    @property
+    def rank(self) -> int:
+        """Factor rank k of the bucket's factored state (rank is part of
+        the bucket key, so every plan agrees; 1 = the rank-1 vector pair)."""
+        return self.plans[0].rank
 
 
 def build_buckets(
@@ -353,7 +373,11 @@ def bucket_partition_wants(
     ``kind`` is one of ``"matrix"`` (the (K·B, n, m) working matrix),
     ``"rows"`` (r_m / r_v, (K·B, n)), ``"cols"`` (c_m / c_v, (K·B, m)),
     ``"sign"`` (the (K·B·n, ceil(m/8)) packed-sign matrix) or ``"dense"``
-    (a (K, numel) / (1, total) dense-fallback moment). ``axis_sizes`` maps
+    (a (K, numel) / (1, total) dense-fallback moment). Rank-k factors carry
+    one extra trailing axis — ``"rows"``/``"cols"`` on a 3-D
+    ``(K·B, dim, k)`` shape (and per-column quant scales on
+    ``(K·B, 1, k)``) get the 2-D wants padded with ``None`` for every
+    trailing axis, so the k axis is never sharded. ``axis_sizes`` maps
     mesh axis name → size (missing = absent); ``stack_over`` replaces the
     default ``("pod", "data")`` stack preference chain (the per-group
     ``state_sharding`` override of ``repro.optim.spec.Partition``).
@@ -383,10 +407,13 @@ def bucket_partition_wants(
         return ((_stack_want(st), None, minor_model) if st
                 else (None, "data", "model"))
     if kind == "rows":
-        return (_stack_want(st), None) if st else (None, "data")
-    if kind == "cols":
-        return (_stack_want(st), minor_model) if st else (None, "model")
-    raise ValueError(f"unknown bucket state kind: {kind!r}")
+        want = (_stack_want(st), None) if st else (None, "data")
+    elif kind == "cols":
+        want = (_stack_want(st), minor_model) if st else (None, "model")
+    else:
+        raise ValueError(f"unknown bucket state kind: {kind!r}")
+    # rank-k factors: pad the trailing factor axis (never sharded)
+    return want + (None,) * (len(shape) - 2)
 
 
 # ---------------------------------------------------------------------------
@@ -398,6 +425,7 @@ def smmf_planner(
     vector_reshape: bool = True,
     use_kernel: bool = False,
     momentum: bool = True,
+    rank: int = 1,
 ) -> Callable[[int, tuple[int, ...]], LeafPlan]:
     """Planner for square-matricized SMMF leaves.
 
@@ -406,7 +434,11 @@ def smmf_planner(
     fused kernel is eligible for every factorized geometry (padding to the
     clamped tile, :func:`clamp_kernel_block`, handles lane alignment).
     ``momentum=False`` marks the beta1=None variant (no momentum factors,
-    no sign matrix — state and boundary accounting differ).
+    no sign matrix — state and boundary accounting differ). ``rank > 1``
+    plans rank-k factor matrices instead of the paper's vectors (the
+    Adapprox generalization; the fused kernel is rank-1 only, so rank-k
+    plans never take it) — rank-1 plans are byte-identical to the
+    pre-rank layout.
     """
 
     def plan(index: int, shape: tuple[int, ...]) -> LeafPlan:
@@ -414,12 +446,13 @@ def smmf_planner(
         squeezed = [s for s in shape if s != 1]
         factorized = numel > 1 and not (len(squeezed) <= 1 and not vector_reshape)
         if not factorized:
-            return LeafPlan(index, shape, False, (numel,), momentum=momentum)
+            return LeafPlan(index, shape, False, (numel,), momentum=momentum,
+                            rank=rank)
         b, n, m = block_shape(numel, blocks)
         return LeafPlan(
             index, shape, True, (b, n, m), blocks=b,
-            kernel_ok=use_kernel, constraint="smmf_matrix",
-            momentum=momentum,
+            kernel_ok=use_kernel and rank == 1, constraint="smmf_matrix",
+            momentum=momentum, rank=rank,
         )
 
     return plan

@@ -55,13 +55,11 @@ from __future__ import annotations
 
 import warnings
 
+from repro.core.plan import (  # re-export: the single source lives in core.plan
+    DEFAULT_KERNEL_BLOCK,
+)
 from repro.optim.base import EngineState as SMMFState  # back-compat re-export
 from repro.optim.base import GradientTransformation
-
-# default Pallas tile; kept in sync with repro.optim.engine /
-# kernels/smmf_update (duplicated literal: importing the engine here would
-# cycle through repro.core's package init)
-DEFAULT_KERNEL_BLOCK = (256, 512)
 
 __all__ = ["SMMFState", "smmf", "smmf_local"]
 

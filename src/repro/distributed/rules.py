@@ -31,6 +31,10 @@ from repro.models.config import ModelConfig
 
 PyTree = Any
 
+# SMMF-layout bucket key: "fac:BxNxM", optionally rank-suffixed ("xr<k>",
+# rank-k factor buckets) and/or split-indexed ("@<i>"). Groups: B, N, M, k.
+_FAC3_RE = re.compile(r"fac:(\d+)x(\d+)x(\d+)(?:xr(\d+))?(?:@\d+)?")
+
 
 def _axsize(mesh: Mesh, name) -> int:
     if name is None:
@@ -238,14 +242,18 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
             and len(parts) == key_i + 3
         slot = parts[key_i + 1] if key_i is not None and len(parts) > key_i + 1 \
             else None
+        mfac = _FAC3_RE.fullmatch(bare) if bare is not None else None
         if is_scale:
-            if len(shape) == 2 and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", bare):
-                # per-stack-row scales of an SMMF factored bucket ride the
-                # stack placement (leading axis = the bucket's stack axis),
-                # matching the in-update "qscale" constraint. Other
-                # families' scales replicate — their payloads do too, and
-                # an unmatched at-rest sharding would just reshard tiny
-                # arrays every step.
+            if len(shape) in (2, 3) and mfac:
+                # per-stack-row scales of an SMMF-layout factored bucket ride
+                # the stack placement (leading axis = the bucket's stack
+                # axis), matching the in-update "qscale" constraint. Rank-k
+                # per-column and blockwise sub-row scales carry one extra
+                # trailing axis; the padded "rows" wants leave it unsharded
+                # (again matching "qscale"). Other families' scales
+                # replicate — their payloads do too, and an unmatched
+                # at-rest sharding would just reshard tiny arrays every
+                # step.
                 want = bucket_partition_wants("rows", shape, axis_sizes,
                                               stack_over=over)
                 return NamedSharding(mesh, fit_spec(mesh, shape, want))
@@ -253,6 +261,27 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
         if len(shape) == 2 and leaf.dtype == np.uint8:  # packed sign matrix
             want = bucket_partition_wants("sign", shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
+        if len(shape) == 3 and slot is not None and mfac:
+            # rank-k factored bucket (adapprox layout): a 3-D state leaf
+            # under an SMMF-style key is either the full-size momentum
+            # (K*B, n, m) or a rank-k factor matrix (K*B, dim, k) —
+            # classified against the key's dims. Adafactor/CAME stats that
+            # happen to sit under a 3-int fac key (scan-stacked geometries)
+            # lead with the bucket geometry instead of n/m and fall through
+            # to the heuristics below.
+            n_, m_ = int(mfac.group(2)), int(mfac.group(3))
+            rk = int(mfac.group(4) or 1)
+            kind = None
+            if shape[1:] == (n_, m_):
+                kind = "matrix"
+            elif shape[1] == n_ and shape[2] == rk:
+                kind = "rows"
+            elif shape[1] == m_ and shape[2] == rk:
+                kind = "cols"
+            if kind is not None:
+                want = bucket_partition_wants(kind, shape, axis_sizes,
+                                              stack_over=over)
+                return NamedSharding(mesh, fit_spec(mesh, shape, want))
         if shape in pspec_by_shape:  # full-size momentum: shard like the param
             return pspec_by_shape[shape]
         if len(shape) >= 3 and shape[1:] in pspec_by_shape:
@@ -268,14 +297,23 @@ def opt_state_shardings(mesh: Mesh, cfg: ModelConfig | None, params_shape: PyTre
             free = {a: s for a, s in axis_sizes.items() if a not in flat_base}
             stack = _stack_want(stack_axes(shape[0], free, over or DEFAULT_STACK_AXES))
             return NamedSharding(mesh, P(stack, *base))
-        if (len(shape) == 2 and slot is not None
-                and re.fullmatch(r"fac:\d+x\d+x\d+(@\d+)?", bare)):
-            # SMMF factored-bucket tuple (r_m, c_m, sign, r_v, c_v) — the key
-            # "fac:BxNxM" identifies it (adafactor/CAME/SM3 buckets never put
-            # 2-D leaves under a 3-int fac key). Tuple slots 1 and 4 are the
-            # column factors, 0 and 3 the row factors; quantized payloads
-            # (".../<slot>/q") take their slot's placement unchanged.
-            kind = "cols" if slot in ("1", "4") else "rows"
+        if len(shape) == 2 and slot is not None and mfac:
+            # SMMF-layout factored-bucket tuple — the key "fac:BxNxM"
+            # identifies it (adafactor/CAME/SM3 buckets never put 2-D
+            # leaves under a 3-int fac key). Rectangular geometries
+            # classify by the minor dim (n-sized -> row factor, m-sized ->
+            # col factor), covering both SMMF's (r_m, c_m, sign, r_v, c_v)
+            # layout and H-Fac's sign-free (r_m, c_m, r_v, c_v); square
+            # geometries keep the SMMF slot-index convention (1 and 4 are
+            # the col factors — H-Fac constrains its slot-3 col factor as
+            # "smmf_rows" in that case, see families._hfac_update, so both
+            # sides still agree). Quantized payloads (".../<slot>/q") take
+            # their slot's placement unchanged.
+            n_, m_ = int(mfac.group(2)), int(mfac.group(3))
+            if n_ != m_:
+                kind = "cols" if shape[1] == m_ else "rows"
+            else:
+                kind = "cols" if slot in ("1", "4") else "rows"
             want = bucket_partition_wants(kind, shape, axis_sizes, stack_over=over)
             return NamedSharding(mesh, fit_spec(mesh, shape, want))
         if len(shape) == 2 and bare is not None and bare.startswith("dense:"):
@@ -546,11 +584,13 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
             if not _override_boundary_needed(stack, over, mesh_axis_sizes(mesh)):
                 return None
             return NamedSharding(mesh, P())
-        if kind == "qscale" and ndim == 2:
+        if kind == "qscale" and ndim in (2, 3):
             # per-stack-row quantization scales (repro.optim.qstate): the
             # leading axis IS the bucket's stack axis, so the scales ride
             # the same (pod, data) chain — or the group's override (meta) —
-            # as their payloads; the trailing keepdims axis is size 1
+            # as their payloads; the trailing keepdims axis is size 1.
+            # Rank-k per-column and blockwise sub-row scales are 3-D; the
+            # padded "rows" wants leave their trailing axes unsharded.
             from repro.core.plan import bucket_partition_wants
             from repro.models.perf import flags as _pf
 
@@ -581,6 +621,12 @@ def activation_rules(mesh: Mesh, cfg: ModelConfig, mode: str):
             if ndim == 2:
                 sub = {"smmf_rows": "rows", "smmf_cols": "cols",
                        "smmf_sign": "sign", "dense_flat": "dense"}[kind]
+                return _ns(shape, bucket_partition_wants(
+                    sub, shape, sizes, stack_over=meta))
+            if ndim == 3 and kind in ("smmf_rows", "smmf_cols"):
+                # rank-k factor matrices (K*B, dim, k): the 2-D wants
+                # padded with None — the trailing factor axis never shards
+                sub = "rows" if kind == "smmf_rows" else "cols"
                 return _ns(shape, bucket_partition_wants(
                     sub, shape, sizes, stack_over=meta))
             return None

@@ -156,12 +156,14 @@ def _rank1_deliver(bucket: Bucket, gm: jnp.ndarray, step, flush_every: int,
     a = jnp.abs(g)
     r = jnp.sum(a, axis=2)
     c = jnp.sum(a, axis=1)
+    # denominator guard: an all-zero gradient row would otherwise evaluate
+    # 0/0 in the discarded where-branch (jax_debug_nans)
     if n_hat <= m_hat:
         tot = jnp.sum(r, axis=1, keepdims=True)
-        r = jnp.where(tot > 0, r / tot, r)
+        r = r / jnp.where(tot > 0, tot, 1.0)
     else:
         tot = jnp.sum(c, axis=1, keepdims=True)
-        c = jnp.where(tot > 0, c / tot, c)
+        c = c / jnp.where(tot > 0, tot, 1.0)
     r = _q_sketch(r, jax.random.fold_in(key, _SLOT_ROW))
     c = _q_sketch(c, jax.random.fold_in(key, _SLOT_COL))
 

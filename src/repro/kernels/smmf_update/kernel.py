@@ -34,7 +34,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK = (256, 512)
+# the single source of the default tile is repro.core.plan (which imports
+# only stdlib + jax, so no package cycle); DEFAULT_BLOCK is the kernel
+# package's historical name for it
+from repro.core.plan import DEFAULT_KERNEL_BLOCK as DEFAULT_BLOCK
 
 
 def _bits3() -> jnp.ndarray:

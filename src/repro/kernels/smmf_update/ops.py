@@ -93,13 +93,15 @@ def smmf_update_batched(
     c_v2 = jnp.sum(cv_part, axis=1)[:, :m]
 
     def _norm(r, c):
-        # per-matrix Algo-4 normalization of the smaller factor
+        # per-matrix Algo-4 normalization of the smaller factor; the
+        # denominator guard keeps all-zero moments from evaluating 0/0 in
+        # the discarded where-branch (jax_debug_nans)
         if n <= m:
             tot = jnp.sum(r, axis=1, keepdims=True)
-            r = jnp.where(tot > 0, r / tot, r)
+            r = r / jnp.where(tot > 0, tot, 1.0)
         else:
             tot = jnp.sum(c, axis=1, keepdims=True)
-            c = jnp.where(tot > 0, c / tot, c)
+            c = c / jnp.where(tot > 0, tot, 1.0)
         return r, c
 
     r_m2, c_m2 = _norm(r_m2, c_m2)

@@ -46,7 +46,7 @@ from repro.optim.spec import OptimizerSpec, build_optimizer, state_bytes_by_grou
 from repro.train import TrainLoop, TrainLoopConfig
 
 FAMILY_CHOICES = ("smmf", "smmf_local", "adam", "adafactor", "came",
-                  "came_conf", "sm3", "sgd")
+                  "came_conf", "sm3", "sgd", "adapprox", "hfac")
 
 
 def spec_from_args(args, family: str) -> OptimizerSpec:
@@ -79,7 +79,10 @@ def spec_from_args(args, family: str) -> OptimizerSpec:
                       use_kernel=args.use_kernel, bucket=not args.no_bucket,
                       fuse_dense=not args.no_bucket)
             name = "smmf"
-        elif name in ("adafactor", "came", "came_conf", "sm3"):
+        elif name == "adapprox":
+            hp.update(decay_rate=gamma, bucket=not args.no_bucket,
+                      fuse_dense=not args.no_bucket)
+        elif name in ("adafactor", "came", "came_conf", "sm3", "hfac"):
             hp.update(bucket=not args.no_bucket)
         if args.quant:
             hp["quant"] = args.quant  # sm3 rejects it at spec validation

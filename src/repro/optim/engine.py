@@ -51,14 +51,16 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import Bucket, LeafPlan, bucket_schedule, build_buckets
+from repro.core.plan import (
+    DEFAULT_KERNEL_BLOCK,  # re-exported: the single source lives in core.plan
+    Bucket,
+    LeafPlan,
+    bucket_schedule,
+    build_buckets,
+)
 from repro.distributed.ctx import constrain, constrain_update
 
 PyTree = Any
-
-# Default Pallas tile; kept in sync with kernels/smmf_update/kernel.py but
-# duplicated here so the engine stays importable without the kernel package.
-DEFAULT_KERNEL_BLOCK = (256, 512)
 
 
 class LeafPlanEngine:

@@ -42,7 +42,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.nnmf import nnmf_compress_k, nnmf_decompress_k
 from repro.core.plan import (
+    DEFAULT_KERNEL_BLOCK,  # re-exported: the single source lives in core.plan
     Bucket,
     LeafPlan,
     axiscover_planner,
@@ -55,10 +57,6 @@ from repro.optim.qstate import QTensor, SlotSpec
 
 PyTree = Any
 PlanFn = Callable[[int, tuple[int, ...]], LeafPlan]
-
-# Default Pallas tile; kept in sync with kernels/smmf_update/kernel.py but
-# duplicated so the registry stays importable without the kernel package.
-DEFAULT_KERNEL_BLOCK = (256, 512)
 
 # hp keys that configure the engine/planner rather than the math; shared by
 # every family (plan-level keys like blocks/use_kernel live in the family's
@@ -195,12 +193,14 @@ def _compress(mat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     _, n, m = mat.shape
     r = jnp.sum(mat, axis=2)
     c = jnp.sum(mat, axis=1)
+    # guard the denominator so all-zero moments (step-1 state, frozen
+    # groups) never evaluate 0/0 in the discarded where-branch (debug-nans)
     if n <= m:
         tot = jnp.sum(r, axis=1, keepdims=True)
-        r = jnp.where(tot > 0, r / tot, r)
+        r = r / jnp.where(tot > 0, tot, 1.0)
     else:
         tot = jnp.sum(c, axis=1, keepdims=True)
-        c = jnp.where(tot > 0, c / tot, c)
+        c = c / jnp.where(tot > 0, tot, 1.0)
     return r, c
 
 
@@ -405,13 +405,23 @@ register(Family(
 # Adafactor (Shazeer & Stern 2018) — last-two-axes factored second moment
 # ---------------------------------------------------------------------------
 
+MOMENTUM_QUANT_BLOCK = 128
+"""Sub-row scale block for full-size momentum slots (Adafactor/CAME).
+
+The momentum is signed and full-size — per-stack-row absmax scales lose
+too much resolution on long rows, so it rides the PR 8 blockwise sub-row
+scales (``core.quant.block_scale``/``block_expand``) instead: one scale
+per 128 trailing-axis elements."""
+
+
 def _adafactor_quant_slots(bk: Bucket, hp: dict) -> tuple:
     """SlotSpecs for Adafactor: quantize the row/col second-moment stats
     (denominator-side -> sqrt-companded under int8, and the dense fallback
-    whole); the full-size momentum stays exact."""
+    whole) and the full-size momentum with blockwise sub-row scales."""
     if bk.factorized:
         second = (SlotSpec(True, sqrt=True), SlotSpec(True, sqrt=True))
-        return ((SlotSpec(False),) if hp["beta1"] is not None else ()) + second
+        mom = (SlotSpec(True, block=MOMENTUM_QUANT_BLOCK),)
+        return (mom if hp["beta1"] is not None else ()) + second
     kind = "dense_flat" if bk.fused else None
     v = (SlotSpec(True, kind, sqrt=True),)
     if hp["beta1"] is not None:
@@ -486,12 +496,13 @@ register(Family(
 
 def _came_quant_slots(bk: Bucket, hp: dict) -> tuple:
     """SlotSpecs for CAME: quantize the row/col second-moment AND
-    confidence stats (both denominator-side -> sqrt-companded under int8);
-    the full-size momentum stays exact; the dense fallback quantizes
-    whole (its v/u buffers companded the same way)."""
+    confidence stats (both denominator-side -> sqrt-companded under int8),
+    plus the full-size momentum with blockwise sub-row scales; the dense
+    fallback quantizes whole (its v/u buffers companded the same way)."""
     del hp
     if bk.factorized:
-        return (SlotSpec(False),) + (SlotSpec(True, sqrt=True),) * 4
+        return (SlotSpec(True, block=MOMENTUM_QUANT_BLOCK),) + (
+            SlotSpec(True, sqrt=True),) * 4
     kind = "dense_flat" if bk.fused else None
     return (SlotSpec(True, kind),) + (SlotSpec(True, kind, sqrt=True),) * 2
 
@@ -584,6 +595,271 @@ def _came_conf_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
 # flags and quant slots are inherited, only the update math differs
 register(dataclasses.replace(
     _CAME, name="came_conf", update_bucket=_came_conf_update))
+
+
+# ---------------------------------------------------------------------------
+# Adapprox (Zhao et al. 2024) — randomized rank-k second moment on the
+# square-matricized SMMF bucket layout
+# ---------------------------------------------------------------------------
+
+def _adapprox_validate(hp: dict) -> None:
+    lr = hp["lr"]
+    if isinstance(lr, (int, float)) and lr < 0.0:
+        raise ValueError(f"lr must be >= 0, got {lr}")
+    beta1 = hp["beta1"]
+    if beta1 is not None and not 0.0 <= beta1 <= 1.0:
+        raise ValueError(f"beta1 must be in [0,1], got {beta1}")
+    if not -1.0 <= hp["decay_rate"] <= 0.0:
+        raise ValueError(f"decay_rate must be in [-1,0], got {hp['decay_rate']}")
+    if not 0.0 <= hp["growth_rate"] <= 1.0:
+        raise ValueError(f"growth_rate must be in [0,1], got {hp['growth_rate']}")
+    if hp["weight_decay_mode"] not in ("adam", "adamw"):
+        raise ValueError(
+            f"weight_decay_mode must be adam|adamw, got {hp['weight_decay_mode']}")
+    rank = hp["rank"]
+    if not isinstance(rank, int) or isinstance(rank, bool) or rank < 1:
+        raise ValueError(f"rank must be an int >= 1, got {rank!r}")
+
+
+def _adapprox_plan_fn(hp: dict) -> PlanFn:
+    # rank-k factors never take the (rank-1-only) fused kernel; momentum is
+    # full-size (no packed sign matrix), so the plan's momentum flag — which
+    # gates SMMF sign-transport pricing — stays off
+    return smmf_planner(
+        blocks=hp["blocks"], vector_reshape=hp["vector_reshape"],
+        use_kernel=False, momentum=False, rank=hp["rank"],
+    )
+
+
+def _adapprox_quant_slots(bk: Bucket, hp: dict) -> tuple:
+    """SlotSpecs for Adapprox: the rank-k second-moment factors quantize
+    with per-(stack row, factor column) scales — the QR basis and the
+    projected coefficients live on very different magnitudes per column —
+    and the full-size momentum with blockwise sub-row scales. Both are
+    signed (range-finder output / momentum), so linear code, no
+    companding; the non-negative reconstruction is clamped in the update
+    instead."""
+    if bk.factorized:
+        facs = (SlotSpec(True, "smmf_rows", percol=True),
+                SlotSpec(True, "smmf_cols", percol=True))
+        if hp["beta1"] is not None:
+            return (SlotSpec(True, "smmf_matrix",
+                             block=MOMENTUM_QUANT_BLOCK),) + facs
+        return facs
+    kind = "dense_flat" if bk.fused else None
+    v = SlotSpec(True, kind, sqrt=True)
+    return (SlotSpec(True, kind), v) if hp["beta1"] is not None else (v,)
+
+
+def _adapprox_init(bk: Bucket, hp: dict):
+    k = bk.size
+    momentum = hp["beta1"] is not None
+    if bk.factorized:
+        b, n, m = bk.geometry
+        facs = (_zeros((k * b, n, bk.rank)),                     # R_v
+                _zeros((k * b, m, bk.rank)))                     # C_v
+        if momentum:
+            return (_zeros((k * b, n, m)),) + facs               # m (full)
+        return facs
+    (numel,) = bk.geometry
+    v = (_zeros((bk.stack, numel)),)
+    return ((_zeros((bk.stack, numel)),) + v) if momentum else v
+
+
+def _adapprox_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
+    hp = ctx.hp
+    beta1, eps, t = hp["beta1"], hp["eps"], ctx.t
+    beta1_t = (beta1 * jnp.power(hp["growth_rate"], t - 1.0)) if beta1 is not None else None
+    beta2_t = 1.0 - jnp.power(t, hp["decay_rate"])
+
+    if bk.factorized:
+        k = bk.size
+        b, n, m = bk.geometry
+        kb = k * b
+        gm = constrain(gm.reshape(kb, n, m), "smmf_matrix", meta=bk.state_axes)
+        if beta1 is not None:
+            m_, r_v, c_v = fac
+        else:
+            r_v, c_v = fac
+        # the rank-k reconstruction is a signed range-finder product;
+        # clamp it before it feeds the denominator
+        v_hat = jnp.maximum(nnmf_decompress_k(r_v, c_v), 0.0)
+        v_t = beta2_t * v_hat + (1.0 - beta2_t) * gm * gm
+        if beta1 is not None:
+            m_t = beta1_t * m_ + (1.0 - beta1_t) * gm
+            num = m_t
+        else:
+            num = gm
+        u = num / (jnp.sqrt(v_t) + eps)
+        # re-sketch (one-shot, Adapprox): rank-1 delegates to Algorithm 4
+        r_v2, c_v2 = nnmf_compress_k(v_t, bk.rank)
+        r_v2 = constrain(r_v2, "smmf_rows", meta=bk.state_axes)
+        c_v2 = constrain(c_v2, "smmf_cols", meta=bk.state_axes)
+        u = u.reshape(k, b * n * m)
+        if beta1 is None:
+            return u, (r_v2, c_v2)
+        m_t = constrain(m_t, "smmf_matrix", meta=bk.state_axes)
+        return u, (m_t, r_v2, c_v2)
+
+    # dense fallback: plain Adam on the paper's beta schedules (as smmf)
+    if beta1 is not None:
+        m_, v_ = fac
+        m2 = beta1_t * m_ + (1.0 - beta1_t) * gm
+    else:
+        (v_,) = fac
+    v2 = beta2_t * v_ + (1.0 - beta2_t) * gm * gm
+    num = m2 if beta1 is not None else gm
+    u = num / (jnp.sqrt(v2) + eps)
+    v2 = constrain(v2, "dense_flat", meta=bk.state_axes) if bk.fused else v2
+    if beta1 is None:
+        return u, (v2,)
+    m2 = constrain(m2, "dense_flat", meta=bk.state_axes) if bk.fused else m2
+    return u, (m2, v2)
+
+
+register(Family(
+    name="adapprox",
+    defaults=dict(
+        lr=1e-3, beta1=0.9, eps=1e-8, weight_decay=0.0, decay_rate=-0.5,
+        growth_rate=0.999, rank=2, vector_reshape=True,
+        weight_decay_mode="adamw", blocks=1, bucket=True, fuse_dense=True,
+        quant=None, transport=None, transport_flush_every=8,
+    ),
+    make_plan_fn=_adapprox_plan_fn,
+    init_bucket=_adapprox_init,
+    update_bucket=_adapprox_update,
+    fuse_dense_ok=True,
+    wd_mode_key="weight_decay_mode",
+    validate=_adapprox_validate,
+    quant_slots=_adapprox_quant_slots,
+))
+
+
+# ---------------------------------------------------------------------------
+# H-Fac (Nguyen & Mondelli 2024) — factorized Hamiltonian descent on the
+# rank-1 SMMF factored-state layout (factor-level EMAs, no recompression)
+# ---------------------------------------------------------------------------
+
+def _hfac_validate(hp: dict) -> None:
+    lr = hp["lr"]
+    if isinstance(lr, (int, float)) and lr < 0.0:
+        raise ValueError(f"lr must be >= 0, got {lr}")
+    if not 0.0 <= hp["beta1"] <= 1.0:
+        raise ValueError(f"beta1 must be in [0,1], got {hp['beta1']}")
+    if not 0.0 <= hp["beta2"] <= 1.0:
+        raise ValueError(f"beta2 must be in [0,1], got {hp['beta2']}")
+    if hp["weight_decay_mode"] not in ("adam", "adamw"):
+        raise ValueError(
+            f"weight_decay_mode must be adam|adamw, got {hp['weight_decay_mode']}")
+
+
+def _hfac_plan_fn(hp: dict) -> PlanFn:
+    # same square-matricized geometry as SMMF but no sign matrix (the
+    # momentum factors are kept directly, never re-signed), so the plan's
+    # momentum flag — which gates sign-transport pricing — stays off
+    return smmf_planner(
+        blocks=hp["blocks"], vector_reshape=hp["vector_reshape"],
+        use_kernel=False, momentum=False,
+    )
+
+
+def _hfac_quant_slots(bk: Bucket, hp: dict) -> tuple:
+    """SlotSpecs for H-Fac: all four factor vectors quantize — the (signed)
+    momentum factors linearly, the (non-negative, denominator-side) second
+    -moment factors sqrt-companded, per the SMMF discipline. Square
+    geometries constrain the slot-3 column factor as "smmf_rows" to match
+    the slot-index fallback in ``rules.opt_state_shardings`` (see there)."""
+    del hp
+    if bk.factorized:
+        _, n, m = bk.geometry
+        ckind_v = "smmf_cols" if n != m else "smmf_rows"
+        return (SlotSpec(True, "smmf_rows"),
+                SlotSpec(True, "smmf_cols"),
+                SlotSpec(True, "smmf_rows", sqrt=True),
+                SlotSpec(True, ckind_v, sqrt=True))
+    kind = "dense_flat" if bk.fused else None
+    return (SlotSpec(True, kind), SlotSpec(True, kind, sqrt=True))
+
+
+def _hfac_init(bk: Bucket, hp: dict):
+    k = bk.size
+    if bk.factorized:
+        b, n, m = bk.geometry
+        return (_zeros((k * b, n)), _zeros((k * b, m)),     # r_m, c_m
+                _zeros((k * b, n)), _zeros((k * b, m)))     # r_v, c_v
+    (numel,) = bk.geometry
+    return (_zeros((bk.stack, numel)), _zeros((bk.stack, numel)))  # m, v
+
+
+def _hfac_update(ctx: UpdateCtx, bk: Bucket, gm: jnp.ndarray, fac):
+    """Factorized Hamiltonian descent: EMAs live at the *factor* level
+    (row/col means of the gradient and its square) — no decompress → EMA →
+    recompress round trip. The momentum estimate is the least-squares
+    additive fit ``m̂_ij = r_i + c_j − mean(r)`` (row/col means of ``m̂``
+    reproduce the factors exactly), the preconditioner the Adafactor-style
+    multiplicative fit."""
+    hp = ctx.hp
+    beta1, beta2, eps = hp["beta1"], hp["beta2"], hp["eps"]
+
+    if bk.factorized:
+        k = bk.size
+        b, n, m = bk.geometry
+        kb = k * b
+        gm = constrain(gm.reshape(kb, n, m), "smmf_matrix", meta=bk.state_axes)
+        r_m, c_m, r_v, c_v = fac
+        g2 = gm * gm
+        g_r = jnp.mean(gm, axis=2)
+        g_c = jnp.mean(gm, axis=1)
+        r_m2 = beta1 * r_m + (1.0 - beta1) * g_r
+        c_m2 = beta1 * c_m + (1.0 - beta1) * g_c
+        r_v2 = beta2 * r_v + (1.0 - beta2) * jnp.mean(g2, axis=2)
+        c_v2 = beta2 * c_v + (1.0 - beta2) * jnp.mean(g2, axis=1)
+        mhat = (r_m2[:, :, None] + c_m2[:, None, :]
+                - jnp.mean(r_m2, axis=1, keepdims=True)[:, :, None])
+        # the factors can only remember the additive component of the
+        # momentum; the current gradient's non-additive residual enters at
+        # its fresh-EMA weight so no per-entry descent signal is dropped
+        ghat = (g_r[:, :, None] + g_c[:, None, :]
+                - jnp.mean(g_r, axis=1, keepdims=True)[:, :, None])
+        num = mhat + (1.0 - beta1) * (gm - ghat)
+        vhat = (r_v2[:, :, None] * c_v2[:, None, :]
+                / (jnp.mean(r_v2, axis=1, keepdims=True)[:, :, None] + eps))
+        u = (num / (jnp.sqrt(vhat) + eps)).reshape(k, b * n * m)
+        # square geometries constrain slot 3 as rows (see _hfac_quant_slots)
+        ckind_v = "smmf_cols" if n != m else "smmf_rows"
+        r_m2 = constrain(r_m2, "smmf_rows", meta=bk.state_axes)
+        c_m2 = constrain(c_m2, "smmf_cols", meta=bk.state_axes)
+        r_v2 = constrain(r_v2, "smmf_rows", meta=bk.state_axes)
+        c_v2 = constrain(c_v2, ckind_v, meta=bk.state_axes)
+        return u, (r_m2, c_m2, r_v2, c_v2)
+
+    # dense fallback: plain EMA pair (Adam without bias correction)
+    m_, v_ = fac
+    m2 = beta1 * m_ + (1.0 - beta1) * gm
+    v2 = beta2 * v_ + (1.0 - beta2) * gm * gm
+    u = m2 / (jnp.sqrt(v2) + eps)
+    if bk.fused:
+        m2 = constrain(m2, "dense_flat", meta=bk.state_axes)
+        v2 = constrain(v2, "dense_flat", meta=bk.state_axes)
+    return u, (m2, v2)
+
+
+register(Family(
+    name="hfac",
+    defaults=dict(
+        lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+        vector_reshape=True, weight_decay_mode="adamw", blocks=1,
+        bucket=True, fuse_dense=True, quant=None, transport=None,
+        transport_flush_every=8,
+    ),
+    make_plan_fn=_hfac_plan_fn,
+    init_bucket=_hfac_init,
+    update_bucket=_hfac_update,
+    fuse_dense_ok=True,
+    wd_mode_key="weight_decay_mode",
+    validate=_hfac_validate,
+    quant_slots=_hfac_quant_slots,
+))
 
 
 # ---------------------------------------------------------------------------

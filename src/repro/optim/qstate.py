@@ -83,12 +83,26 @@ class SlotSpec:
     within 10 steps on transformer_base). Companding squares the dynamic
     range the 8-bit code covers, restoring quasi-relative precision like
     the fp8-e4m3 mode (which needs no companding and ignores the flag).
+
+    Two alternative scale granularities (mutually exclusive, both None =
+    the default per-leading-row absmax):
+
+    * ``block=<B>`` — blockwise sub-row scales (``core.quant.block_scale``
+      / ``block_expand``): one absmax per ``B`` trailing-axis elements.
+      For signed full-size slots (the Adafactor/CAME momentum) whose rows
+      are too long for a single absmax to keep 8-bit resolution.
+    * ``percol=True`` — per-column absmax over the middle axes of a
+      ``(rows, ..., k)`` tensor (one scale per (stack row, factor
+      column)). For rank-k factor matrices, whose k columns carry
+      per-column magnitudes (QR basis vs projected coefficients).
     """
 
     quantize: bool
     kind: str | None = None
     kernel_deq: bool = False
     sqrt: bool = False
+    block: int | None = None
+    percol: bool = False
 
 
 def quant_mode(hp: dict) -> str | None:
@@ -114,10 +128,24 @@ def _companded(slot: SlotSpec, mode: str) -> bool:
     return slot.sqrt and mode == "int8"
 
 
+def _percol_scale(x, mode: str) -> jnp.ndarray:
+    """Absmax over the middle axes: (rows, ..., k) -> (rows, 1..., k)."""
+    mid = tuple(range(1, x.ndim - 1))
+    s = jnp.max(jnp.abs(x), axis=mid, keepdims=True) / Q.qmax(mode)
+    return jnp.maximum(s.astype(jnp.float32), Q._SCALE_FLOOR)
+
+
 def _quantize_slot(x, bucket: Bucket, slot: SlotSpec, mode: str,
                    key=None) -> QTensor:
     if _companded(slot, mode):
         x = jnp.sqrt(jnp.maximum(x, 0.0))
+    if slot.block is not None:
+        scale = Q.block_scale(x, slot.block, mode)
+        full = Q.block_expand(scale, slot.block, x.shape[-1])
+        return QTensor(Q.quantize(x, full, mode, key=key), scale)
+    if slot.percol:
+        scale = _percol_scale(x, mode)
+        return QTensor(Q.quantize(x, scale, mode, key=key), scale)
     if _uses_segments(bucket):
         seg = fused_segments(bucket)
         scale = Q.segment_scale(x, seg, bucket.size, mode)
@@ -130,8 +158,11 @@ def _quantize_slot(x, bucket: Bucket, slot: SlotSpec, mode: str,
 def dequantize_slot(qt: QTensor, bucket: Bucket, slot: SlotSpec,
                     mode: str) -> jnp.ndarray:
     """f32 view of one quantized slot (segment-aware for fused rows,
-    un-companding ``sqrt`` slots)."""
-    if _uses_segments(bucket):
+    blockwise/per-column-scale-aware, un-companding ``sqrt`` slots)."""
+    if slot.block is not None:
+        full = Q.block_expand(qt.scale, slot.block, qt.q.shape[-1])
+        x = Q.dequantize(qt.q, full)
+    elif _uses_segments(bucket):
         row = qt.scale[fused_segments(bucket)].reshape(qt.q.shape)
         x = Q.dequantize(qt.q, row)
     else:
@@ -177,7 +208,9 @@ def encode(slots, bucket: Bucket, hp: dict, state, key):
         q, scale = qt
         if s.kind:
             q = constrain(q, s.kind, meta=bucket.state_axes)
-            if scale.ndim == 2:
+            if scale.ndim in (2, 3):
+                # per-row (2-D) and rank-k per-column / blockwise (3-D)
+                # scales ride the bucket's stack placement
                 scale = constrain(scale, "qscale", meta=bucket.state_axes)
         out.append(QTensor(q, scale))
     return tuple(out)

@@ -282,6 +282,12 @@ class OptimizerSpec:
             if (family or self.family) == "smmf" and \
                     "beta1" in hp and hp["beta1"] is None:
                 out["_smmf_momentum_free_layout"] = 2
+            # the full-size Adafactor/CAME momentum slot became a
+            # blockwise-scaled QTensor (was exact f32) — under quant, the
+            # stored layout differs from older checkpoints, so version it
+            if (family or self.family) in ("adafactor", "came", "came_conf") \
+                    and hp.get("quant"):
+                out["_factored_momentum_quant_layout"] = 1
             return out
 
         d["hyperparams"] = hp_form(d["hyperparams"], None)

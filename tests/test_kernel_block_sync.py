@@ -1,0 +1,44 @@
+"""The default fused-kernel tile is ONE constant, not four literals.
+
+``DEFAULT_KERNEL_BLOCK`` is defined once in ``repro.core.plan`` (imports
+only stdlib + jax, so every consumer can reach it cycle-free) and
+re-exported by the optimizer surface (``repro.optim.families``,
+``repro.optim.engine``), the legacy core module (``repro.core.smmf``),
+and the kernel itself (``repro.kernels.smmf_update.kernel.DEFAULT_BLOCK``).
+Before the hoist these were four separate ``(256, 512)`` literals that
+could silently drift apart — a kernel compiled for one tile while the
+plan priced another.
+"""
+
+
+def test_default_kernel_block_single_source():
+    import importlib
+
+    from repro.core import plan
+    from repro.kernels.smmf_update import kernel
+    from repro.optim import engine, families
+
+    # repro.core re-exports the smmf *constructor* under the module's name,
+    # so reach the module itself through importlib
+    core_smmf = importlib.import_module("repro.core.smmf")
+    assert plan.DEFAULT_KERNEL_BLOCK == (256, 512)
+    assert families.DEFAULT_KERNEL_BLOCK is plan.DEFAULT_KERNEL_BLOCK
+    assert engine.DEFAULT_KERNEL_BLOCK is plan.DEFAULT_KERNEL_BLOCK
+    assert core_smmf.DEFAULT_KERNEL_BLOCK is plan.DEFAULT_KERNEL_BLOCK
+    assert kernel.DEFAULT_BLOCK is plan.DEFAULT_KERNEL_BLOCK
+
+
+def test_no_stray_kernel_block_literals():
+    """No source file under src/ re-declares the tile as its own literal
+    assignment — consumers must import it."""
+    import re
+    from pathlib import Path
+
+    src = Path(__file__).resolve().parents[1] / "src"
+    decl = re.compile(r"^(DEFAULT_KERNEL_BLOCK|DEFAULT_BLOCK)\s*=\s*\(",
+                      re.MULTILINE)
+    offenders = [
+        p for p in src.rglob("*.py")
+        if decl.search(p.read_text()) and p.name != "plan.py"
+    ]
+    assert not offenders, f"tile literal re-declared in {offenders}"

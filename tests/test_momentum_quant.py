@@ -1,0 +1,131 @@
+"""Full-size momentum on blockwise sub-row scales (Adafactor/CAME int8).
+
+Pre-blockwise-scales, the momentum slot was the one remaining full-size
+f32 slot in quantized Adafactor/CAME (a per-stack-row absmax scale is too
+coarse for a full matrix: one outlier washes out its entire row). With
+``SlotSpec.block`` the slot stores as 1-byte payloads + one f32 absmax
+scale per 128-element sub-row block — which is what moves fully-quantized
+Adafactor/CAME to ~28% of f32 per device (asserted analytically in
+``benchmarks/memory_table.py`` and gated by ``tools/bench_compare.py``;
+the numerics half lives here).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import spec_opt
+from repro.core import quant as Q
+from repro.optim.base import apply_updates
+from repro.optim.families import MOMENTUM_QUANT_BLOCK
+from repro.optim.qstate import QTensor, SlotSpec, _quantize_slot, dequantize_slot
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32),
+            "w2": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32)}
+
+
+def _run_steps(opt, params, steps=5, seed0=60):
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, g):
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    for t in range(steps):
+        rng = np.random.default_rng(seed0 + t)
+        grads = jax.tree.map(
+            lambda x: jnp.asarray(rng.standard_normal(x.shape) * 1e-2,
+                                  jnp.float32), params)
+        params, state = step(params, state, grads)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# codec: the block path in isolation
+# ---------------------------------------------------------------------------
+
+def test_block_slot_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 64, 256)), jnp.float32)
+    slot = SlotSpec(True, block=64)
+    # the block path never touches the bucket (segments are the fused-row
+    # layout), so the codec is testable in isolation
+    qt = _quantize_slot(x, None, slot, "int8", key=jax.random.PRNGKey(0))
+    assert isinstance(qt, QTensor) and qt.q.dtype == jnp.int8
+    # compact scales: one per (leading dims, 64-wide block), not per element
+    assert qt.scale.shape == (4, 64, 4)
+    back = dequantize_slot(qt, None, slot, "int8")
+    # stochastic rounding is zero-mean; per-element error <= one block lsb
+    lsb = np.repeat(np.asarray(qt.scale), 64, axis=-1)
+    assert np.all(np.abs(np.asarray(back - x)) <= lsb + 1e-7)
+
+
+def test_block_scale_localizes_outliers():
+    """One huge element must not wash out the far blocks of its row —
+    the property a per-row scale lacks and the reason momentum needs the
+    block layout."""
+    x = np.full((1, 1, 256), 1e-3, np.float32)
+    x[0, 0, 0] = 100.0
+    slot = SlotSpec(True, block=64)
+    qt = _quantize_slot(jnp.asarray(x), None, slot, "int8")
+    back = np.asarray(dequantize_slot(qt, None, slot, "int8"))
+    # far blocks keep small-magnitude resolution
+    np.testing.assert_allclose(back[0, 0, 64:], x[0, 0, 64:], rtol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# families: the momentum slot actually quantizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam", ["adafactor", "came"])
+def test_momentum_slot_stores_one_byte_payload(fam):
+    opt = spec_opt(fam, 1e-2, quant="int8")
+    params = _params()
+    _, state = _run_steps(opt, params)
+    # the factored bucket's slot 0 is the full-size momentum: it must be a
+    # QTensor with 1-byte payload and *compact* blockwise scales
+    mom = [bkstate[0] for key, bkstate in state.factors.items()
+           if key.startswith("fac:")]
+    assert mom, list(state.factors)
+    for qt in mom:
+        assert isinstance(qt, QTensor)
+        assert qt.q.dtype.itemsize == 1
+        assert qt.scale.shape[-1] == Q.block_count(qt.q.shape[-1],
+                                                   MOMENTUM_QUANT_BLOCK)
+        assert qt.scale.size < qt.q.size / 16  # scales stay overhead-sized
+
+
+@pytest.mark.parametrize("fam", ["adafactor", "came"])
+def test_quantized_momentum_tracks_f32_trajectory(fam):
+    params = _params()
+    p32, _ = _run_steps(spec_opt(fam, 1e-2), params)
+    pq, _ = _run_steps(spec_opt(fam, 1e-2, quant="int8"), params)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(pq)):
+        a, b = np.asarray(a), np.asarray(b)
+        # lr 1e-2 x 5 steps moves params ~5e-2; 8-bit drift must stay a
+        # modest fraction of that motion (CAME quantizes five slots —
+        # momentum + four companded vectors — so the bound is a bit wider
+        # than the smmf drift test in test_qstate.py)
+        assert np.max(np.abs(a - b)) < 2e-2, np.max(np.abs(a - b))
+
+
+def test_adapprox_momentum_block_quant():
+    """Adapprox shares the same blockwise momentum layout on its full-size
+    m slot (rank-k factors ride per-column scales instead)."""
+    opt = spec_opt("adapprox", 1e-2, rank=2, quant="int8")
+    _, state = _run_steps(opt, _params())
+    for key, bkstate in state.factors.items():
+        if "fac:" in key:
+            m = bkstate[0]
+            assert isinstance(m, QTensor) and m.q.ndim == 3
+            assert m.scale.shape[-1] == Q.block_count(
+                m.q.shape[-1], MOMENTUM_QUANT_BLOCK)
+            r_v = bkstate[1]
+            assert isinstance(r_v, QTensor)
+            # per-(stack row, factor column) scales on the rank-k factors
+            assert r_v.scale.shape[-1] == r_v.q.shape[-1] == 2

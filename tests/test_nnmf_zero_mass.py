@@ -1,0 +1,116 @@
+"""Zero-mass factorization regression: an all-zero momentum matrix must
+never evaluate 0/0.
+
+The rank-1 compress normalizes one factor by the total mass; before the
+guard, an all-zero matrix (step-1 state, frozen groups, a parameter that
+saw no gradient) evaluated ``0 / 0`` in the discarded ``where`` branch and
+tripped ``jax_debug_nans``. The guard lives in four places that each
+duplicate the Algorithm-4 normalization: ``core/nnmf.nnmf_compress``, the
+batched ``_compress`` in ``optim/families``, the fused-kernel reference
+ops (``kernels/smmf_update/ops``), and the rank-1 gradient-transport
+sketch (``distributed/transport``). Each is exercised here under
+``jax_debug_nans`` so a regression fails loudly.
+"""
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import spec_opt
+from repro.core.nnmf import (
+    nnmf_compress,
+    nnmf_compress_k,
+    nnmf_decompress,
+    nnmf_decompress_k,
+)
+from repro.optim.base import apply_updates
+
+
+@contextlib.contextmanager
+def debug_nans():
+    jax.config.update("jax_debug_nans", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", False)
+
+
+def test_compress_all_zero_matrix_is_nan_free():
+    with debug_nans():
+        r, c = jax.jit(nnmf_compress)(jnp.zeros((6, 10)))
+    assert np.all(np.isfinite(r)) and np.all(np.isfinite(c))
+    np.testing.assert_array_equal(np.asarray(nnmf_decompress(r, c)), 0.0)
+
+
+@pytest.mark.parametrize("rank", [1, 3])
+def test_compress_k_all_zero_stack_is_nan_free(rank):
+    with debug_nans():
+        r, c = jax.jit(lambda m: nnmf_compress_k(m, rank))(jnp.zeros((2, 6, 10)))
+    assert np.all(np.isfinite(r)) and np.all(np.isfinite(c))
+    np.testing.assert_array_equal(np.asarray(nnmf_decompress_k(r, c)), 0.0)
+
+
+def test_compress_zero_rows_in_nonzero_stack():
+    """Mixed stack: one all-zero slice beside a live one — the batched
+    guard must be per-slice, not global."""
+    mat = jnp.stack([jnp.zeros((6, 10)),
+                     jnp.abs(jnp.asarray(
+                         np.random.default_rng(0).standard_normal((6, 10)),
+                         jnp.float32))])
+    with debug_nans():
+        r, c = jax.jit(lambda m: nnmf_compress_k(m, 1))(mat)
+    rec = np.asarray(nnmf_decompress_k(r, c))
+    assert np.all(np.isfinite(rec))
+    np.testing.assert_array_equal(rec[0], 0.0)
+    assert np.abs(rec[1]).max() > 0
+
+
+def _zero_grad_steps(opt, params, steps=2):
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(p, s):
+        u, s = opt.update(zeros, s, p)
+        return apply_updates(p, u), s
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return params
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {"w": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((96,)), jnp.float32)}
+
+
+@pytest.mark.parametrize("hp", [
+    {},                                          # batched _compress (families)
+    {"beta1": None},                             # momentum-free factors only
+    {"use_kernel": True, "interpret": True},     # fused-kernel reference ops
+    {"transport": "rank1"},                      # transport magnitude sketch
+], ids=["families", "momentum_free", "kernel_interpret", "transport_rank1"])
+def test_smmf_zero_gradient_step_is_nan_free(hp):
+    """A full zero-gradient optimizer step (the state starts all-zero, the
+    gradient contributes nothing) through each normalization site."""
+    opt = spec_opt("smmf", 1e-3, decay_rate=-0.8, **hp)
+    with debug_nans():
+        params = _zero_grad_steps(opt, _params())
+    for leaf in jax.tree.leaves(params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("fam,hp", [
+    ("adapprox", {"decay_rate": -0.8, "rank": 2}),
+    ("hfac", {}),
+], ids=["adapprox", "hfac"])
+def test_zoo_zero_gradient_step_is_nan_free(fam, hp):
+    opt = spec_opt(fam, 1e-3, **hp)
+    with debug_nans():
+        params = _zero_grad_steps(opt, _params())
+    for leaf in jax.tree.leaves(params):
+        assert np.all(np.isfinite(np.asarray(leaf)))

@@ -1,0 +1,137 @@
+"""Rank-k factored state: the generalized (R, C) layout.
+
+``core/nnmf.nnmf_compress_k`` factorizes a batched stack at rank k — the
+positive rank-1 Algorithm-4 baseline plus a randomized range-finder sketch
+of the residual. The contract under test:
+
+* ``rank=1`` is bitwise-identical to the batched rank-1 path (the paper
+  layout is a strict special case, acceptance criterion);
+* higher rank strictly improves reconstruction on matrices with off-rank-1
+  structure, and a row with mass never reconstructs to (clamped) zero —
+  the property that keeps ``m/(sqrt(v)+eps)`` bounded for low-traffic
+  embedding rows;
+* plan/bucket plumbing: ``LeafPlan.rank`` reaches the bucket key as an
+  ``xrK`` suffix for ``rank > 1`` ONLY — rank-1 keys (and so every
+  existing checkpoint's state-dict keys) are byte-identical to the
+  pre-rank layout;
+* ``rank`` is spec-hash-relevant (state shapes change with it), so a
+  mismatched-rank restore is refused.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.nnmf import (
+    nnmf_compress,
+    nnmf_compress_k,
+    nnmf_decompress_k,
+)
+from repro.core.plan import build_buckets, smmf_planner
+from repro.optim import OptimizerSpec, build_optimizer
+
+
+def _stack(b=3, n=24, m=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.abs(rng.standard_normal((b, n, m))), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# factorizer
+# ---------------------------------------------------------------------------
+
+def test_rank1_bitwise_identical_to_algorithm4():
+    mat = _stack()
+    r_k, c_k = nnmf_compress_k(mat, 1)
+    r_1, c_1 = jax.vmap(nnmf_compress)(mat)
+    np.testing.assert_array_equal(np.asarray(r_k[:, :, 0]), np.asarray(r_1))
+    np.testing.assert_array_equal(np.asarray(c_k[:, :, 0]), np.asarray(c_1))
+
+
+@pytest.mark.parametrize("rank", [2, 4])
+def test_higher_rank_reconstructs_better(rank):
+    mat = _stack()
+    err = {}
+    for k in (1, rank):
+        rec = nnmf_decompress_k(*nnmf_compress_k(mat, k))
+        err[k] = float(jnp.linalg.norm(mat - rec) / jnp.linalg.norm(mat))
+    assert err[rank] < err[1], err
+
+
+def test_rows_with_mass_keep_positive_baseline():
+    """A low-traffic row (tiny but nonzero mass) must not reconstruct to
+    clamped zero: the rank-1 NNMF baseline guarantees it, a pure signed
+    sketch does not (the adapprox 1/eps blow-up this layout prevents)."""
+    mat = np.abs(np.random.default_rng(1).standard_normal((1, 32, 48))
+                 ).astype(np.float32)
+    mat[0, 5, :] *= 1e-4  # low-traffic row, mass > 0
+    rec = np.asarray(nnmf_decompress_k(*nnmf_compress_k(jnp.asarray(mat), 2)))
+    rec = np.maximum(rec, 0.0)  # the consumers' clamp
+    assert rec[0, 5, :].max() > 0.0
+
+
+def test_compress_k_rejects_unbatched():
+    with pytest.raises(ValueError, match="stack"):
+        nnmf_compress_k(jnp.zeros((4, 4)), 2)
+
+
+# ---------------------------------------------------------------------------
+# plan / bucket-key plumbing
+# ---------------------------------------------------------------------------
+
+def test_bucket_key_rank_suffix():
+    shape = (48, 96)
+    p1 = smmf_planner(rank=1)(0, shape)
+    p2 = smmf_planner(rank=2)(0, shape)
+    assert p1.rank == 1 and p2.rank == 2
+    assert "xr" not in p1.bucket_key
+    assert p2.bucket_key == p1.bucket_key + "xr2"
+    # rank-k never takes the (rank-1-only) fused kernel
+    assert not smmf_planner(rank=2, use_kernel=True)(0, shape).kernel_ok
+    # different ranks never share a bucket
+    buckets = build_buckets([p1, p2], bucket=True)
+    assert len(buckets) == 2
+
+
+def test_rank1_plan_keys_unchanged_on_transformer_base():
+    """Acceptance: rank=1 plans produce byte-identical bucket keys for the
+    existing families (no ``xr`` suffix anywhere) on the real model."""
+    from repro.configs import smoke_config
+    from repro.launch import specs as S
+
+    psds = S.params_specs(smoke_config("transformer_base"))
+    for family, hp in (("smmf", {"decay_rate": -0.8}), ("adafactor", {})):
+        opt = build_optimizer(OptimizerSpec(family=family,
+                                            hyperparams={"lr": 1e-3, **hp}))
+        eng = opt.plan(psds)
+        for bk in eng.buckets:
+            assert "xr" not in bk.key, (family, bk.key)
+
+
+# ---------------------------------------------------------------------------
+# spec-hash relevance
+# ---------------------------------------------------------------------------
+
+def _adapprox_spec(rank):
+    return OptimizerSpec(family="adapprox",
+                         hyperparams={"lr": 1e-3, "rank": rank})
+
+
+def test_rank_is_spec_hash_relevant():
+    hashes = {r: _adapprox_spec(r).spec_hash() for r in (1, 2, 3)}
+    assert len(set(hashes.values())) == 3, hashes
+
+
+def test_mismatched_rank_restore_refused(tmp_path):
+    from repro.checkpoint import ckpt
+
+    spec2 = _adapprox_spec(2)
+    opt = build_optimizer(spec2)
+    params = {"w": jnp.asarray(
+        np.random.default_rng(0).standard_normal((48, 96)), jnp.float32)}
+    state = opt.init(params)
+    ckpt.save(tmp_path, 1, state, spec_hash=spec2.spec_hash())
+    with pytest.raises(ValueError, match="spec hash mismatch"):
+        ckpt.restore(tmp_path, jax.eval_shape(lambda: state),
+                     spec_hash=_adapprox_spec(3).spec_hash())

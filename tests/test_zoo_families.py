@@ -1,0 +1,206 @@
+"""The optimizer zoo: adapprox (rank-k), hfac, and the AdaPM recipe.
+
+Three additions that ride the existing leaf-plan engine unchanged:
+``adapprox`` (rank-k second-moment factors + full-size momentum on the
+square-matricized plan), ``hfac`` (factor-level EMAs, additive momentum
+fit, no sign matrix), and AdaPM-style partial momentum — which is not a
+family at all but one ``beta1=None`` partition rule on ``smmf``
+(``examples/adapm_recipe.py``). Covered: registry + validation, state
+layout, descent on a toy objective, quantized state, checkpointing, and
+mesh sharding of the new rank-k slot shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh
+
+from conftest import spec_opt
+from repro.optim import OptimizerSpec, Partition, build_optimizer
+from repro.optim.base import apply_updates
+from repro.optim.families import get_family
+from repro.optim.qstate import QTensor
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.standard_normal((48, 96)), jnp.float32),
+            "w2": jnp.asarray(rng.standard_normal((32, 32)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((96,)) * 1e-3, jnp.float32)}
+
+
+def _quadratic_descent(opt, steps=50, seed=0):
+    rng = np.random.default_rng(seed)
+    tgt = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), jnp.float32),
+        _params())
+
+    def loss_fn(p):
+        return sum(jnp.mean((p[k] - tgt[k]) ** 2) for k in p)
+
+    params = jax.tree.map(jnp.zeros_like, tgt)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    first = None
+    for _ in range(steps):
+        params, state, l = step(params, state)
+        first = float(l) if first is None else first
+    return first, float(l), state
+
+
+# ---------------------------------------------------------------------------
+# registry + validation
+# ---------------------------------------------------------------------------
+
+def test_zoo_families_registered():
+    for name in ("adapprox", "hfac"):
+        fam = get_family(name)
+        assert fam.name == name and fam.quant_slots is not None
+
+
+@pytest.mark.parametrize("bad", [0, -1, 1.5, True, "2"])
+def test_adapprox_rank_validation(bad):
+    with pytest.raises(ValueError, match="rank"):
+        build_optimizer(OptimizerSpec(
+            family="adapprox", hyperparams={"lr": 1e-3, "rank": bad}))
+
+
+def test_hfac_validation():
+    with pytest.raises(ValueError, match="beta1"):
+        build_optimizer(OptimizerSpec(
+            family="hfac", hyperparams={"lr": 1e-3, "beta1": 1.5}))
+
+
+# ---------------------------------------------------------------------------
+# state layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rank", [1, 2, 4])
+def test_adapprox_state_shapes(rank):
+    opt = spec_opt("adapprox", 1e-3, rank=rank)
+    state = jax.eval_shape(opt.init, _params())
+    fac_slots = [s for bkstate in state.factors.values() for s in bkstate
+                 if len(s.shape) == 3 and s.shape[-1] == rank]
+    # both matrices factorize; R_v and C_v carry the trailing rank axis
+    assert len(fac_slots) >= 2
+    full_m = [s for bkstate in state.factors.values() for s in bkstate
+              if len(s.shape) == 3 and s.shape[-1] != rank]
+    assert full_m, "full-size momentum slot missing"
+
+
+def test_adapprox_momentum_free_drops_full_slot():
+    opt = spec_opt("adapprox", 1e-3, rank=2, beta1=None)
+    state = jax.eval_shape(opt.init, _params())
+    for bkstate in state.factors.values():
+        for s in bkstate:
+            if len(s.shape) == 3:
+                assert s.shape[-1] == 2, s.shape  # factors only
+
+
+def test_hfac_state_is_four_factor_vectors():
+    opt = spec_opt("hfac", 1e-3)
+    state = jax.eval_shape(opt.init, _params())
+    for key, bkstate in state.factors.items():
+        if key.startswith("fac:"):
+            assert len(bkstate) == 4
+            assert all(len(s.shape) == 2 for s in bkstate), key
+
+
+# ---------------------------------------------------------------------------
+# descent + quantized state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam,hp", [
+    ("adapprox", {"rank": 1}),
+    ("adapprox", {"rank": 2}),
+    ("hfac", {}),
+], ids=["adapprox_r1", "adapprox_r2", "hfac"])
+def test_zoo_descends_on_quadratic(fam, hp):
+    first, last, _ = _quadratic_descent(spec_opt(fam, 1e-2, **hp))
+    assert np.isfinite(last) and last < 0.5 * first, (first, last)
+
+
+@pytest.mark.parametrize("fam,hp", [
+    ("adapprox", {"rank": 2}),
+    ("hfac", {}),
+], ids=["adapprox", "hfac"])
+def test_zoo_quantized_state_runs_and_stores_qtensors(fam, hp):
+    first, last, state = _quadratic_descent(
+        spec_opt(fam, 1e-2, quant="int8", **hp))
+    assert np.isfinite(last) and last < first
+    qts = [s for bkstate in state.factors.values() for s in bkstate
+           if isinstance(s, QTensor)]
+    assert qts, "no quantized slots in state"
+    assert all(q.q.dtype.itemsize == 1 for q in qts)
+
+
+def test_adapm_recipe_partition_drops_momentum_slots():
+    """The shipped AdaPM recipe layout: the matched group holds the
+    momentum-free 2-slot state, the rest the full 5-slot state."""
+    opt = build_optimizer(OptimizerSpec(
+        family="smmf", hyperparams={"lr": 1e-3},
+        partitions=(Partition(name="nomom", match=r"^w",
+                              hyperparams={"beta1": None}),)))
+    state = jax.eval_shape(opt.init, _params())
+    by_group = {k: len(v) for k, v in state.factors.items()
+                if "fac:" in k}
+    nomom = {k: n for k, n in by_group.items() if k.startswith("nomom")}
+    assert nomom and all(n == 2 for n in nomom.values()), by_group
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + sharding
+# ---------------------------------------------------------------------------
+
+def test_zoo_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import ckpt
+
+    spec = OptimizerSpec(family="adapprox",
+                         hyperparams={"lr": 1e-3, "rank": 2, "quant": "int8"})
+    opt = build_optimizer(spec)
+    _, _, state = _quadratic_descent(opt, steps=3)
+    ckpt.save(tmp_path, 3, state, spec_hash=spec.spec_hash())
+    restored, manifest = ckpt.restore(tmp_path, jax.eval_shape(lambda: state),
+                                      spec_hash=spec.spec_hash())
+    assert manifest["spec_hash"] == spec.spec_hash()
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(
+            a.view(np.uint8) if a.dtype.itemsize == 1 else a,
+            b.view(np.uint8) if b.dtype.itemsize == 1 else b)
+
+
+@pytest.mark.parametrize("fam,hp", [
+    ("adapprox", {"rank": 2}),
+    ("adapprox", {"rank": 2, "quant": "int8"}),
+    ("hfac", {}),
+    ("hfac", {"quant": "int8"}),
+], ids=["adapprox", "adapprox_int8", "hfac", "hfac_int8"])
+def test_zoo_state_shardings_legal(fam, hp):
+    """Every zoo state leaf — including the 3-D rank-k factor slots and
+    their per-column scale rows — gets a legal mesh placement."""
+    from repro.configs import get_config
+    from repro.distributed import rules
+    from repro.launch import specs as S
+
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
+    cfg = get_config("transformer_base")
+    psds = S.params_specs(cfg)
+    opt = spec_opt(fam, 1e-3, **hp)
+    sh = rules.opt_state_shardings(mesh, cfg, psds, opt)
+    state_sds = jax.eval_shape(opt.init, psds)
+    n_sharded = 0
+    for leaf, s in zip(jax.tree.leaves(state_sds), jax.tree.leaves(sh)):
+        for dim, want in zip(leaf.shape, tuple(s.spec) + (None,) * 8):
+            if want is None:
+                continue
+            n_sharded += 1
+            assert dim % rules._axsize(mesh, want) == 0, (leaf.shape, s.spec)
+    assert n_sharded > 0  # the factored slots actually shard

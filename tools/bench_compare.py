@@ -65,6 +65,10 @@ SERVE_SPEEDUP_MIN = 2.0
 TRANSPORT_RANK1_MAX = 0.35
 TRANSPORT_INT8_MAX = 0.30
 TRANSPORT_PARITY_TOL = 0.005
+# fully-quantized Adafactor/CAME (momentum slot on blockwise sub-row
+# scales): int8 per-device bytes as a fraction of the family's f32 row —
+# mirrors MOMENTUM_QUANT_ACCEPT_FRACTION in benchmarks/memory_table.py
+MOMENTUM_QUANT_MAX = 0.30
 
 
 def _load(d: Path, name: str) -> dict | None:
@@ -158,6 +162,38 @@ def _check_offload_memory(cand: dict, fails: list[str]) -> None:
                 f"offload memory row {key}: device bytes "
                 f"{row['per_device_device_bytes']} not strictly below "
                 f"device-resident baseline {dev_base[key]}")
+
+
+def _check_zoo_invariants(cand: dict, fails: list[str]) -> None:
+    """Hard invariants on the candidate BENCH_opt_memory.json alone (the
+    byte math is analytic, so no baseline is needed):
+
+    * per arch, ``adapprox`` state bytes < ``adam`` (full momentum plus
+      rank-k second-moment factors must beat two full moments) and
+      ``hfac`` < ``adafactor`` (four factor vectors beat factored-v plus a
+      full-size momentum slot);
+    * in the qstate grid, the fully-quantized Adafactor/CAME rows (momentum
+      slot on blockwise sub-row scales) hold <= MOMENTUM_QUANT_MAX of
+      their f32 twins per device.
+    """
+    for arch, row in cand.get("archs", {}).items():
+        for small, big in (("adapprox", "adam"), ("hfac", "adafactor")):
+            if small in row and big in row and not row[small] < row[big]:
+                fails.append(
+                    f"zoo memory invariant at archs/{arch}: {small} "
+                    f"{row[small]} not below {big} {row[big]}")
+    f32 = {}
+    for row in cand.get("qstate", []):
+        if row["variant"] in ("adafactor", "came"):
+            if row["quant"] == "f32":
+                f32[row["variant"]] = row["per_device"]
+            elif row["quant"] == "int8" and row["variant"] in f32:
+                frac = row["per_device"] / f32[row["variant"]]
+                if frac > MOMENTUM_QUANT_MAX:
+                    fails.append(
+                        f"momentum-quant invariant: {row['variant']} int8 "
+                        f"per-device bytes are {frac:.1%} of f32 "
+                        f"(max {MOMENTUM_QUANT_MAX:.0%})")
 
 
 def _check_serve_invariants(cand: dict, fails: list[str]) -> None:
@@ -265,6 +301,7 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
             _check_overlap_invariants(cand, fails)
         elif name == "BENCH_opt_memory.json":
             _check_offload_memory(cand, fails)
+            _check_zoo_invariants(cand, fails)
         elif name == "BENCH_transport.json":
             _check_transport_invariants(cand, fails)
         else:

@@ -77,7 +77,8 @@ def main() -> int:
     for arch in PAPER_IDS + ARCH_IDS:
         violations += _check(f"configs:{arch} default", default_optimizer_spec(arch))
         n += 1
-        for opt_name in ("smmf", "smmf_local", "adam", "adafactor"):
+        for opt_name in ("smmf", "smmf_local", "adam", "adafactor",
+                         "adapprox", "hfac"):
             spec = cell_optimizer_spec(get_config(arch), opt_name)
             violations += _check(f"dryrun:{arch}:{opt_name}", spec)
             n += 1
