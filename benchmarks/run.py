@@ -7,7 +7,9 @@ Emits the machine-readable perf trajectory alongside the printed tables:
 incl. frozen groups, the qstate quantized grid, and the host-offload
 device/host split), ``BENCH_step_time.json`` (per-optimizer
 ms/launches/boundary-transport bytes plus the ``--overlap``/``--offload``
-on/off grid), ``BENCH_transport.json`` (gradient-boundary bytes per
+on/off grid), ``BENCH_telemetry.json`` (the ``--telemetry`` in-jit
+counters' full-train-step overhead ratio + scalars/step, gated at
+1.1x), ``BENCH_transport.json`` (gradient-boundary bytes per
 transport mode + the compressed-vs-dense convergence parity), and
 ``BENCH_serve.json`` (paged-serving tokens/s and p50/p99 per-token
 latency vs the legacy slot-batcher on an open-loop trace) under
@@ -48,6 +50,9 @@ def main() -> None:
     from benchmarks import step_time
 
     step_time.main(json_path=json_dir / "BENCH_step_time.json")
+
+    _section("Telemetry overhead: full train step, --telemetry off vs on")
+    step_time.main_telemetry(json_path=json_dir / "BENCH_telemetry.json")
 
     if not args.fast:
         _section("Convergence, 5 optimizers + quantized parity (paper Figures 1-2)")

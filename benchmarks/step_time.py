@@ -32,6 +32,17 @@ round-tripping the host tier, next to the analytic device/host state-byte
 split and the offload transport per step. ``tools/bench_compare.py`` gates
 regressions on these rows (overlap-on must not be slower than overlap-off
 beyond tolerance, at equal memory).
+
+:func:`bench_telemetry` prices the in-jit telemetry knob
+(``--telemetry``, ``docs/observability.md``): a **full** bench-sized
+dense-LM train step (fwd+bwd+update — the denominator the 1.1x budget
+is defined against) with the collector off vs on, on the most heavily
+instrumented spec (int8 state + rank-1 transport), median over
+interleaved repeat rounds so CPU drift hits both variants equally.
+``benchmarks/run.py`` writes the record as ``BENCH_telemetry.json``
+(overhead ratio + events/step) and ``tools/bench_compare.py`` holds the
+ratio under its :data:`~tools.bench_compare.TELEMETRY_OVERHEAD_MAX`
+budget as a hard invariant on the candidate alone.
 """
 
 from __future__ import annotations
@@ -179,6 +190,85 @@ def bench_overlap(name: str, iters: int = 20, schedule=None, offload=None):
         params, state = step(params, state, grads)
     jax.block_until_ready(params)
     return (time.perf_counter() - t0) / iters * 1e3, split, transport
+
+
+def bench_telemetry(iters: int = 3, rounds: int = 6) -> dict:
+    """Full-train-step telemetry overhead: off vs on, interleaved rounds.
+
+    Builds a bench-sized dense LM train step (fwd+bwd+update — the
+    compute profile the 1.1x budget is defined against; the test-suite
+    smoke configs are too small for the collector's fixed per-step
+    reduction cost to amortize) on the maximally instrumented spec (smmf
+    int8 + rank-1 transport: update-RMS, clip-sat, requant-err, rt-err,
+    flush and NaN-guard counters all live) twice — ``telemetry=False``
+    and ``True`` — and times ``rounds`` alternating blocks of ``iters``
+    steps each, reporting the medians and their ratio plus the number of
+    telemetry scalars riding out per step.
+    """
+    from repro.data import SyntheticLMStream
+    from repro.launch.steps import make_train_step
+    from repro.models import init_lm
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig("telemetry-bench", "dense", 4, 256, 8, 1024, 1024,
+                      n_kv_heads=8, dtype="float32")
+    spec = OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-3, "decay_rate": -0.8, "quant": "int8",
+                     "transport": "rank1"})
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    opt = build_optimizer(spec, params)
+    batch = SyntheticLMStream(cfg, 8, 128, seed=0).batch(0)
+    state = opt.init(params)
+
+    steps = {tel: jax.jit(make_train_step(cfg, opt, telemetry=tel))
+             for tel in (False, True)}
+    events_per_step = 0
+    for tel, step in steps.items():  # compile both before any timing
+        _, _, metrics = step(params, state, batch)
+        jax.block_until_ready(metrics["loss"])
+        if tel:
+            events_per_step = len(metrics["telemetry"])
+
+    times: dict[bool, list[float]] = {False: [], True: []}
+    for _ in range(rounds):
+        for tel in (False, True):  # interleave so drift is shared
+            step = steps[tel]
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                p2, s2, metrics = step(params, state, batch)
+            jax.block_until_ready((p2, s2, metrics))
+            times[tel].append((time.perf_counter() - t0) / iters * 1e3)
+    off_ms = float(np.median(times[False]))
+    on_ms = float(np.median(times[True]))
+    return {
+        "arch": cfg.name,
+        "spec": {"family": "smmf", "quant": "int8", "transport": "rank1"},
+        "iters": iters,
+        "rounds": rounds,
+        "off_ms": off_ms,
+        "on_ms": on_ms,
+        "overhead_ratio": on_ms / off_ms,
+        "events_per_step": events_per_step,
+    }
+
+
+def main_telemetry(json_path: str | Path | None = None) -> dict:
+    """Print + optionally write the telemetry-overhead record
+    (``BENCH_telemetry.json``; gated by tools/bench_compare.py)."""
+    rec = bench_telemetry()
+    print(f"full train step ({rec['arch']}, smmf int8 + rank1 transport, "
+          f"fwd+bwd+update):")
+    print(f"  telemetry off: {rec['off_ms']:8.2f} ms/step")
+    print(f"  telemetry on:  {rec['on_ms']:8.2f} ms/step  "
+          f"({rec['overhead_ratio']:.3f}x, {rec['events_per_step']} "
+          f"scalars/step riding the metrics transfer)")
+    print("(budget: <= 1.10x — tools/bench_compare.py TELEMETRY_OVERHEAD_MAX)")
+    if json_path is not None:
+        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(json_path).write_text(json.dumps(rec, indent=1))
+        print(f"[step_time] wrote {json_path}")
+    return rec
 
 
 # (overlap, offload) grid for the overlapped-step section: the bench gate

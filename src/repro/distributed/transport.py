@@ -182,19 +182,35 @@ def _rank1_deliver(bucket: Bucket, gm: jnp.ndarray, step, flush_every: int,
 
 
 def compress_bucket(mode: str, bucket: Bucket, gm: jnp.ndarray, step,
-                    flush_every: int = DEFAULT_FLUSH_EVERY) -> jnp.ndarray:
+                    flush_every: int = DEFAULT_FLUSH_EVERY,
+                    telemetry=None) -> jnp.ndarray:
     """Round-trip one bucket's gathered gradient through the transport wire
     format. Stateless: the delivered array has ``gm``'s shape/dtype and is
     unbiased (int8) or flush-bounded (rank1); nothing is carried to the
-    next step."""
+    next step.
+
+    ``telemetry`` is an optional :class:`repro.obs.jit.TelemetryCollector`
+    — when set, the round-trip records ``transport/rt_err/<bucket key>``
+    (relative L2 error of delivered vs gathered gradient) and, for rank1,
+    adds this bucket's dense-flush indicator into ``transport/flush``. The
+    delivered gradient itself is identical with or without a collector.
+    """
     mode = check_mode(mode)
     if mode is None:
         return gm
     key = transport_key(step, bucket)
     if mode == "int8":
-        return _int8_deliver(bucket, gm, key)
-    return _rank1_deliver(bucket, gm, step, check_flush_every(flush_every),
-                          key)
+        out = _int8_deliver(bucket, gm, key)
+    else:
+        out = _rank1_deliver(bucket, gm, step, check_flush_every(flush_every),
+                             key)
+        if telemetry is not None:
+            telemetry.add("transport/flush", (step % flush_every) == 0)
+    if telemetry is not None:
+        from repro.obs.jit import rel_error
+
+        telemetry.record(f"transport/rt_err/{bucket.key}", rel_error(gm, out))
+    return out
 
 
 def int8_roundtrip(x: jnp.ndarray, key) -> jnp.ndarray:

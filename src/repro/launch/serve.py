@@ -63,6 +63,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--check", action="store_true",
                     help="assert greedy parity vs the solo dense f32 "
                          "reference for every request (implied by --smoke)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write serving telemetry here: events.jsonl "
+                         "(admission/prefill/decode/retire spans+events), "
+                         "trace.json (Perfetto/Chrome trace_event) and "
+                         "metrics.json (engine.metrics() snapshot: queue "
+                         "depth, page-pool utilization, TTFT/TPOT "
+                         "histograms, tokens/s); summarize with "
+                         "tools/metrics_report.py")
     return ap
 
 
@@ -114,6 +122,28 @@ def main() -> None:
     init = init_encdec if cfg.family == "encdec" else init_lm
     params = init(jax.random.PRNGKey(args.seed), cfg)
 
+    # structured events (repro.obs): launcher lines echo to stdout exactly
+    # as before; with --metrics-dir the engine's admission/prefill/decode/
+    # retire spans and the launcher events land in one events.jsonl
+    from pathlib import Path
+
+    from repro.obs import (
+        EventLog,
+        MetricsRegistry,
+        write_chrome_trace,
+        write_metrics,
+    )
+
+    registry = MetricsRegistry()
+    events_path = None
+    if args.metrics_dir:
+        events_path = Path(args.metrics_dir) / "events.jsonl"
+    ev = EventLog(tag=f"serve:{cfg.name}", path=events_path, registry=registry)
+    # the engine's own span/event stream: silent on stdout (per-request
+    # retire events would be noise), same registry + JSONL file
+    eng_events = EventLog(tag="serve", path=events_path, echo=False,
+                          registry=registry)
+
     if args.engine == "legacy":
         if cfg.family not in ("dense", "moe"):
             raise SystemExit(
@@ -129,7 +159,8 @@ def main() -> None:
                                max_len=args.max_len, page=args.page,
                                kv_quant=args.kv_quant,
                                use_kernel=args.use_kernel,
-                               prefill_budget=args.prefill_budget)
+                               prefill_budget=args.prefill_budget,
+                               registry=registry, events=eng_events)
         reqs = _requests(cfg, args)
     for r in reqs:
         eng.submit(r)
@@ -140,8 +171,10 @@ def main() -> None:
         steps += 1
     dt = time.time() - t0
     tokens = sum(len(r.out) for r in reqs)
-    print(f"[serve:{cfg.name}] {len(reqs)} requests, {tokens} tokens, "
-          f"{steps} decode steps, {dt:.2f}s ({tokens/max(dt,1e-9):.1f} tok/s)")
+    ev.event("run",
+             f"{len(reqs)} requests, {tokens} tokens, "
+             f"{steps} decode steps, {dt:.2f}s ({tokens/max(dt,1e-9):.1f} tok/s)",
+             requests=len(reqs), tokens=tokens, steps=steps, sec=dt)
     assert all(r.done for r in reqs)
 
     if (args.check or args.smoke) and args.engine == "paged" \
@@ -151,10 +184,25 @@ def main() -> None:
             assert r.out == ref, (
                 f"request {r.rid}: paged stream {r.out} != dense f32 "
                 f"reference {ref}")
-        print(f"[serve:{cfg.name}] parity OK: paged"
-              f"{'+' + args.kv_quant if args.kv_quant else ''}"
-              f"{'+kernel' if args.use_kernel else ''} greedy matches the "
-              f"dense f32 reference on all {len(reqs)} requests")
+        ev.event("parity",
+                 f"parity OK: paged"
+                 f"{'+' + args.kv_quant if args.kv_quant else ''}"
+                 f"{'+kernel' if args.use_kernel else ''} greedy matches the "
+                 f"dense f32 reference on all {len(reqs)} requests",
+                 requests=len(reqs))
+
+    if args.metrics_dir:
+        records = sorted(ev.records() + eng_events.records(),
+                         key=lambda r: r["t"])
+        trace = write_chrome_trace(records, Path(args.metrics_dir) / "trace.json")
+        snapshot = eng.metrics() if isinstance(eng, GenerationEngine) \
+            else registry.snapshot()
+        metrics = write_metrics(snapshot, Path(args.metrics_dir) / "metrics.json")
+        ev.event("metrics_dump",
+                 f"metrics written: {metrics}, trace: {trace}, "
+                 f"events: {events_path}")
+        ev.close()
+        eng_events.close()
 
 
 if __name__ == "__main__":

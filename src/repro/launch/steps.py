@@ -52,7 +52,8 @@ def optimizer_launch_stats(opt: GradientTransformation, params: PyTree) -> dict 
 
 
 def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: int = 1,
-                    overlap: bool = False, offload: str | None = None):
+                    overlap: bool = False, offload: str | None = None,
+                    telemetry: bool = False):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     The returned step is **donation-safe**: the non-finite-loss guard runs
@@ -76,6 +77,16 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
     one bucket ahead, park after re-encode. Both are execution-only knobs —
     spec-built (engine) optimizers honor them, plain transforms ignore the
     extras per the widened update protocol.
+
+    ``telemetry=True`` (execution-only, ``docs/observability.md``) builds a
+    fresh :class:`repro.obs.jit.TelemetryCollector` per trace, threads it
+    through ``opt.update``, and returns the collected in-jit numerics
+    scalars (per-bucket update-RMS, quant clip-saturation / requant error,
+    transport round-trip error / rank-1 flushes, plus the NaN-guard trip
+    indicator) as ``metrics["telemetry"]`` — riding the existing
+    device->host metrics transfer, no callbacks, and bitwise-identical
+    params/opt-state outputs when off (asserted in
+    ``tests/test_telemetry_step.py``).
     """
     loss_fn = loss_fn_for(cfg)
     from repro.optim.offload import check_mode
@@ -114,8 +125,17 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
         else:
             (_, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params, batch)
 
+        extras = dict(upd_extras)
+        col = None
+        if telemetry:
+            from repro.obs.jit import TelemetryCollector
+
+            # fresh collector per trace: the dict holds tracers of THIS
+            # trace, so it must be born inside the traced body
+            col = TelemetryCollector()
+            extras["telemetry"] = col
         updates, new_opt_state = opt.update(grads, opt_state, params,
-                                            **upd_extras)
+                                            **extras)
         new_params = apply_updates(params, updates)
         # in-jit divergence guard (paper Sec. 6 loss spikes): on a
         # non-finite loss keep the previous params/optimizer state. Done
@@ -124,6 +144,11 @@ def make_train_step(cfg: ModelConfig, opt: GradientTransformation, grad_accum: i
         new_params = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_params, params)
         new_opt_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
                                      new_opt_state, opt_state)
+        if col is not None:
+            col.record("train/nan_guard_trip",
+                       1.0 - ok.astype(jnp.float32))
+            metrics = dict(metrics)
+            metrics["telemetry"] = col.asdict()
         return new_params, new_opt_state, metrics
 
     return train_step

@@ -155,6 +155,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "without a host memory kind, e.g. CPU)")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable params/opt-state buffer donation (debug)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="collect in-jit numerics telemetry (per-bucket "
+                         "update-RMS, quant clip-saturation/requant error, "
+                         "transport round-trip error, NaN-guard trips) as "
+                         "extra step metrics — execution-only, bitwise-"
+                         "identical updates, <= 1.1x step time "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write structured telemetry here: events.jsonl "
+                         "(event/span log), trace.json (Perfetto/Chrome "
+                         "trace_event) and metrics.json (registry "
+                         "snapshot); summarize with tools/metrics_report.py")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -177,10 +189,24 @@ def main() -> None:
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     spec = spec_from_args(args, cfg.family)
     spec_hash = spec.spec_hash()
-    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
-          f"opt={spec.family}"
-          + (f"+{len(spec.partitions)} partitions" if spec.partitions else "")
-          + f" spec={spec_hash}")
+
+    # structured events (repro.obs): every status line below goes through
+    # the event log — echoed to stdout exactly as before, and additionally
+    # written to <metrics-dir>/events.jsonl when --metrics-dir is given
+    from repro.obs import EventLog, MetricsRegistry, write_chrome_trace, write_metrics
+
+    registry = MetricsRegistry()
+    events_path = None
+    if args.metrics_dir:
+        events_path = Path(args.metrics_dir) / "events.jsonl"
+    ev = EventLog(tag="train", path=events_path, registry=registry)
+    ev.event("config",
+             f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+             f"opt={spec.family}"
+             + (f"+{len(spec.partitions)} partitions" if spec.partitions else "")
+             + f" spec={spec_hash}",
+             arch=cfg.name, family=spec.family, spec_hash=spec_hash,
+             telemetry=bool(args.telemetry))
 
     key = jax.random.PRNGKey(args.seed)
     init = init_encdec if cfg.family == "encdec" else init_lm
@@ -204,28 +230,37 @@ def main() -> None:
         cold = offload_mod.cold_keys(engine, offload)
         mode_note = ("async pinned-host tier" if offload_mod.supported()
                      else "structural (backend has no host memory kind)")
-        print(f"[train] offload=cold: {len(cold)} cold buckets, "
-              f"device {split['device']/1e6:.3f}MB / host {split['host']/1e6:.3f}MB "
-              f"({mode_note})")
+        ev.event("offload",
+                 f"offload=cold: {len(cold)} cold buckets, "
+                 f"device {split['device']/1e6:.3f}MB / host {split['host']/1e6:.3f}MB "
+                 f"({mode_note})",
+                 cold_buckets=len(cold), device_bytes=split["device"],
+                 host_bytes=split["host"])
 
     from repro.utils.tree import tree_bytes
 
-    print(f"[train] param bytes {tree_bytes(params)/1e6:.2f}MB, "
-          f"optimizer state bytes {tree_bytes(opt_state)/1e6:.3f}MB")
+    ev.event("memory",
+             f"param bytes {tree_bytes(params)/1e6:.2f}MB, "
+             f"optimizer state bytes {tree_bytes(opt_state)/1e6:.3f}MB",
+             param_bytes=tree_bytes(params), opt_state_bytes=tree_bytes(opt_state))
     if spec.partitions:
         by_group = state_bytes_by_group(opt, params)
-        print("[train] state bytes by group: "
-              + ", ".join(f"{g}={b/1e6:.3f}MB" for g, b in sorted(by_group.items())))
+        ev.event("state_by_group",
+                 "state bytes by group: "
+                 + ", ".join(f"{g}={b/1e6:.3f}MB" for g, b in sorted(by_group.items())),
+                 **{g: b for g, b in sorted(by_group.items())})
 
     stats = optimizer_launch_stats(opt, params)
     if stats is not None:
-        print(f"[train] update engine: {stats['leaves']} leaves -> "
-              f"{stats['update_launches']} launches/step "
-              f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
-              f"{stats['kernel_buckets']} kernel, {stats['quantized_buckets']} "
-              f"quantized, {stats['transport_buckets']} transported, "
-              f"{stats['groups']} groups, "
-              f"{stats['frozen_leaves']} frozen)")
+        ev.event("engine",
+                 f"update engine: {stats['leaves']} leaves -> "
+                 f"{stats['update_launches']} launches/step "
+                 f"({stats['factored_buckets']} factored, {stats['dense_buckets']} dense, "
+                 f"{stats['kernel_buckets']} kernel, {stats['quantized_buckets']} "
+                 f"quantized, {stats['transport_buckets']} transported, "
+                 f"{stats['groups']} groups, "
+                 f"{stats['frozen_leaves']} frozen)",
+                 **stats)
     if args.use_kernel:
         # static half of the no-silent-fallback assertion: every factored
         # bucket must be planned onto the fused kernel path
@@ -242,31 +277,39 @@ def main() -> None:
 
     if args.overlap:
         sched = opt.plan(params).schedule("grad") if hasattr(opt, "plan") else None
-        print(f"[train] overlap: bucket updates interleaved with the backward "
-              f"(schedule {sched})")
+        ev.event("overlap",
+                 f"overlap: bucket updates interleaved with the backward "
+                 f"(schedule {sched})")
 
     stream = SyntheticLMStream(cfg, args.batch, args.seq, seed=args.seed)
     donate = () if args.no_donate else (0, 1)
     step_fn = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum,
-                                      overlap=args.overlap, offload=offload),
+                                      overlap=args.overlap, offload=offload,
+                                      telemetry=args.telemetry),
                       donate_argnums=donate)
     # AOT-compile against the real shapes so the donation contract can be
     # checked (jax.stages args_info + the executable's alias table) before
     # any step runs — the step must update params/opt state in place, not
     # re-allocate every moment buffer
-    lowered = step_fn.lower(params, opt_state, stream.batch(0))
-    compiled = lowered.compile()
+    with ev.span("train/compile"):
+        lowered = step_fn.lower(params, opt_state, stream.batch(0))
+        compiled = lowered.compile()
     if not args.no_donate:
         rep = assert_donation(lowered, compiled)
-        print(f"[train] donation verified: {rep['donated_args']}/{rep['total_args']} "
-              f"args donated, {rep['alias_bytes']/1e6:.2f}MB aliased in place "
-              f"of {rep['donated_bytes']/1e6:.2f}MB donated")
+        ev.event("donation",
+                 f"donation verified: {rep['donated_args']}/{rep['total_args']} "
+                 f"args donated, {rep['alias_bytes']/1e6:.2f}MB aliased in place "
+                 f"of {rep['donated_bytes']/1e6:.2f}MB donated",
+                 **rep)
+    loop_events = EventLog(tag="trainloop", path=events_path, registry=registry)
     loop = TrainLoop(
         compiled, params, opt_state, stream,
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir, log_every=10,
                         spec_hash=spec_hash),
         place_state=place_state,
+        registry=registry,
+        events=loop_events,
     )
     out = loop.run()
     if args.use_kernel:
@@ -276,9 +319,26 @@ def main() -> None:
         if issued == 0:
             raise RuntimeError("--use-kernel requested but no fused kernel "
                                "launch was traced (silent fallback)")
-        print(f"[train] fused kernel path verified: {issued} bucket launches traced")
-    print(f"[train] done: {out['final_step']} steps, "
-          f"last loss {out['history'][-1]['loss']:.4f}" if out["history"] else "[train] done")
+        ev.event("kernel",
+                 f"fused kernel path verified: {issued} bucket launches traced",
+                 launches=issued)
+    if out["history"]:
+        ev.event("done", f"done: {out['final_step']} steps, "
+                         f"last loss {out['history'][-1]['loss']:.4f}",
+                 final_step=out["final_step"], loss=out["history"][-1]["loss"])
+    else:
+        ev.event("done", "done", final_step=out["final_step"])
+    if args.metrics_dir:
+        records = sorted(ev.records() + loop_events.records(),
+                         key=lambda r: r["t"])
+        trace = write_chrome_trace(records, Path(args.metrics_dir) / "trace.json")
+        metrics = write_metrics(registry.snapshot(),
+                                Path(args.metrics_dir) / "metrics.json")
+        ev.event("metrics_dump",
+                 f"metrics written: {metrics}, trace: {trace}, "
+                 f"events: {events_path}")
+        ev.close()
+        loop_events.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,52 @@
+"""repro.obs: unified telemetry — in-jit counters, events/spans, metrics.
+
+Three layers (``docs/observability.md``):
+
+* :mod:`repro.obs.jit` — :class:`TelemetryCollector` + scalar reductions
+  for the opt-in ``telemetry=`` knob on the jitted train step (per-bucket
+  update-RMS, quant clip-saturation / requant error, transport round-trip
+  error / rank-1 flushes, NaN-guard trips) riding out as a metrics pytree.
+* :mod:`repro.obs.registry` / :mod:`repro.obs.trace` — host-side
+  :class:`MetricsRegistry` (counters / gauges / fixed-bucket histograms)
+  and :class:`EventLog` structured events with ``span()`` phase timing,
+  JSONL-backed.
+* :mod:`repro.obs.export` — JSONL <-> Chrome ``trace_event`` (Perfetto)
+  conversion and metrics snapshots, consumed by
+  ``tools/metrics_report.py``.
+
+Everything is stdlib + jax-only and strictly opt-in: with no collector,
+no log path, and echo left on, instrumented code behaves exactly as
+before (bitwise-identical step outputs, unchanged CLI output).
+"""
+
+from repro.obs.export import (
+    chrome_trace,
+    read_jsonl,
+    write_chrome_trace,
+    write_metrics,
+)
+from repro.obs.jit import TelemetryCollector, clip_saturation, rel_error, rms
+from repro.obs.registry import (
+    DEFAULT_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+)
+from repro.obs.trace import EventLog, NullEventLog
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "EventLog",
+    "Histogram",
+    "MetricsRegistry",
+    "NullEventLog",
+    "TelemetryCollector",
+    "chrome_trace",
+    "clip_saturation",
+    "get_registry",
+    "read_jsonl",
+    "rel_error",
+    "rms",
+    "write_chrome_trace",
+    "write_metrics",
+]

@@ -1,0 +1,77 @@
+"""Exporters: JSONL event logs -> Chrome trace_event / metrics dumps.
+
+``chrome_trace(records)`` converts :class:`~repro.obs.trace.EventLog`
+records into the Chrome ``trace_event`` JSON format (the subset Perfetto
+and ``chrome://tracing`` both load): spans become complete ``"X"`` slices
+with microsecond timestamps, instantaneous events become ``"i"`` instants.
+``write_chrome_trace`` / ``read_jsonl`` are the file-shaped halves used by
+``launch/{train,serve}.py --metrics-dir`` and ``tools/metrics_report.py``.
+
+Record-to-slice mapping (``docs/observability.md`` has the schema):
+
+* span ``{"t": s, "dur_ms": d, "name": n, ...}`` ->
+  ``{"ph": "X", "ts": s*1e6, "dur": d*1e3, "name": n, "args": {...}}``
+* event ``{"t": s, "name": n, ...}`` ->
+  ``{"ph": "i", "ts": s*1e6, "s": "p", "name": n, "args": {...}}``
+
+``pid``/``tid`` default to the record's ``pid``/``track`` fields when
+present (serving uses per-request tracks) and 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+_META_KEYS = ("t", "kind", "name", "dur_ms", "pid", "track")
+
+
+def chrome_trace(records: list[dict]) -> dict:
+    """Convert event-log records to a Chrome trace_event document."""
+    events = []
+    for rec in records:
+        args = {k: v for k, v in rec.items() if k not in _META_KEYS}
+        ts_us = float(rec.get("t", 0.0)) * 1e6
+        base = {
+            "name": rec.get("name", "?"),
+            "ts": ts_us,
+            "pid": int(rec.get("pid", 0)),
+            "tid": int(rec.get("track", 0)),
+            "args": args,
+        }
+        if rec.get("kind") == "span":
+            events.append({**base, "ph": "X",
+                           "dur": float(rec.get("dur_ms", 0.0)) * 1e3})
+        else:
+            events.append({**base, "ph": "i", "s": "p"})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(records: list[dict], path: str | os.PathLike) -> str:
+    """Write ``records`` as a Perfetto-loadable trace JSON; returns path."""
+    path = os.fspath(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(chrome_trace(records), f)
+    return path
+
+
+def read_jsonl(path: str | os.PathLike) -> list[dict]:
+    """Load an EventLog JSONL file back into records (skips blank lines)."""
+    out = []
+    with open(os.fspath(path)) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def write_metrics(snapshot: dict, path: str | os.PathLike) -> str:
+    """Dump a ``MetricsRegistry.snapshot()`` as pretty JSON; returns path."""
+    path = os.fspath(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

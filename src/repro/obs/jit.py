@@ -1,0 +1,100 @@
+"""In-jit telemetry: a trace-time collector + cheap scalar reductions.
+
+The hot-path half of the telemetry subsystem. A
+:class:`TelemetryCollector` is a plain Python dict filled **while
+tracing** a jitted step: instrumented call sites (``optim/spec.py``,
+``optim/qstate.py``, ``distributed/transport.py``, ``launch/steps.py``)
+call ``collector.record(name, scalar)`` with a traced f32 scalar, and the
+step returns ``collector.asdict()`` as one extra entry of its metrics
+pytree. The reductions ride the existing device->host metrics transfer —
+no host callbacks, no extra syncs, no effect on the update math.
+
+Strictly opt-in: every instrumented site takes ``telemetry=None`` and is
+a no-op (bitwise-identical output, asserted in
+``tests/test_telemetry_step.py``) when no collector is passed. The knob is
+execution-only — it is excluded from ``OptimizerSpec.spec_hash`` like
+``use_kernel``/``transport``, so flipping it never invalidates a
+checkpoint.
+
+Naming convention (``docs/observability.md``): '/'-separated paths,
+``<subsystem>/<metric>/<bucket key>[ / s<slot index>]``, e.g.
+``optim/update_rms/fac:(512, 512)x10``, ``qstate/clip_sat/fac:...x10/s1``,
+``transport/rt_err/fac:...x10``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class TelemetryCollector:
+    """Trace-time sink for scalar telemetry riding out of a jitted step.
+
+    Create a **fresh instance inside the traced function body** (one per
+    trace — reusing a collector across traces would leak tracers). Keys
+    must be unique per step; a duplicate means two call sites chose the
+    same name, which is a bug, not data to silently average.
+    """
+
+    def __init__(self):
+        self._vals: dict = {}
+
+    def record(self, name: str, value) -> None:
+        """Record one named f32 scalar (reduces anything array-shaped)."""
+        if name in self._vals:
+            raise ValueError(f"duplicate telemetry key {name!r}")
+        v = jnp.asarray(value)
+        if v.ndim:
+            v = jnp.mean(v)
+        self._vals[name] = v.astype(jnp.float32)
+
+    def add(self, name: str, value) -> None:
+        """Accumulate into a named scalar (for counters summed across call
+        sites, e.g. rank-1 flush count over buckets)."""
+        v = jnp.asarray(value)
+        if v.ndim:
+            v = jnp.sum(v)
+        v = v.astype(jnp.float32)
+        self._vals[name] = self._vals.get(name, jnp.float32(0)) + v
+
+    def asdict(self) -> dict:
+        """The collected {name: f32 scalar} dict — return this from the
+        jitted step as ``metrics["telemetry"]``."""
+        return dict(self._vals)
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._vals
+
+
+# -- reduction helpers (all O(numel) elementwise + one reduce, f32 scalar) --
+
+def rms(x) -> jnp.ndarray:
+    """Root-mean-square of ``x`` in f32."""
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.sqrt(jnp.mean(jnp.square(x)))
+
+
+def clip_saturation(q, qmax) -> jnp.ndarray:
+    """Fraction of quantized payload entries pinned at the clip boundary
+    (|q| >= qmax). Rising saturation means the quantizer's dynamic range no
+    longer covers the slot distribution — the leading indicator of the PR 5
+    linear-int8 divergence."""
+    q = jnp.asarray(q)
+    if jnp.issubdtype(q.dtype, jnp.integer):
+        mag = jnp.abs(q.astype(jnp.float32))
+    else:  # fp8 payloads compare in f32
+        mag = jnp.abs(q.astype(jnp.float32))
+    return jnp.mean((mag >= jnp.float32(qmax)).astype(jnp.float32))
+
+
+def rel_error(ref, approx) -> jnp.ndarray:
+    """Relative L2 error ||approx - ref|| / (||ref|| + eps) in f32 — the
+    requant / transport round-trip error measure."""
+    ref = jnp.asarray(ref, jnp.float32)
+    approx = jnp.asarray(approx, jnp.float32)
+    num = jnp.sqrt(jnp.sum(jnp.square(approx - ref)))
+    den = jnp.sqrt(jnp.sum(jnp.square(ref))) + jnp.float32(1e-30)
+    return num / den

@@ -1,0 +1,211 @@
+"""Process-local metrics registry: counters, gauges, fixed-bucket histograms.
+
+The host-side half of the telemetry subsystem (``docs/observability.md``).
+Everything here is plain Python on the host — metric updates happen at
+admission/retire/checkpoint boundaries and after each step's device_get,
+never inside a jitted function (the in-jit half lives in
+``repro.obs.jit`` and rides *out* of the step as an extra metrics pytree).
+
+Three instrument kinds, Prometheus-shaped but dependency-free:
+
+* **counter** — monotone float; ``inc(name, v)``. Straggler steps, NaN-skip
+  steps, admission deferrals, tokens emitted.
+* **gauge** — last-write-wins float; ``set(name, v)``. Queue depth,
+  page-pool utilization, per-step loss.
+* **histogram** — fixed bucket boundaries chosen at first observation
+  (:data:`DEFAULT_BUCKETS` or per-call); tracks per-bucket counts plus
+  exact ``count/sum/min/max`` so tests can check the recorded population
+  against independently-tracked samples (monotone consistency: ``min <=
+  sum/count <= max`` and quantiles are non-decreasing in ``q``).
+
+``snapshot()`` returns a plain-JSON dict (stable key order) — the thing
+``engine.metrics()`` and the ``--metrics-dir`` dumps expose; ``merge()``
+folds another registry's instruments in (used by run summarizers, never on
+a hot path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+
+# Default histogram boundaries: exponential ms-scale grid covering sub-ms
+# jit dispatch up to multi-minute stragglers. Fixed (not adaptive) so two
+# runs' histograms are mergeable bucket-for-bucket.
+DEFAULT_BUCKETS = (
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+    250.0, 500.0, 1000.0, 2500.0, 5000.0, 10000.0, 30000.0, 120000.0,
+)
+
+
+@dataclasses.dataclass
+class Histogram:
+    """Fixed-boundary histogram with exact count/sum/min/max sidecars.
+
+    ``boundaries`` are upper-inclusive bucket edges; observations above the
+    last edge land in the implicit overflow bucket (``counts`` has
+    ``len(boundaries) + 1`` entries).
+    """
+
+    boundaries: tuple[float, ...] = DEFAULT_BUCKETS
+    counts: list[int] = None
+    count: int = 0
+    sum: float = 0.0
+    min: float = math.inf
+    max: float = -math.inf
+
+    def __post_init__(self):
+        self.boundaries = tuple(float(b) for b in self.boundaries)
+        if list(self.boundaries) != sorted(set(self.boundaries)):
+            raise ValueError(f"histogram boundaries must be strictly "
+                             f"increasing, got {self.boundaries}")
+        if self.counts is None:
+            self.counts = [0] * (len(self.boundaries) + 1)
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        i = 0
+        for b in self.boundaries:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def quantile(self, q: float) -> float:
+        """Bucket-resolution quantile estimate (upper edge of the bucket the
+        q-th observation falls in; exact ``max`` for the overflow bucket).
+        Returns NaN on an empty histogram."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile wants q in [0, 1], got {q}")
+        if self.count == 0:
+            return math.nan
+        rank = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                if i < len(self.boundaries):
+                    return self.boundaries[i]
+                return self.max
+        return self.max
+
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def to_dict(self) -> dict:
+        return {
+            "boundaries": list(self.boundaries),
+            "counts": list(self.counts),
+            "count": self.count,
+            "sum": self.sum,
+            "min": None if self.count == 0 else self.min,
+            "max": None if self.count == 0 else self.max,
+        }
+
+
+class MetricsRegistry:
+    """One process-local bag of named counters/gauges/histograms.
+
+    Thread-safe (a serving engine's caller may poll ``snapshot()`` from
+    another thread); by convention metric names are '/'-separated paths
+    with a subsystem prefix (``train/...``, ``serve/...``, ``optim/...``).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    # -- instruments ---------------------------------------------------------
+
+    def inc(self, name: str, value: float = 1.0) -> float:
+        """Add ``value`` (>= 0) to counter ``name``; returns the new total."""
+        v = float(value)
+        if v < 0:
+            raise ValueError(f"counter {name!r}: negative increment {v}")
+        with self._lock:
+            total = self._counters.get(name, 0.0) + v
+            self._counters[name] = total
+        return total
+
+    def set(self, name: str, value: float) -> None:
+        """Set gauge ``name`` to ``value`` (last write wins)."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float,
+                buckets: tuple[float, ...] | None = None) -> None:
+        """Record one observation into histogram ``name`` (created on first
+        use with ``buckets`` or :data:`DEFAULT_BUCKETS`)."""
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = Histogram(buckets if buckets is not None else DEFAULT_BUCKETS)
+                self._histograms[name] = h
+            h.observe(value)
+
+    # -- reads ---------------------------------------------------------------
+
+    def counter(self, name: str) -> float:
+        return self._counters.get(name, 0.0)
+
+    def gauge(self, name: str) -> float | None:
+        return self._gauges.get(name)
+
+    def histogram(self, name: str) -> Histogram | None:
+        return self._histograms.get(name)
+
+    def snapshot(self) -> dict:
+        """Plain-JSON view of every instrument (sorted keys, stable)."""
+        with self._lock:
+            return {
+                "counters": dict(sorted(self._counters.items())),
+                "gauges": dict(sorted(self._gauges.items())),
+                "histograms": {k: h.to_dict()
+                               for k, h in sorted(self._histograms.items())},
+            }
+
+    def merge(self, other: "MetricsRegistry") -> None:
+        """Fold ``other`` in: counters add, gauges last-write-win, same-name
+        histograms must share boundaries and merge bucket-for-bucket."""
+        snap = other.snapshot()
+        for k, v in snap["counters"].items():
+            self.inc(k, v)
+        for k, v in snap["gauges"].items():
+            self.set(k, v)
+        with self._lock:
+            for k, hd in snap["histograms"].items():
+                h = self._histograms.setdefault(
+                    k, Histogram(tuple(hd["boundaries"])))
+                if list(h.boundaries) != hd["boundaries"]:
+                    raise ValueError(
+                        f"histogram {k!r}: boundary mismatch on merge")
+                h.counts = [a + b for a, b in zip(h.counts, hd["counts"])]
+                h.count += hd["count"]
+                h.sum += hd["sum"]
+                if hd["count"]:
+                    h.min = min(h.min, hd["min"])
+                    h.max = max(h.max, hd["max"])
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+# Process-default registry: the launchers' structured events and the train
+# loop bind to this unless handed an explicit registry (tests construct
+# their own to stay isolated).
+_DEFAULT = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-default registry (module-level singleton)."""
+    return _DEFAULT

@@ -1,0 +1,159 @@
+"""Structured events and span tracing for train/serve phases.
+
+The :class:`EventLog` replaces bare ``print`` status lines in the launchers
+with structured records that are simultaneously (a) echoed to stdout in the
+familiar ``[train] ...`` form so CLI behavior is unchanged, (b) appended to
+a JSONL file when a ``--metrics-dir`` is given, and (c) kept in a bounded
+in-memory ring for tests and the run summarizer.
+
+Two record kinds share one schema (``docs/observability.md``):
+
+* **event** — instantaneous: ``{"t": <unix s>, "kind": "event",
+  "name": ..., **fields}``.
+* **span** — a phase with a duration: emitted once at exit as
+  ``{"t": <start>, "kind": "span", "name": ..., "dur_ms": ..., **fields}``.
+  Spans are what the Chrome-trace exporter (``repro.obs.export``) turns
+  into Perfetto ``X`` slices; they also feed ``<name>_ms`` histograms in
+  the attached :class:`~repro.obs.registry.MetricsRegistry` so phase
+  timings are queryable without parsing the log.
+
+Timestamps come from ``time.time()`` (wall clock, JSON-friendly) plus a
+``time.perf_counter()`` base for durations; nothing here touches JAX.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import json
+import os
+import threading
+import time
+
+from .registry import MetricsRegistry, get_registry
+
+# Span-duration histograms use the registry's default ms grid; ring size
+# bounds memory for long serve runs that never dump to disk.
+_RING_MAX = 4096
+
+
+class EventLog:
+    """Structured event sink: stdout echo + optional JSONL file + ring.
+
+    ``tag`` is the stdout prefix (``[train]``, ``[serve]``); ``path`` the
+    JSONL file (appended, created eagerly so an interrupted run still
+    leaves a valid log); ``registry`` receives ``<span>_ms`` histogram
+    observations and an ``obs/events`` counter.
+    """
+
+    def __init__(self, tag: str = "obs", path: str | os.PathLike | None = None,
+                 echo: bool = True,
+                 registry: MetricsRegistry | None = None):
+        self.tag = tag
+        self.echo = echo
+        self.registry = registry if registry is not None else get_registry()
+        self._lock = threading.Lock()
+        self._ring: collections.deque = collections.deque(maxlen=_RING_MAX)
+        self._path = os.fspath(path) if path is not None else None
+        self._fh = None
+        if self._path is not None:
+            os.makedirs(os.path.dirname(self._path) or ".", exist_ok=True)
+            self._fh = open(self._path, "a", buffering=1)
+
+    # -- core ---------------------------------------------------------------
+
+    def _write(self, rec: dict) -> None:
+        with self._lock:
+            self._ring.append(rec)
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec, sort_keys=True,
+                                          default=_jsonable) + "\n")
+        self.registry.inc("obs/events")
+
+    def event(self, name: str, message: str | None = None, **fields) -> None:
+        """Emit an instantaneous event; ``message`` (or the fields) echoes
+        to stdout as ``[tag] message``."""
+        rec = {"t": time.time(), "kind": "event", "name": name, **fields}
+        if message is not None:
+            rec["message"] = message
+        self._write(rec)
+        if self.echo:
+            body = message if message is not None else _kv(fields)
+            print(f"[{self.tag}] {body}" if body else f"[{self.tag}] {name}",
+                  flush=True)
+
+    @contextlib.contextmanager
+    def span(self, name: str, echo: bool = False, **fields):
+        """Time a phase; yields a dict whose entries are folded into the
+        span record at exit (annotate mid-phase: ``s["tokens"] = n``)."""
+        t0_wall = time.time()
+        t0 = time.perf_counter()
+        extra: dict = {}
+        try:
+            yield extra
+        finally:
+            dur_ms = (time.perf_counter() - t0) * 1e3
+            rec = {"t": t0_wall, "kind": "span", "name": name,
+                   "dur_ms": dur_ms, **fields, **extra}
+            self._write(rec)
+            self.registry.observe(f"{name}_ms", dur_ms)
+            if echo and self.echo:
+                print(f"[{self.tag}] {name}: {dur_ms:.1f} ms" +
+                      (f" {_kv({**fields, **extra})}" if fields or extra else ""),
+                      flush=True)
+
+    # -- reads / lifecycle --------------------------------------------------
+
+    def records(self) -> list[dict]:
+        with self._lock:
+            return list(self._ring)
+
+    @property
+    def path(self) -> str | None:
+        return self._path
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def _kv(fields: dict) -> str:
+    return " ".join(f"{k}={_fmt(v)}" for k, v in fields.items())
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return v
+
+
+def _jsonable(v):
+    # numpy / jax scalars arrive from device_get'd metrics; coerce rather
+    # than crash the log write.
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return repr(v)
+
+
+class NullEventLog(EventLog):
+    """An EventLog that drops everything (no echo, no file, no registry
+    traffic) — the default for library call sites so telemetry stays
+    strictly opt-in."""
+
+    def __init__(self):
+        super().__init__(tag="null", path=None, echo=False,
+                        registry=MetricsRegistry())
+
+    def _write(self, rec: dict) -> None:  # keep the ring for debuggability
+        with self._lock:
+            self._ring.append(rec)

@@ -389,7 +389,7 @@ register(Family(
         growth_rate=0.999, vector_reshape=True, weight_decay_mode="adamw",
         blocks=1, use_kernel=False, kernel_block=DEFAULT_KERNEL_BLOCK,
         interpret=None, bucket=True, fuse_dense=True, quant=None,
-        transport=None, transport_flush_every=8,
+        transport=None, transport_flush_every=8, telemetry=True,
     ),
     make_plan_fn=_smmf_plan_fn,
     init_bucket=_smmf_init,
@@ -478,7 +478,7 @@ register(Family(
     defaults=dict(
         lr=1e-3, beta1=0.9, decay_rate=-0.8, eps1=1e-30, eps2=1e-3,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
-        quant=None, transport=None, transport_flush_every=8,
+        quant=None, transport=None, transport_flush_every=8, telemetry=True,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_adafactor_init,
@@ -565,7 +565,7 @@ _CAME = register(Family(
     defaults=dict(
         lr=1e-3, beta1=0.9, beta2=0.999, beta3=0.9999, eps1=1e-30, eps2=1e-16,
         clip_threshold=1.0, weight_decay=0.0, bucket=True, fuse_dense=False,
-        quant=None, transport=None, transport_flush_every=8,
+        quant=None, transport=None, transport_flush_every=8, telemetry=True,
     ),
     make_plan_fn=lambda hp: lasttwo_planner(),
     init_bucket=_came_init,
@@ -723,7 +723,7 @@ register(Family(
         lr=1e-3, beta1=0.9, eps=1e-8, weight_decay=0.0, decay_rate=-0.5,
         growth_rate=0.999, rank=2, vector_reshape=True,
         weight_decay_mode="adamw", blocks=1, bucket=True, fuse_dense=True,
-        quant=None, transport=None, transport_flush_every=8,
+        quant=None, transport=None, transport_flush_every=8, telemetry=True,
     ),
     make_plan_fn=_adapprox_plan_fn,
     init_bucket=_adapprox_init,
@@ -850,7 +850,7 @@ register(Family(
         lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
         vector_reshape=True, weight_decay_mode="adamw", blocks=1,
         bucket=True, fuse_dense=True, quant=None, transport=None,
-        transport_flush_every=8,
+        transport_flush_every=8, telemetry=True,
     ),
     make_plan_fn=_hfac_plan_fn,
     init_bucket=_hfac_init,
@@ -901,7 +901,8 @@ def _sm3_update(ctx: UpdateCtx, bk: Bucket, g: jnp.ndarray, fac):
 register(Family(
     name="sm3",
     defaults=dict(lr=1e-3, beta1=0.9, eps=1e-30, weight_decay=0.0, bucket=True,
-                  fuse_dense=False, transport=None, transport_flush_every=8),
+                  fuse_dense=False, transport=None, transport_flush_every=8,
+                  telemetry=True),
     make_plan_fn=lambda hp: axiscover_planner(),
     init_bucket=_sm3_init,
     update_bucket=_sm3_update,
@@ -942,6 +943,7 @@ register(Family(
         lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
         bias_correction=True, weight_decay_mode="adam", bucket=True,
         fuse_dense=True, quant=None, transport=None, transport_flush_every=8,
+        telemetry=True,
     ),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_adam_init,
@@ -979,7 +981,7 @@ register(Family(
     name="sgd",
     defaults=dict(lr=1e-2, momentum=0.0, weight_decay=0.0, bucket=True,
                   fuse_dense=True, quant=None, transport=None,
-                  transport_flush_every=8),
+                  transport_flush_every=8, telemetry=True),
     make_plan_fn=lambda hp: _dense_planner(),
     init_bucket=_sgd_init,
     update_bucket=_sgd_update,

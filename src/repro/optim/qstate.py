@@ -194,10 +194,21 @@ def decode(slots, bucket: Bucket, hp: dict, state):
     )
 
 
-def encode(slots, bucket: Bucket, hp: dict, state, key):
+def encode(slots, bucket: Bucket, hp: dict, state, key, telemetry=None):
     """Re-quantize a bucket's fresh f32 state with stochastic rounding (the
     scatter-side half). Payloads and scale rows are re-pinned to the same
-    sharding kinds as their f32 twins so donation aliases in place."""
+    sharding kinds as their f32 twins so donation aliases in place.
+
+    ``telemetry`` is an optional :class:`repro.obs.jit.TelemetryCollector`;
+    when set, each quantized slot records its clip-saturation fraction
+    (payload entries pinned at the code boundary —
+    ``qstate/clip_sat/<bucket key>/s<i>``) and its requantization error
+    (relative L2 of the dequantized payload vs the fresh f32 slot —
+    ``qstate/requant_err/<bucket key>/s<i>``). These are the counters that
+    spike when a slot's dynamic range outruns its code (the PR 5
+    linear-int8 denominator failure) — see ``docs/observability.md``.
+    Encoded output is identical with or without a collector.
+    """
     mode = quant_mode(hp)
     out = []
     for i, (s, x) in enumerate(zip(slots, state, strict=True)):
@@ -205,6 +216,13 @@ def encode(slots, bucket: Bucket, hp: dict, state, key):
             out.append(x)
             continue
         qt = _quantize_slot(x, bucket, s, mode, key=jax.random.fold_in(key, i))
+        if telemetry is not None:
+            from repro.obs.jit import clip_saturation, rel_error
+
+            telemetry.record(f"qstate/clip_sat/{bucket.key}/s{i}",
+                             clip_saturation(qt.q, Q.qmax(mode)))
+            telemetry.record(f"qstate/requant_err/{bucket.key}/s{i}",
+                             rel_error(x, dequantize_slot(qt, bucket, s, mode)))
         q, scale = qt
         if s.kind:
             q = constrain(q, s.kind, meta=bucket.state_axes)

@@ -43,9 +43,9 @@ counter per family) — checkpoint-resume, donation, and every group's
 schedule read the same step source; passing ``step=`` explicitly overrides
 it (e.g. to re-line a restored state onto a trusted external counter).
 
-``schedule``/``offload`` are **execution-only** knobs (never part of the
-spec, so :meth:`OptimizerSpec.spec_hash` and the state layout are
-untouched). ``schedule="grad"`` re-emits the per-bucket updates in
+``schedule``/``offload``/``telemetry`` are **execution-only** knobs (never
+part of the spec, so :meth:`OptimizerSpec.spec_hash` and the state layout
+are untouched). ``schedule="grad"`` re-emits the per-bucket updates in
 reverse-mode gradient-availability order and chains them with
 ``lax.optimization_barrier`` links, so XLA's latency-hiding scheduler can
 interleave each bucket's gather→update→scatter with the still-running
@@ -55,7 +55,12 @@ identities and every bucket's math is self-contained).
 tier (``repro.optim.offload``): each cold bucket's subtree is prefetched
 host→device one schedule position ahead (double-buffered) and parked back
 after its re-encode — one logical state, donation- and
-checkpoint-transparent.
+checkpoint-transparent. ``telemetry=`` accepts a
+:class:`repro.obs.jit.TelemetryCollector`: the update loop then records
+per-bucket update-RMS, quant clip-saturation / requant error, and
+transport round-trip error as f32 scalars the caller returns with its
+step metrics — bitwise-identical updates either way, and mutable per
+group via the ``telemetry`` hyperparam (default True, hash-excluded).
 
 Specs round-trip through :meth:`OptimizerSpec.to_json` /
 :meth:`OptimizerSpec.from_json`; :meth:`OptimizerSpec.spec_hash` is stored
@@ -266,9 +271,11 @@ class OptimizerSpec:
         """
         # transport is execution-only too: it round-trips the *gradient*
         # through the wire format inside the step and carries zero state,
-        # so toggling it never changes the checkpoint layout
+        # so toggling it never changes the checkpoint layout; telemetry is
+        # pure read-side scalar reductions (repro.obs.jit) with no state
+        # and no effect on the update math
         skip = ("use_kernel", "kernel_block", "interpret", "lr",
-                "transport", "transport_flush_every")
+                "transport", "transport_flush_every", "telemetry")
         d = dataclasses.asdict(self)
         d.pop("schedule", None)
 
@@ -566,7 +573,7 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
         return EngineState(jnp.zeros((), jnp.int32), factors)
 
     def update(grads, state, params, *, step=None, schedule=None,
-               offload=None, **extras):
+               offload=None, telemetry=None, **extras):
         del extras  # forward-compat: callers may thread e.g. loss scales
         from repro.optim import offload as O
 
@@ -619,6 +626,11 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             bk = engine.buckets[pos]
             g = _group_of(bk)
             ctx = F.UpdateCtx(step=new_step, t=t, hp=g.hp)
+            # telemetry (repro.obs.jit): execution-only collector of scalar
+            # reductions riding out with the step metrics; the per-group
+            # "telemetry" hyperparam (spec_hash-excluded) can mute a group
+            tel = telemetry if (telemetry is not None
+                                and g.hp.get("telemetry", True)) else None
             st = fetched.pop(bk.key) if bk.key in cold \
                 else state.factors[bk.key]
             _prefetch(j + 1)
@@ -630,7 +642,8 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
             # seeded SR, so there is no EF buffer and nothing to checkpoint
             if bk.transport:
                 gm = _T.compress_bucket(bk.transport, bk, gm, new_step,
-                                        bk.transport_flush_every)
+                                        bk.transport_flush_every,
+                                        telemetry=tel)
             # qstate codec (repro.optim.qstate): dequantize stored slots at
             # gather, run the family math in f32, re-quantize with
             # stochastic rounding at scatter (kernel_deq slots skip the
@@ -640,9 +653,14 @@ def build_optimizer(spec: OptimizerSpec, params: PyTree | None = None,
                 slots = g.entry.quant_slots(bk, g.hp)
                 st = qstate.decode(slots, bk, g.hp, st)
             u, new_st = g.entry.update_bucket(ctx, bk, gm, st)
+            if tel is not None:
+                from repro.obs.jit import rms as _rms
+
+                tel.record(f"optim/update_rms/{bk.key}", _rms(u))
             if slots is not None:
                 new_st = qstate.encode(slots, bk, g.hp, new_st,
-                                       qstate.update_key(new_step, bk))
+                                       qstate.update_key(new_step, bk),
+                                       telemetry=tel)
             if bk.key in cold:
                 new_st = O.park(new_st)
             factors[bk.key] = new_st

@@ -43,12 +43,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.obs import EventLog, MetricsRegistry
 from repro.serving import decode as D
 from repro.serving.pages import (
     PageAllocator,
@@ -81,6 +83,12 @@ class Request:
     seed: int = 0
     # enc-dec: stub-frontend frames (T_enc, D); zeros when omitted
     frames: np.ndarray | None = None
+    # lifecycle timestamps (time.perf_counter seconds, set by the engine):
+    # submit -> first generated token -> retirement. TTFT/TPOT histograms
+    # are derived from exactly these, so tests can cross-check.
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
 
 
 class GenerationEngine:
@@ -88,7 +96,8 @@ class GenerationEngine:
                  max_len: int = 512, eos_id: int = -1, *, page: int = 16,
                  npages: int | None = None, kv_quant: str | None = None,
                  use_kernel: bool = False, prefill_budget: int = 4096,
-                 mesh=None):
+                 mesh=None, registry: MetricsRegistry | None = None,
+                 events: EventLog | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"paged serving supports {SUPPORTED_FAMILIES}, not "
@@ -118,6 +127,14 @@ class GenerationEngine:
         self.stats = {"prefill_batches": 0, "prefill_tokens": 0,
                       "prefill_rows": 0, "decode_steps": 0,
                       "max_admit_tokens": 0, "deferred_admissions": 0}
+        # per-engine registry/event-log by default (docs/observability.md):
+        # spans wrap admission/prefill/decode phases, counters+gauges back
+        # the metrics() snapshot; the default log is silent so library use
+        # prints nothing new — launch/serve.py passes a JSONL-backed one
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.events = events if events is not None else \
+            EventLog(tag="serve", echo=False, registry=self.registry)
+        self._update_gauges()
         self._finished: list[Request] = []
         self._jits: dict[tuple, Any] = {}
 
@@ -185,7 +202,10 @@ class GenerationEngine:
                 f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
                 f"exceeds per-slot capacity {self.max_len} "
                 f"(pool {self.allocator.capacity} pages of {self.page})")
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self.registry.inc("serve/submitted")
+        self.registry.set("serve/queue_depth", len(self.queue))
 
     def step(self) -> bool:
         """Admit what fits, then run one decode step. False = fully idle."""
@@ -227,6 +247,7 @@ class GenerationEngine:
             pages = self.allocator.alloc(need)
             if pages is None:
                 self.stats["deferred_admissions"] += 1
+                self.registry.inc("serve/deferred_admissions")
                 break   # FIFO head-of-line: wait for pages to free up
             self.queue.pop(0)
             admits.append((free.pop(0), req, pages))
@@ -260,13 +281,14 @@ class GenerationEngine:
             if frames is not None and req.frames is not None:
                 frames[i] = np.asarray(req.frames, np.float32)
 
-        with self._ctx():
+        with self.events.span("serve/prefill", rows=len(admits),
+                              tokens=tokens), self._ctx():
             tok, _logits, pools, enc = self._prefill_fn(bp, sp)(
                 self.params, jnp.asarray(tok_b), jnp.asarray(valid),
                 jnp.asarray(tbl_b), self.kv.tree(), samp.arrays(),
                 jnp.asarray(frames) if frames is not None else None)
-        self._set_pools(pools)
-        tok_h = np.asarray(jax.device_get(tok))
+            self._set_pools(pools)
+            tok_h = np.asarray(jax.device_get(tok))
         if enc is not None:
             rows = jnp.asarray([slot for slot, _, _ in admits])
             take = jnp.arange(len(admits))
@@ -277,9 +299,17 @@ class GenerationEngine:
         self.stats["prefill_rows"] += len(admits)
         self.stats["max_admit_tokens"] = max(self.stats["max_admit_tokens"],
                                              tokens)
+        self.registry.inc("serve/admitted", len(admits))
+        self.registry.inc("serve/prefill_tokens", tokens)
+        t_first = time.perf_counter()
         for i, (slot, req, pages) in enumerate(admits):
             first = int(tok_h[i])
             req.out.append(first)
+            req.t_first = t_first
+            if req.t_submit is not None:
+                self.registry.observe("serve/ttft_ms",
+                                      (t_first - req.t_submit) * 1e3)
+            self.registry.inc("serve/tokens_out")
             self.counts[slot] = len(req.prompt)
             self.samp.set_slot(slot, temperature=req.temperature,
                                top_k=req.top_k, top_p=req.top_p,
@@ -288,6 +318,7 @@ class GenerationEngine:
             self.slot_pages[slot] = pages
             if first == self.eos_id or len(req.out) >= req.max_new:
                 self._retire(slot)
+        self._update_gauges()
 
     # -- decode -------------------------------------------------------------
 
@@ -299,14 +330,15 @@ class GenerationEngine:
         toks = np.zeros((self.slots,), np.int32)
         for s in active:
             toks[s] = self.slot_req[s].out[-1]
-        with self._ctx():
+        with self.events.span("serve/decode", rows=len(active)), self._ctx():
             tok, pools = self._decode_fn(npb)(
                 self.params, jnp.asarray(toks), jnp.asarray(self.counts),
                 jnp.asarray(self.tbl[:, :npb]), self.kv.tree(),
                 self.samp.arrays(), self.enc)
-        self._set_pools(pools)
-        tok_h = np.asarray(jax.device_get(tok))
+            self._set_pools(pools)
+            tok_h = np.asarray(jax.device_get(tok))
         self.stats["decode_steps"] += 1
+        self.registry.inc("serve/tokens_out", len(active))
         for s in active:
             req = self.slot_req[s]
             t = int(tok_h[s])
@@ -325,4 +357,40 @@ class GenerationEngine:
         self.counts[slot] = 0
         self.samp.set_slot(slot)
         req.done = True
+        req.t_done = time.perf_counter()
+        self.registry.inc("serve/finished")
+        if req.t_first is not None and len(req.out) > 1:
+            # time-per-output-token over the decode phase (tokens after the
+            # prefill-produced first one)
+            tpot_ms = (req.t_done - req.t_first) * 1e3 / (len(req.out) - 1)
+            self.registry.observe("serve/tpot_ms", tpot_ms)
+        self.events.event("serve/retire", rid=req.rid, tokens=len(req.out))
+        self._update_gauges()
         self._finished.append(req)
+
+    # -- metrics ------------------------------------------------------------
+
+    def _update_gauges(self) -> None:
+        self.registry.set("serve/queue_depth", len(self.queue))
+        self.registry.set(
+            "serve/page_pool_used_frac",
+            1.0 - self.allocator.available / self.allocator.capacity)
+        self.registry.set(
+            "serve/active_slots",
+            sum(1 for r in self.slot_req if r is not None))
+
+    def metrics(self) -> dict:
+        """Live metrics snapshot (plain JSON, ``docs/observability.md``):
+        the registry's counters / gauges / histograms (queue depth,
+        page-pool utilization, admissions/deferrals, TTFT/TPOT) plus the
+        legacy ``stats`` dict and a derived ``tokens_per_sec`` over the
+        engine's busy time (prefill + decode span durations)."""
+        self._update_gauges()
+        snap = self.registry.snapshot()
+        busy_ms = sum(
+            h["sum"] for name, h in snap["histograms"].items()
+            if name in ("serve/prefill_ms", "serve/decode_ms"))
+        tokens = snap["counters"].get("serve/tokens_out", 0.0)
+        snap["stats"] = dict(self.stats)
+        snap["tokens_per_sec"] = tokens / (busy_ms / 1e3) if busy_ms else 0.0
+        return snap

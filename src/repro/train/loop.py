@@ -8,10 +8,26 @@ Production behaviours implemented (and simulated/tested on CPU):
   tests; the next TrainLoop picks up from the checkpoint;
 * **straggler/hang mitigation**: per-step wall-time EWMA; steps slower
   than ``straggler_factor``x the EWMA are logged and counted (on real
-  multi-host pods this signal feeds the coordinator's slow-host eviction);
+  multi-host pods this signal feeds the coordinator's slow-host eviction).
+  The first executed step of a process includes jit compilation, so it is
+  excluded from both the EWMA seed and the straggler check — seeding from
+  it would inflate the baseline by the compile time and mask every early
+  straggler;
 * **NaN/divergence guard**: non-finite loss skips the update (params and
   optimizer state are kept from the previous step) and is counted —
   the SMMF paper's loss-spike discussion (Sec. 6) motivates this guard.
+
+Observability (``docs/observability.md``): each loop owns a
+:class:`repro.obs.MetricsRegistry` (pass ``registry=`` to share one) —
+straggler / NaN-skip counts live there as ``train/straggler_steps`` /
+``train/nan_skips`` counters (the legacy ``straggler_steps`` /
+``skipped_nan_steps`` attributes remain as read-through properties), phase
+timings (``train/data``, ``train/step``, ``train/checkpoint``) are
+recorded as spans through an :class:`repro.obs.EventLog`, and any in-jit
+telemetry the step returns under ``metrics["telemetry"]`` (the
+``make_train_step(telemetry=True)`` knob) is folded into the registry as
+gauges after the step's loss fetch. Status lines are structured events
+echoed to stdout in the familiar ``[trainloop] ...`` form.
 
 Host-offload tier (``repro.optim.offload``): the loop is placement-agnostic
 — cold optimizer-state buckets parked on host memory flow through
@@ -39,10 +55,10 @@ from pathlib import Path
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
+from repro.obs import EventLog, MetricsRegistry
 
 PyTree = Any
 
@@ -72,6 +88,8 @@ class TrainLoop:
         cfg: TrainLoopConfig,
         shardings: tuple | None = None,
         place_state: Callable | None = None,  # opt_state -> opt_state, post-restore
+        registry: MetricsRegistry | None = None,
+        events: EventLog | None = None,
     ):
         self.step_fn = step_fn
         self.params = params
@@ -82,9 +100,21 @@ class TrainLoop:
         self.place_state = place_state
         self.start_step = 0
         self.history: list[dict] = []
-        self.straggler_steps = 0
-        self.skipped_nan_steps = 0
+        # per-loop registry by default: resume tests run several loops in
+        # one process, and their counters must not bleed into each other
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.events = events if events is not None else \
+            EventLog(tag="trainloop", registry=self.registry)
         self._maybe_resume()
+
+    # legacy counter surface (checkpoint extras, tests, launcher summary)
+    @property
+    def straggler_steps(self) -> int:
+        return int(self.registry.counter("train/straggler_steps"))
+
+    @property
+    def skipped_nan_steps(self) -> int:
+        return int(self.registry.counter("train/nan_skips"))
 
     # -- fault tolerance ----------------------------------------------------
     def _maybe_resume(self):
@@ -103,7 +133,8 @@ class TrainLoop:
             # materialized everything on default device memory
             self.opt_state = self.place_state(self.opt_state)
         self.start_step = manifest["step"]
-        print(f"[trainloop] resumed from step {self.start_step}", flush=True)
+        self.events.event("resume", f"resumed from step {self.start_step}",
+                          step=self.start_step)
 
     def _checkpoint(self, step: int):
         save(self.cfg.ckpt_dir, step, {"params": self.params, "opt": self.opt_state},
@@ -118,39 +149,74 @@ class TrainLoop:
 
             shutil.rmtree(Path(self.cfg.ckpt_dir) / f"step_{s:010d}", ignore_errors=True)
 
+    def _absorb_telemetry(self, metrics) -> None:
+        """Fold the step's in-jit telemetry scalars (already on host — the
+        loss fetch synced the step) into the registry as gauges."""
+        tel = metrics.get("telemetry") if isinstance(metrics, dict) else None
+        if not tel:
+            return
+        host = jax.device_get(tel)
+        for name, v in host.items():
+            self.registry.set(f"tel/{name}", float(v))
+        # the trip indicator also accumulates across the run, on top of the
+        # last-value gauge (a spike is visible either way)
+        if "train/nan_guard_trip" in host:
+            self.registry.inc("train/nan_guard_trips",
+                              float(host["train/nan_guard_trip"]))
+
     # -- main ---------------------------------------------------------------
     def run(self) -> dict:
         ewma = None
+        first_timed = True
         step = self.start_step
         while step < self.cfg.total_steps:
             if self.cfg.crash_at_step is not None and step == self.cfg.crash_at_step:
                 raise RuntimeError(f"injected crash at step {step}")
-            batch = self.stream.batch(step)
+            with self.events.span("train/data", step=step):
+                batch = self.stream.batch(step)
             t0 = time.time()
-            new_params, new_opt, metrics = self.step_fn(self.params, self.opt_state, batch)
-            loss = float(jax.device_get(metrics["loss"]))
+            with self.events.span("train/step", step=step) as sp:
+                new_params, new_opt, metrics = self.step_fn(self.params, self.opt_state, batch)
+                loss = float(jax.device_get(metrics["loss"]))
+                sp["loss"] = loss
             dt = time.time() - t0
 
             # donation contract: the pre-call buffers may have been donated,
             # so ALWAYS adopt the returned state — the step's in-jit NaN
             # guard already selected old-vs-new (see module docstring)
             self.params, self.opt_state = new_params, new_opt
+            self._absorb_telemetry(metrics)
             if not np.isfinite(loss):
                 # divergence guard tripped in-step (Sec. 6 loss spikes)
-                self.skipped_nan_steps += 1
-                print(f"[trainloop] step {step}: non-finite loss, update skipped", flush=True)
+                self.registry.inc("train/nan_skips")
+                self.events.event(
+                    "nan_skip", f"step {step}: non-finite loss, update skipped",
+                    step=step)
 
-            if ewma is not None and dt > self.cfg.straggler_factor * ewma:
-                self.straggler_steps += 1
-                print(f"[trainloop] step {step}: straggler ({dt:.2f}s vs ewma {ewma:.2f}s)", flush=True)
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if first_timed:
+                # first executed step carries the jit compile: seeding the
+                # EWMA from it would mask every early straggler
+                first_timed = False
+            else:
+                if ewma is not None and dt > self.cfg.straggler_factor * ewma:
+                    self.registry.inc("train/straggler_steps")
+                    self.events.event(
+                        "straggler",
+                        f"step {step}: straggler ({dt:.2f}s vs ewma {ewma:.2f}s)",
+                        step=step, sec=dt, ewma=ewma)
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            self.registry.observe("train/step_sec", dt)
+            self.registry.set("train/loss", loss)
 
             step += 1
             if step % self.cfg.log_every == 0:
                 self.history.append({"step": step, "loss": loss, "sec": dt})
-                print(f"[trainloop] step {step} loss {loss:.4f} ({dt:.2f}s)", flush=True)
+                self.events.event(
+                    "log", f"step {step} loss {loss:.4f} ({dt:.2f}s)",
+                    step=step, loss=loss, sec=dt)
             if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
-                self._checkpoint(step)
+                with self.events.span("train/checkpoint", step=step):
+                    self._checkpoint(step)
         return {
             "final_step": step,
             "history": self.history,

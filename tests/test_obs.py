@@ -1,0 +1,224 @@
+"""Host-side observability units: registry, event log, exporters.
+
+* :class:`repro.obs.registry.Histogram`: bucket assignment (upper-
+  inclusive edges, overflow bucket), exact count/sum/min/max sidecars,
+  monotone quantiles, validation of degenerate boundaries;
+* :class:`repro.obs.registry.MetricsRegistry`: counter monotonicity (a
+  negative increment raises), gauge last-write-wins, snapshot shape and
+  key order, merge semantics (counters add, histograms fold bucket-for-
+  bucket, boundary mismatch raises), thread safety under concurrent
+  writers;
+* :class:`repro.obs.trace.EventLog`: ring + JSONL parity, span records
+  carry ``dur_ms`` and feed ``<name>_ms`` histograms, annotation dict
+  folds into the record, the Null log stays silent and registry-free;
+* :mod:`repro.obs.export`: span -> Chrome ``"X"`` slice / event -> ``"i"``
+  instant mapping with microsecond timestamps, JSONL round-trip.
+"""
+
+import json
+import math
+import threading
+
+import pytest
+
+from repro.obs import (
+    DEFAULT_BUCKETS,
+    EventLog,
+    Histogram,
+    MetricsRegistry,
+    NullEventLog,
+    chrome_trace,
+    read_jsonl,
+    write_chrome_trace,
+    write_metrics,
+)
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_bucket_assignment():
+    h = Histogram((1.0, 10.0, 100.0))
+    for v in (0.5, 1.0):          # <= 1.0 -> bucket 0
+        h.observe(v)
+    h.observe(10.0)               # upper-inclusive -> bucket 1
+    h.observe(50.0)               # bucket 2
+    h.observe(1e6)                # overflow bucket
+    assert h.counts == [2, 1, 1, 1]
+    assert h.count == 5
+    assert h.sum == pytest.approx(0.5 + 1.0 + 10.0 + 50.0 + 1e6)
+    assert h.min == 0.5 and h.max == 1e6
+
+
+def test_histogram_quantiles_monotone_and_exact_sidecars():
+    h = Histogram((1.0, 2.0, 4.0, 8.0))
+    samples = [0.3, 0.9, 1.5, 3.0, 3.5, 7.0, 20.0]
+    for s in samples:
+        h.observe(s)
+    assert h.min == min(samples)
+    assert h.max == max(samples)
+    assert h.mean() == pytest.approx(sum(samples) / len(samples))
+    assert h.min <= h.mean() <= h.max
+    qs = [h.quantile(q) for q in (0.0, 0.25, 0.5, 0.75, 0.99, 1.0)]
+    assert qs == sorted(qs)               # non-decreasing in q
+    assert h.quantile(1.0) == h.max       # overflow resolves to exact max
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_empty_and_bad_boundaries():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5)) and math.isnan(h.mean())
+    assert h.to_dict()["min"] is None
+    assert h.boundaries == DEFAULT_BUCKETS
+    with pytest.raises(ValueError):
+        Histogram((1.0, 1.0, 2.0))        # duplicate edge
+    with pytest.raises(ValueError):
+        Histogram((2.0, 1.0))             # not increasing
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counters_gauges():
+    r = MetricsRegistry()
+    assert r.inc("a/b") == 1.0
+    assert r.inc("a/b", 2.5) == 3.5
+    assert r.counter("a/b") == 3.5
+    assert r.counter("never") == 0.0
+    with pytest.raises(ValueError):
+        r.inc("a/b", -1.0)                # counters are monotone
+    r.set("g", 1.0)
+    r.set("g", -2.0)                      # last write wins
+    assert r.gauge("g") == -2.0
+    assert r.gauge("never") is None
+
+
+def test_registry_snapshot_shape_and_order():
+    r = MetricsRegistry()
+    r.inc("z")
+    r.inc("a")
+    r.set("gauge/x", 7.0)
+    r.observe("lat_ms", 3.0)
+    snap = r.snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    assert list(snap["counters"]) == ["a", "z"]        # sorted
+    assert snap["histograms"]["lat_ms"]["count"] == 1
+    json.dumps(snap)                                   # plain JSON
+
+
+def test_registry_merge():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("c", 2)
+    b.inc("c", 3)
+    b.set("g", 9.0)
+    for v in (1.0, 50.0):
+        a.observe("h", v, buckets=(10.0, 100.0))
+        b.observe("h", v * 2, buckets=(10.0, 100.0))
+    a.merge(b)
+    assert a.counter("c") == 5.0
+    assert a.gauge("g") == 9.0
+    h = a.histogram("h")
+    assert h.count == 4
+    assert h.min == 1.0 and h.max == 100.0
+    bad = MetricsRegistry()
+    bad.observe("h", 1.0, buckets=(5.0,))
+    with pytest.raises(ValueError):
+        a.merge(bad)                      # boundary mismatch
+
+
+def test_registry_threaded_counters():
+    r = MetricsRegistry()
+
+    def work():
+        for _ in range(1000):
+            r.inc("n")
+            r.observe("h", 1.0)
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert r.counter("n") == 4000.0
+    assert r.histogram("h").count == 4000
+
+
+# ---------------------------------------------------------------------------
+# EventLog
+# ---------------------------------------------------------------------------
+
+
+def test_eventlog_ring_file_parity(tmp_path, capsys):
+    p = tmp_path / "events.jsonl"
+    log = EventLog(tag="t", path=p, registry=MetricsRegistry())
+    log.event("hello", "hi there", n=3)
+    with log.span("phase", rows=2) as s:
+        s["tokens"] = 7
+    log.close()
+    out = capsys.readouterr().out
+    assert "[t] hi there" in out          # stdout echo preserved
+    ring = log.records()
+    disk = read_jsonl(p)
+    assert len(ring) == len(disk) == 2
+    assert disk[0]["name"] == "hello" and disk[0]["n"] == 3
+    span = disk[1]
+    assert span["kind"] == "span" and span["dur_ms"] >= 0.0
+    assert span["rows"] == 2 and span["tokens"] == 7   # annotation folded
+
+
+def test_eventlog_span_feeds_histogram():
+    r = MetricsRegistry()
+    log = EventLog(tag="t", registry=r)
+    with log.span("train/step"):
+        pass
+    h = r.histogram("train/step_ms")
+    assert h is not None and h.count == 1
+    assert r.counter("obs/events") == 1.0
+
+
+def test_null_eventlog_silent(capsys):
+    log = NullEventLog()
+    log.event("x", "should not print")
+    with log.span("y"):
+        pass
+    assert capsys.readouterr().out == ""
+    assert len(log.records()) == 2        # ring kept for debuggability
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_mapping():
+    records = [
+        {"t": 2.0, "kind": "span", "name": "s", "dur_ms": 5.0, "loss": 1.5},
+        {"t": 3.0, "kind": "event", "name": "e", "track": 4, "rid": 9},
+    ]
+    doc = chrome_trace(records)
+    assert doc["displayTimeUnit"] == "ms"
+    sl, ev = doc["traceEvents"]
+    assert sl["ph"] == "X" and sl["ts"] == 2.0e6 and sl["dur"] == 5.0e3
+    assert sl["args"] == {"loss": 1.5}    # meta keys stripped from args
+    assert ev["ph"] == "i" and ev["tid"] == 4 and ev["args"] == {"rid": 9}
+
+
+def test_exporter_files_roundtrip(tmp_path):
+    r = MetricsRegistry()
+    log = EventLog(tag="t", path=tmp_path / "ev.jsonl", echo=False,
+                   registry=r)
+    with log.span("p"):
+        pass
+    log.event("done")
+    log.close()
+    tp = write_chrome_trace(log.records(), tmp_path / "trace.json")
+    mp = write_metrics(r.snapshot(), tmp_path / "metrics.json")
+    trace = json.loads((tmp_path / "trace.json").read_text())
+    assert len(trace["traceEvents"]) == 2
+    snap = json.loads((tmp_path / "metrics.json").read_text())
+    assert "p_ms" in snap["histograms"]
+    assert tp.endswith("trace.json") and mp.endswith("metrics.json")

@@ -1,0 +1,172 @@
+"""In-jit telemetry: bitwise neutrality, counter coverage, divergence flag.
+
+* **bitwise identity** (the acceptance criterion): ``telemetry=True``
+  must not change a single bit of the train step's params/opt-state/loss
+  outputs — checked for factored f32, quantized int8 + rank-1 transport,
+  and the overlapped (``schedule="grad"``) step on the transformer_base
+  smoke;
+* ``telemetry`` is an execution-only knob: flipping it leaves the
+  ``spec_hash`` (checkpoint key) unchanged;
+* **coverage**: the maximally instrumented spec emits every counter
+  family — per-bucket update RMS, per-slot clip saturation and requant
+  error, per-bucket transport round-trip error, the rank-1 flush
+  indicator, and the NaN-guard trip;
+* the NaN-guard trip rides out as 1.0 exactly when the in-jit guard
+  rejects a non-finite loss (params held bitwise);
+* **divergence signature regression** (the PR 5 failure mode): int8
+  companding stripped from the second-moment denominators (monkeypatched
+  ``repro.optim.qstate._companded``) blows up the transformer_base smoke
+  within a few steps — and the ``qstate/requant_err`` telemetry flags it
+  at step 0, strictly before the loss moves, while the companded
+  baseline's counters stay at their noise floor.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.optim.qstate as qstate
+from repro.configs import smoke_config
+from repro.data import SyntheticLMStream
+from repro.launch.steps import make_train_step
+from repro.models import init_encdec, init_lm
+from repro.optim import OptimizerSpec, build_optimizer
+
+
+def _setup(hp=None, batch=2, seq=16):
+    cfg = smoke_config("transformer_base")
+    spec = OptimizerSpec(
+        family="smmf",
+        hyperparams={"lr": 1e-3, "decay_rate": -0.8, **(hp or {})})
+    init = init_encdec if cfg.family == "encdec" else init_lm
+    params = init(jax.random.PRNGKey(0), cfg)
+    opt = build_optimizer(spec, params)
+    stream = SyntheticLMStream(cfg, batch, seq, seed=0)
+    return cfg, opt, params, opt.init(params), stream
+
+
+# ---------------------------------------------------------------------------
+# bitwise neutrality + hash neutrality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hp,kw", [
+    ({}, {}),                                            # factored f32
+    ({"quant": "int8", "transport": "rank1"}, {}),       # full numerics stack
+    ({"quant": "int8"}, {"overlap": True}),              # scheduled step
+], ids=["f32", "int8+rank1", "int8+overlap"])
+def test_telemetry_bitwise_identity(hp, kw):
+    """telemetry=True adds outputs but changes none: params, opt state and
+    the base metrics are bit-identical to the telemetry-off step."""
+    cfg, opt, params, state, stream = _setup(hp)
+    batch = stream.batch(0)
+    off = jax.jit(make_train_step(cfg, opt, telemetry=False, **kw))(
+        params, state, batch)
+    on = jax.jit(make_train_step(cfg, opt, telemetry=True, **kw))(
+        params, state, batch)
+    assert "telemetry" not in off[2]
+    tel = on[2].pop("telemetry")
+    assert len(tel) > 0
+    for a, b in zip(jax.tree.leaves(off), jax.tree.leaves(on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_telemetry_knob_is_spec_hash_neutral():
+    base = OptimizerSpec(family="smmf",
+                         hyperparams={"lr": 1e-3, "decay_rate": -0.8})
+    for flag in (True, False):
+        spec = OptimizerSpec(
+            family="smmf",
+            hyperparams={"lr": 1e-3, "decay_rate": -0.8, "telemetry": flag})
+        assert spec.spec_hash() == base.spec_hash()
+
+
+# ---------------------------------------------------------------------------
+# counter coverage
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_counter_families_present():
+    cfg, opt, params, state, stream = _setup(
+        {"quant": "int8", "transport": "rank1"})
+    step = jax.jit(make_train_step(cfg, opt, telemetry=True))
+    _, _, metrics = step(params, state, stream.batch(0))
+    tel = jax.device_get(metrics["telemetry"])
+    prefixes = ("optim/update_rms/", "qstate/clip_sat/",
+                "qstate/requant_err/", "transport/rt_err/")
+    for p in prefixes:
+        assert any(k.startswith(p) for k in tel), f"no {p} counter emitted"
+    assert "transport/flush" in tel
+    assert tel["train/nan_guard_trip"] == 0.0
+    assert all(np.isfinite(v) for v in tel.values())
+
+
+def test_nan_guard_trip_counter():
+    """A non-finite loss trips the in-jit guard: params/state held bitwise
+    and the telemetry trip indicator reads exactly 1.0."""
+    cfg, opt, params, state, stream = _setup({"quant": "int8"})
+    leaves, treedef = jax.tree.flatten(params)
+    leaves[0] = jnp.full_like(leaves[0], jnp.nan)   # poison the first leaf
+    bad_params = jax.tree.unflatten(treedef, leaves)
+    step = jax.jit(make_train_step(cfg, opt, telemetry=True))
+    state = opt.init(bad_params)
+    p2, s2, metrics = step(bad_params, state, stream.batch(0))
+    tel = jax.device_get(metrics["telemetry"])
+    assert not np.isfinite(jax.device_get(metrics["loss"]))
+    assert tel["train/nan_guard_trip"] == 1.0
+    for a, b in zip(jax.tree.leaves(bad_params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# divergence signature (PR 5 regression)
+# ---------------------------------------------------------------------------
+
+
+def _run_traj(companded: bool, n: int = 8):
+    """(loss, max requant_err) per step, optionally with int8 companding
+    stripped from the quantized denominator slots (the PR 5 bug)."""
+    orig = qstate._companded
+    if not companded:
+        qstate._companded = lambda slot, mode: False
+    try:
+        cfg, opt, params, state, stream = _setup({"quant": "int8"},
+                                                 batch=2, seq=16)
+        step = jax.jit(make_train_step(cfg, opt, telemetry=True))
+        traj = []
+        for i in range(n):
+            params, state, m = step(params, state, stream.batch(i))
+            tel = jax.device_get(m["telemetry"])
+            rq = max(v for k, v in tel.items()
+                     if k.startswith("qstate/requant_err/"))
+            traj.append((float(jax.device_get(m["loss"])), float(rq)))
+        return traj
+    finally:
+        qstate._companded = orig
+
+
+def test_linear_int8_divergence_flagged_by_requant_counter():
+    good = _run_traj(companded=True)
+    bad = _run_traj(companded=False)
+
+    # the companded baseline is healthy: finite, no blow-up
+    assert all(np.isfinite(l) for l, _ in good)
+    assert max(l for l, _ in good) < 2 * good[0][0]
+
+    # linear int8 on the denominators diverges within the window ...
+    l0 = bad[0][0]
+    diverged = [i for i, (l, _) in enumerate(bad)
+                if not np.isfinite(l) or l > 10 * l0]
+    assert diverged, "linear-int8 run did not diverge — signature gone"
+    first_bad_loss = diverged[0]
+    assert first_bad_loss >= 1, "loss diverged at step 0 — counter can't lead"
+
+    # ... and the requant-error counter flags it at step 0, strictly
+    # before the loss moves: same step-0 loss, elevated reconstruction
+    # error on the linearly-quantized denominator slots
+    assert bad[0][0] == pytest.approx(good[0][0], rel=1e-3)
+    assert bad[0][1] > 1.3 * good[0][1], (
+        f"step-0 requant_err {bad[0][1]:.4f} not elevated over companded "
+        f"baseline {good[0][1]:.4f} — the telemetry no longer leads the "
+        f"divergence")

@@ -5,7 +5,8 @@
 
 The repo root carries the committed perf-trajectory snapshots
 (``BENCH_step_time.json``, ``BENCH_opt_memory.json``,
-``BENCH_transport.json``, ``BENCH_serve.json``); ``benchmarks/run.py``
+``BENCH_transport.json``, ``BENCH_serve.json``,
+``BENCH_telemetry.json``); ``benchmarks/run.py``
 writes fresh ones under ``results/bench/``. This tool fails (exit 1, one
 line per violation) when the candidate regresses:
 
@@ -27,7 +28,11 @@ line per violation) when the candidate regresses:
   transport record (``BENCH_transport.json``): rank1/int8 boundary bytes
   within :data:`TRANSPORT_RANK1_MAX` / :data:`TRANSPORT_INT8_MAX` of
   dense f32 and compressed-vs-dense convergence parity within
-  :data:`TRANSPORT_PARITY_TOL` (seeded smoke, machine-independent);
+  :data:`TRANSPORT_PARITY_TOL` (seeded smoke, machine-independent), and
+  the telemetry record (``BENCH_telemetry.json``): the ``--telemetry``
+  in-jit collector must hold the full train step within
+  :data:`TELEMETRY_OVERHEAD_MAX` of the telemetry-off step (off/on
+  measured interleaved in one process, so no baseline is needed);
 * **serving trajectory** vs baseline: legacy-normalized tokens/s and p99
   per-token latency ratios within :data:`TIME_TOL`.
 
@@ -69,6 +74,11 @@ TRANSPORT_PARITY_TOL = 0.005
 # scales): int8 per-device bytes as a fraction of the family's f32 row —
 # mirrors MOMENTUM_QUANT_ACCEPT_FRACTION in benchmarks/memory_table.py
 MOMENTUM_QUANT_MAX = 0.30
+# --telemetry in-jit counters: full-train-step time with the collector on
+# vs off (BENCH_telemetry.json, same process, interleaved rounds) — the
+# observability subsystem's acceptance budget, a hard invariant on the
+# candidate alone
+TELEMETRY_OVERHEAD_MAX = 1.10
 
 
 def _load(d: Path, name: str) -> dict | None:
@@ -196,6 +206,22 @@ def _check_zoo_invariants(cand: dict, fails: list[str]) -> None:
                         f"(max {MOMENTUM_QUANT_MAX:.0%})")
 
 
+def _check_telemetry_invariants(cand: dict, fails: list[str]) -> None:
+    """Hard budget on the candidate alone: the in-jit telemetry collector
+    must hold the full train step within TELEMETRY_OVERHEAD_MAX of the
+    telemetry-off step. Off/on run interleaved in one process, so the
+    ratio is machine-independent; the record must also actually carry
+    counters (events_per_step > 0), else the 'overhead' measured nothing."""
+    ratio = cand.get("overhead_ratio")
+    if ratio is not None and ratio > TELEMETRY_OVERHEAD_MAX:
+        fails.append(
+            f"telemetry overhead {ratio:.3f}x exceeds the "
+            f"{TELEMETRY_OVERHEAD_MAX}x full-step budget")
+    if not cand.get("events_per_step"):
+        fails.append("telemetry record has events_per_step == 0 — the "
+                     "instrumented spec emitted no in-jit counters")
+
+
 def _check_serve_invariants(cand: dict, fails: list[str]) -> None:
     """Hard floor on the candidate alone: paged engine tokens/s must be at
     least SERVE_SPEEDUP_MIN x the legacy slot-batcher on the same trace.
@@ -291,7 +317,8 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
     fails: list[str] = []
     checked = 0
     for name in ("BENCH_step_time.json", "BENCH_opt_memory.json",
-                 "BENCH_transport.json", "BENCH_serve.json"):
+                 "BENCH_transport.json", "BENCH_serve.json",
+                 "BENCH_telemetry.json"):
         base, cand = _load(baseline_dir, name), _load(candidate_dir, name)
         if cand is None:
             fails.append(f"candidate {candidate_dir / name} missing — did "
@@ -304,6 +331,11 @@ def compare(baseline_dir: Path, candidate_dir: Path) -> list[str]:
             _check_zoo_invariants(cand, fails)
         elif name == "BENCH_transport.json":
             _check_transport_invariants(cand, fails)
+        elif name == "BENCH_telemetry.json":
+            # ratio-only record: the budget is absolute, so a baseline adds
+            # nothing — invariant check regardless of one being present
+            _check_telemetry_invariants(cand, fails)
+            continue
         else:
             _check_serve_invariants(cand, fails)
         if base is None:

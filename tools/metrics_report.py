@@ -1,0 +1,157 @@
+"""Run summarizer for --metrics-dir telemetry dumps.
+
+    PYTHONPATH=src python tools/metrics_report.py /tmp/run_metrics_dir
+    PYTHONPATH=src python tools/metrics_report.py dir1 dir2 --json out.json
+
+Reads the artifacts a ``launch/train.py --metrics-dir`` or
+``launch/serve.py --metrics-dir`` run wrote (``events.jsonl``,
+``metrics.json``, ``trace.json``) and prints one human-readable summary
+per directory: event counts by name, span-phase wall-time totals,
+counters, notable gauges (loss, queue depth, pool utilization, the
+largest in-jit ``tel/`` numerics values), and latency histogram quantiles
+(TTFT/TPOT, step time). CI runs this over the telemetry-smoke artifacts
+so a malformed dump fails the build (exit 1): every directory must hold a
+parseable ``events.jsonl`` + ``metrics.json``, and the trace (when
+present) must be loadable Chrome ``trace_event`` JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.registry import Histogram  # noqa: E402
+
+
+def _load_hist(d: dict) -> Histogram:
+    h = Histogram(tuple(d["boundaries"]))
+    h.counts = list(d["counts"])
+    h.count = d["count"]
+    h.sum = d["sum"]
+    if d["count"]:
+        h.min, h.max = d["min"], d["max"]
+    return h
+
+
+def summarize_dir(path: Path) -> dict:
+    """Parse one metrics dir; raises on malformed/missing artifacts."""
+    events_p = path / "events.jsonl"
+    metrics_p = path / "metrics.json"
+    if not events_p.exists():
+        raise FileNotFoundError(f"{events_p}: no event log")
+    if not metrics_p.exists():
+        raise FileNotFoundError(f"{metrics_p}: no metrics snapshot")
+
+    records = []
+    for i, line in enumerate(events_p.read_text().splitlines()):
+        if not line.strip():
+            continue
+        rec = json.loads(line)
+        if "kind" not in rec or "name" not in rec or "t" not in rec:
+            raise ValueError(f"{events_p}:{i + 1}: record missing kind/name/t")
+        records.append(rec)
+    snap = json.loads(metrics_p.read_text())
+    for section in ("counters", "gauges", "histograms"):
+        if section not in snap:
+            raise ValueError(f"{metrics_p}: snapshot missing {section!r}")
+
+    trace_p = path / "trace.json"
+    trace_events = None
+    if trace_p.exists():
+        doc = json.loads(trace_p.read_text())
+        if "traceEvents" not in doc:
+            raise ValueError(f"{trace_p}: not a Chrome trace_event document")
+        trace_events = len(doc["traceEvents"])
+
+    events = Counter(r["name"] for r in records if r["kind"] == "event")
+    span_ms: dict[str, float] = {}
+    span_n: Counter = Counter()
+    for r in records:
+        if r["kind"] == "span":
+            span_ms[r["name"]] = span_ms.get(r["name"], 0.0) + r["dur_ms"]
+            span_n[r["name"]] += 1
+
+    out = {
+        "dir": str(path),
+        "records": len(records),
+        "trace_events": trace_events,
+        "events": dict(events),
+        "spans": {k: {"count": span_n[k], "total_ms": round(v, 3)}
+                  for k, v in sorted(span_ms.items())},
+        "counters": snap["counters"],
+        "histograms": {},
+    }
+    for name, hd in sorted(snap["histograms"].items()):
+        h = _load_hist(hd)
+        out["histograms"][name] = {
+            "count": h.count,
+            "mean": None if not h.count else round(h.mean(), 4),
+            "p50": None if not h.count else round(h.quantile(0.5), 4),
+            "p99": None if not h.count else round(h.quantile(0.99), 4),
+            "max": None if not h.count else round(h.max, 4),
+        }
+    # notable gauges: loss/queue/pool always; in-jit numerics (tel/*) by
+    # largest magnitude — the counters most likely to flag drift
+    gauges = snap["gauges"]
+    keep = {k: v for k, v in gauges.items() if not k.startswith("tel/")}
+    tel = sorted(((k, v) for k, v in gauges.items() if k.startswith("tel/")),
+                 key=lambda kv: -abs(kv[1]))
+    out["gauges"] = dict(sorted(keep.items()))
+    out["top_telemetry"] = dict(tel[:10])
+    out["telemetry_gauges"] = len(tel)
+    return out
+
+
+def print_summary(s: dict) -> None:
+    print(f"== {s['dir']} ==")
+    print(f"  records: {s['records']} "
+          f"(trace: {s['trace_events'] if s['trace_events'] is not None else 'n/a'})")
+    if s["events"]:
+        print("  events: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(s["events"].items())))
+    for name, sp in s["spans"].items():
+        print(f"  span {name}: {sp['count']}x, {sp['total_ms']:.1f} ms total")
+    for name, v in sorted(s["counters"].items()):
+        print(f"  counter {name} = {v:g}")
+    for name, v in s["gauges"].items():
+        print(f"  gauge {name} = {v:g}")
+    for name, h in s["histograms"].items():
+        if h["count"]:
+            print(f"  hist {name}: n={h['count']} mean={h['mean']} "
+                  f"p50={h['p50']} p99={h['p99']} max={h['max']}")
+    if s["telemetry_gauges"]:
+        print(f"  in-jit telemetry: {s['telemetry_gauges']} gauges; largest:")
+        for k, v in s["top_telemetry"].items():
+            print(f"    {k} = {v:g}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dirs", nargs="+", help="--metrics-dir paths to summarize")
+    ap.add_argument("--json", default=None,
+                    help="also write the summaries as JSON to this path")
+    args = ap.parse_args(argv)
+
+    summaries = []
+    status = 0
+    for d in args.dirs:
+        try:
+            s = summarize_dir(Path(d))
+        except (OSError, ValueError, KeyError) as e:
+            print(f"FAIL {d}: {e}", file=sys.stderr)
+            status = 1
+            continue
+        summaries.append(s)
+        print_summary(s)
+    if args.json:
+        Path(args.json).write_text(json.dumps(summaries, indent=2) + "\n")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

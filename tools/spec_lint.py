@@ -12,6 +12,10 @@ over PAPER_IDS + ARCH_IDS), every spec declared by the dry-run launcher per
 * ``build_optimizer(spec)`` constructs (hyperparams validate against the
   family registry).
 
+Plus one knob check: a spec declaring the execution-only ``telemetry``
+hyperparam round-trips and its ``spec_hash`` is neutral to the flag's
+value (flipping observability must never re-key checkpoints).
+
 Run from the repo root (CI docs job does):
 
     PYTHONPATH=src python tools/spec_lint.py
@@ -88,6 +92,24 @@ def main() -> int:
             spec = cell_optimizer_spec(get_config(arch), "smmf", quant=quant)
             violations += _check(f"dryrun:{arch}:smmf.{quant}", spec)
             n += 1
+    # execution-only knobs (telemetry, use_kernel, transport, ...) must
+    # survive the JSON round-trip as declared hyperparams while staying
+    # spec_hash-neutral: flipping one must not re-key checkpoints
+    from repro.optim.spec import OptimizerSpec
+
+    tel_off = OptimizerSpec(family="smmf",
+                            hyperparams={"lr": 1e-3, "decay_rate": -0.8,
+                                         "telemetry": False})
+    tel_on = OptimizerSpec(family="smmf",
+                           hyperparams={"lr": 1e-3, "decay_rate": -0.8,
+                                        "telemetry": True})
+    violations += _check("knob:smmf.telemetry=False", tel_off)
+    violations += _check("knob:smmf.telemetry=True", tel_on)
+    n += 2
+    if tel_on.spec_hash() != tel_off.spec_hash():
+        violations.append(
+            "knob:smmf.telemetry: spec_hash not neutral — flipping the "
+            "execution-only telemetry knob re-keys checkpoints")
     for label, spec in _example_specs():
         violations += _check(label, spec)
         n += 1
